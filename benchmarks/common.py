@@ -1,0 +1,43 @@
+"""Shared benchmark infrastructure: cached dataset + one-call emulation."""
+from __future__ import annotations
+
+import functools
+import time
+
+from repro.configs.dlrm import DLRM_KAGGLE, DLRM_TERABYTE, scaled
+from repro.core import CPRManager, Emulator, FailureInjector, SystemParams
+from repro.data.synthetic import ClickLogDataset
+
+MAX_ROWS = 20_000
+NUM_SAMPLES = 40_000
+BATCH = 512
+
+
+@functools.lru_cache(maxsize=4)
+def get_dataset(name: str = "kaggle", seed: int = 3):
+    cfg = scaled(DLRM_KAGGLE if name == "kaggle" else DLRM_TERABYTE,
+                 max_rows=MAX_ROWS)
+    ds = ClickLogDataset(cfg.table_sizes, num_samples=NUM_SAMPLES, seed=seed)
+    return cfg, ds
+
+
+def run_emulation(mode: str, dataset="kaggle", target_pls=0.1, n_failures=2,
+                  fraction=0.25, seed=3, fail_seed=11,
+                  sys_params: SystemParams | None = None,
+                  t_save_override: float | None = None, eval_frac=0.1):
+    cfg, ds = get_dataset(dataset, seed)
+    p = sys_params or SystemParams()
+    mgr = CPRManager(mode, p, cfg.table_sizes, target_pls=target_pls)
+    if t_save_override is not None:
+        mgr.T_save = t_save_override
+    inj = FailureInjector(n_failures=n_failures, fail_fraction=fraction,
+                          n_shards=p.N_emb, T_total=p.T_total, seed=fail_seed)
+    t0 = time.time()
+    res = Emulator(cfg, ds, mgr, inj, batch_size=BATCH,
+                   eval_frac=eval_frac).run()
+    res.report["wall_s"] = time.time() - t0
+    return res
+
+
+def csv_row(name, us_per_call, derived):
+    return f"{name},{us_per_call},{derived}"

@@ -1,0 +1,24 @@
+"""Paper Fig. 3: gamma-distributed time-to-failure — fit quality (RMSE of
+the survival curve; paper reports 4.4 %) and near-uniform hazard."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import GammaFailureModel
+
+
+def run(n_jobs=5000, seed=7):
+    true = GammaFailureModel(shape=0.85, scale=25.0)
+    rng = np.random.default_rng(seed)
+    ttf = true.sample(rng, size=n_jobs)
+    fit = GammaFailureModel.fit(ttf)
+    rmse = fit.fit_rmse(ttf)
+    hz = fit.hazard(np.linspace(2.0, 60.0, 30))
+    return [{
+        "figure": "fig3", "n_jobs": n_jobs,
+        "true_shape": true.shape, "true_scale": true.scale,
+        "fit_shape": round(fit.shape, 3), "fit_scale": round(fit.scale, 2),
+        "fit_mtbf_h": round(fit.mtbf, 2),
+        "survival_rmse": round(rmse, 4),
+        "hazard_cv_after_infancy": round(float(np.std(hz) / np.mean(hz)), 3),
+    }]

@@ -1,0 +1,56 @@
+"""Paper Table 1: time and memory overhead of SCAR / CPR-MFU / CPR-SSU.
+
+Times the per-step tracker update and the at-save selection (us per call on
+this host — relative ordering is the claim), and reports the analytic memory
+overhead relative to the embedding table.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import trackers as trk
+
+
+def _time(fn, *args, iters=20):
+    fn(*args)  # compile
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def run(N=200_000, d=16, batch=512, hot=1, r=0.125):
+    rn = int(r * N)
+    idx = jax.random.randint(jax.random.PRNGKey(0), (batch, hot), 0, N)
+    table = jax.random.normal(jax.random.PRNGKey(1), (N, d))
+    table2 = table + 0.01 * jax.random.normal(jax.random.PRNGKey(2), (N, d))
+
+    mfu_c = trk.mfu_init(N)
+    ssu_s = trk.ssu_init(rn)
+    scar_s = trk.scar_init(table)
+
+    rows = []
+    upd_mfu = _time(jax.jit(trk.mfu_update), mfu_c, idx)
+    sel_mfu = _time(jax.jit(lambda c: trk.mfu_select(c, rn)), mfu_c)
+    upd_ssu = _time(jax.jit(lambda s, i: trk.ssu_update(s, i, 2)), ssu_s, idx)
+    sel_ssu = _time(jax.jit(trk.ssu_select), ssu_s)
+    sel_scar = _time(jax.jit(lambda s, t: trk.scar_select(s, t, rn)),
+                     scar_s, table2)
+    emb_bytes = d * 4
+    for mode, upd, sel in (("mfu", upd_mfu, sel_mfu),
+                           ("ssu", upd_ssu, sel_ssu),
+                           ("scar", 0.0, sel_scar)):
+        rows.append({
+            "figure": "table1", "mode": mode, "rows": N,
+            "update_us": round(upd, 1), "select_us": round(sel, 1),
+            "mem_bytes": trk.tracker_memory_bytes(mode, N, emb_bytes, r),
+            "mem_pct_of_table": round(
+                100 * trk.tracker_memory_bytes(mode, N, emb_bytes, r)
+                / (N * emb_bytes), 3),
+        })
+    return rows

@@ -1,0 +1,29 @@
+"""Quickstart: train DLRM with CPR partial recovery under injected failures.
+
+Runs the paper's core experiment end-to-end in ~1 minute on CPU:
+full recovery vs CPR-MFU on a synthetic Criteo-like click log, with two
+failures each clearing 25 % of the embedding-PS shards.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+from repro.configs.dlrm import DLRM_KAGGLE, scaled
+from repro.core import CPRManager, Emulator, FailureInjector, SystemParams
+from repro.data.synthetic import ClickLogDataset
+
+cfg = scaled(DLRM_KAGGLE, max_rows=5000)
+ds = ClickLogDataset(cfg.table_sizes, num_samples=20000, seed=3)
+params = SystemParams()          # production-projected failure/overhead model
+
+print(f"{len(cfg.table_sizes)} embedding tables, "
+      f"{cfg.total_emb_rows()} rows, CTR={ds.ctr:.3f}\n")
+
+for mode in ("full", "cpr-mfu"):
+    mgr = CPRManager(mode, params, cfg.table_sizes, target_pls=0.1)
+    inj = FailureInjector(n_failures=2, fail_fraction=0.25,
+                          n_shards=params.N_emb, T_total=params.T_total,
+                          seed=11)
+    result = Emulator(cfg, ds, mgr, inj, batch_size=256).run()
+    print(result.summary())
+
+print("\nCPR keeps the AUC of full recovery at ~1/15th of the checkpoint "
+      "overhead (paper Fig. 7).")

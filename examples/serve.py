@@ -1,0 +1,61 @@
+"""Batched serving example: prefill + decode with a KV cache.
+
+Loads a reduced config (any arch with a decode path), prefills a batch of
+prompts, then decodes N tokens per prompt with the stacked per-layer caches,
+reporting tokens/s.
+
+  PYTHONPATH=src python examples/serve.py --arch gemma2-2b --tokens 64
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, list_archs
+from repro.models import transformer as T
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=list_archs(), default="gemma2-2b")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--tokens", type=int, default=64)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch).reduced()
+    if not cfg.supports_decode:
+        raise SystemExit(f"{args.arch} is encoder-only; no decode path")
+    params = T.init_model(cfg, jax.random.PRNGKey(0))
+    B, P = args.batch, args.prompt_len
+    max_len = P + args.tokens
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (B, P), 0,
+                                 cfg.vocab_size)
+
+    state = T.init_decode_state(cfg, B, max_len, jnp.float32)
+    step = jax.jit(lambda p, s, t, i: T.decode_step(p, s, t, i, cfg))
+
+    # prefill via the decode path (teacher-forcing the prompt)
+    t0 = time.time()
+    for i in range(P):
+        logits, state = step(params, state, prompts[:, i], jnp.int32(i))
+    print(f"prefill: {P} steps in {time.time() - t0:.2f}s (incl. compile)")
+
+    tok = jnp.argmax(logits, -1)
+    out = [tok]
+    t0 = time.time()
+    for i in range(P, max_len - 1):
+        logits, state = step(params, state, tok, jnp.int32(i))
+        tok = jnp.argmax(logits, -1)
+        out.append(tok)
+    jax.block_until_ready(tok)
+    dt = time.time() - t0
+    n = len(out) * B
+    print(f"decode: {n} tokens in {dt:.2f}s -> {n / dt:.1f} tok/s "
+          f"(batch={B}, arch={cfg.name})")
+    print("sample continuation ids:", [int(t[0]) for t in out[:12]])
+
+
+if __name__ == "__main__":
+    main()

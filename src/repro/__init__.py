@@ -1,0 +1,2 @@
+"""repro — CPR (partial-recovery checkpointing) in multi-pod JAX."""
+__version__ = "1.0.0"

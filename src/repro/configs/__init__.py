@@ -1,0 +1,42 @@
+"""Config registry: ``get_config(arch_id)`` / ``list_archs()``.
+
+The 10 assigned architectures plus the paper's own DLRM configurations.
+"""
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.base import INPUT_SHAPES, InputShape, ModelConfig, MoEConfig
+
+_MODULES = {
+    "recurrentgemma-2b": "recurrentgemma_2b",
+    "phi3-medium-14b": "phi3_medium_14b",
+    "hubert-xlarge": "hubert_xlarge",
+    "qwen2-moe-a2.7b": "qwen2_moe_a2_7b",
+    "qwen2-7b": "qwen2_7b",
+    "qwen2.5-14b": "qwen2_5_14b",
+    "qwen2-vl-72b": "qwen2_vl_72b",
+    "xlstm-1.3b": "xlstm_1_3b",
+    "qwen3-moe-30b-a3b": "qwen3_moe_30b_a3b",
+    "gemma2-2b": "gemma2_2b",
+}
+
+
+def list_archs():
+    return sorted(_MODULES)
+
+
+def get_config(arch: str) -> ModelConfig:
+    if arch not in _MODULES:
+        raise KeyError(f"unknown arch {arch!r}; known: {list_archs()}")
+    mod = importlib.import_module(f"repro.configs.{_MODULES[arch]}")
+    return mod.CONFIG
+
+
+def get_dlrm_config(dataset: str = "kaggle"):
+    from repro.configs.dlrm import DLRM_KAGGLE, DLRM_TERABYTE
+    return {"kaggle": DLRM_KAGGLE, "terabyte": DLRM_TERABYTE}[dataset]
+
+
+__all__ = ["get_config", "get_dlrm_config", "list_archs", "ModelConfig",
+           "MoEConfig", "InputShape", "INPUT_SHAPES"]

@@ -1,0 +1,18 @@
+"""CPR core: the paper's contribution.
+
+Public API:
+  SystemParams, choose_strategy, expected_pls  — overhead/PLS policy (Eq.1-4)
+  CPRManager                                   — mode policy + orchestration
+  CheckpointStore, EmbShardSpec                — sharded partial checkpoints
+  GammaFailureModel, FailureInjector           — failure modeling (§3)
+  Emulator                                     — the evaluation framework (§5.1)
+  trackers                                     — MFU / SSU / SCAR (§4.2)
+"""
+from repro.core.overhead import (SystemParams, choose_strategy, expected_pls,
+                                 full_recovery_overhead,
+                                 partial_recovery_overhead, scalability_curve,
+                                 t_save_full_optimal, t_save_partial)
+from repro.core.checkpoint import CheckpointStore, EmbShardSpec
+from repro.core.failure import FailureEvent, FailureInjector, GammaFailureModel
+from repro.core.manager import ALL_MODES, CPRManager
+from repro.core.emulator import EmulationResult, Emulator

@@ -1,0 +1,187 @@
+"""Sharded checkpoint store with partial (row-level) saves and restores.
+
+The unit of failure/recovery is an **Emb PS shard**: shard ``j`` of
+``n_shards`` owns the contiguous row range ``[floor(j·n/N), floor((j+1)·n/N))``
+of every embedding table, together with the matching rows of the optimizer
+state (row-wise Adagrad accumulators) — restoring parameters without their
+optimizer state would corrupt adaptive-step training.
+
+The store maintains the "on-disk image": what a recovering shard would read
+back.  Backends:
+  * memory — image held as numpy arrays (fast emulation),
+  * disk   — every save event additionally persisted as .npz under
+             ``dir/shard_<j>/``, with a JSON manifest; ``load_latest``
+             reconstructs the image from disk (crash-durable path used by
+             the example drivers and tests).
+
+Byte accounting feeds the emulator's save-overhead model.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+
+class EmbShardSpec:
+    """Row-range partitioning of each table over n_shards virtual Emb PS."""
+
+    def __init__(self, table_sizes: Sequence[int], n_shards: int):
+        self.table_sizes = tuple(table_sizes)
+        self.n_shards = n_shards
+        # boundaries[t] = array of n_shards+1 row offsets
+        self.boundaries = [
+            np.floor(np.arange(n_shards + 1) * n / n_shards).astype(np.int64)
+            for n in self.table_sizes
+        ]
+
+    def shard_range(self, table: int, shard: int):
+        b = self.boundaries[table]
+        return int(b[shard]), int(b[shard + 1])
+
+    def shard_of_rows(self, table: int, rows: np.ndarray) -> np.ndarray:
+        return np.searchsorted(self.boundaries[table], rows, side="right") - 1
+
+
+class CheckpointStore:
+    def __init__(self, tables: List[np.ndarray], accs: List[np.ndarray],
+                 spec: EmbShardSpec, trainer_state=None,
+                 directory: Optional[str] = None):
+        self.spec = spec
+        # the on-disk image starts as the initial state (a cold row that was
+        # never saved restores to its initial value, which is also what a
+        # fresh shard would re-initialize to)
+        self.image_tables = [np.array(t) for t in tables]
+        self.image_accs = [np.array(a) for a in accs]
+        self.trainer_image = _to_numpy(trainer_state)
+        self.directory = directory
+        self.bytes_written = 0
+        self.save_events = 0
+        self.last_full_save_step = -1
+        if directory:
+            os.makedirs(directory, exist_ok=True)
+            self._manifest = {"events": [], "n_shards": spec.n_shards,
+                              "table_sizes": list(spec.table_sizes)}
+
+    # ------------------------------------------------------------ saves ----
+    def save_full(self, tables, accs, trainer_state=None, step: int = 0):
+        """Full checkpoint of every shard (and the trainer replica)."""
+        nbytes = 0
+        for t, (src, acc) in enumerate(zip(tables, accs)):
+            src, acc = np.asarray(src), np.asarray(acc)
+            self.image_tables[t][...] = src
+            self.image_accs[t][...] = acc
+            nbytes += src.nbytes + acc.nbytes
+        if trainer_state is not None:
+            self.trainer_image = _to_numpy(trainer_state)
+            nbytes += sum(a.nbytes for a in _leaves(self.trainer_image))
+        self.bytes_written += nbytes
+        self.save_events += 1
+        self.last_full_save_step = step
+        if self.directory:
+            for j in range(self.spec.n_shards):
+                self._persist_shard(j, step, kind="full")
+            self._log_event({"kind": "full", "step": step, "bytes": nbytes})
+        return nbytes
+
+    def save_rows(self, table: int, rows: np.ndarray, values: np.ndarray,
+                  acc_values: np.ndarray, step: int = 0):
+        """Partial (priority) save of selected rows of one table."""
+        rows = np.asarray(rows)
+        valid = rows < self.spec.table_sizes[table]
+        rows, values, acc_values = rows[valid], np.asarray(values)[valid], \
+            np.asarray(acc_values)[valid]
+        if rows.size == 0:
+            return 0
+        self.image_tables[table][rows] = values
+        self.image_accs[table][rows] = acc_values
+        nbytes = values.nbytes + acc_values.nbytes + rows.nbytes
+        self.bytes_written += nbytes
+        self.save_events += 1
+        if self.directory:
+            path = os.path.join(self.directory, f"partial_t{table}_s{step}.npz")
+            np.savez_compressed(path, rows=rows, values=values,
+                                accs=acc_values, table=table, step=step)
+            self._log_event({"kind": "partial", "table": table, "step": step,
+                             "bytes": nbytes, "file": os.path.basename(path)})
+        return nbytes
+
+    # --------------------------------------------------------- restores ----
+    def restore_shards(self, tables, accs, shard_ids: Sequence[int]):
+        """Partial recovery: revert only the failed shards' row ranges.
+        Returns new (tables, accs) lists (numpy)."""
+        out_t = [np.array(t) for t in tables]
+        out_a = [np.array(a) for a in accs]
+        for t in range(len(out_t)):
+            for j in shard_ids:
+                lo, hi = self.spec.shard_range(t, j)
+                if hi > lo:
+                    out_t[t][lo:hi] = self.image_tables[t][lo:hi]
+                    out_a[t][lo:hi] = self.image_accs[t][lo:hi]
+        return out_t, out_a
+
+    def restore_all(self):
+        """Full recovery image (every shard + trainer)."""
+        return ([t.copy() for t in self.image_tables],
+                [a.copy() for a in self.image_accs],
+                self.trainer_image)
+
+    # ------------------------------------------------------------- disk ----
+    def _persist_shard(self, shard: int, step: int, kind: str):
+        d = os.path.join(self.directory, f"shard_{shard}")
+        os.makedirs(d, exist_ok=True)
+        arrs = {}
+        for t in range(len(self.image_tables)):
+            lo, hi = self.spec.shard_range(t, shard)
+            arrs[f"table_{t}"] = self.image_tables[t][lo:hi]
+            arrs[f"acc_{t}"] = self.image_accs[t][lo:hi]
+        np.savez_compressed(os.path.join(d, f"{kind}_{step}.npz"), **arrs)
+
+    def _log_event(self, ev):
+        ev["time"] = time.time()
+        self._manifest["events"].append(ev)
+        with open(os.path.join(self.directory, "manifest.json"), "w") as f:
+            json.dump(self._manifest, f)
+
+    @classmethod
+    def load_latest(cls, directory: str, tables, accs, spec: EmbShardSpec):
+        """Reconstruct the image from disk (latest full + later partials)."""
+        store = cls(tables, accs, spec, directory=None)
+        with open(os.path.join(directory, "manifest.json")) as f:
+            manifest = json.load(f)
+        fulls = [e for e in manifest["events"] if e["kind"] == "full"]
+        last_full = max((e["step"] for e in fulls), default=None)
+        if last_full is not None:
+            for j in range(spec.n_shards):
+                path = os.path.join(directory, f"shard_{j}",
+                                    f"full_{last_full}.npz")
+                with np.load(path) as z:
+                    for t in range(len(tables)):
+                        lo, hi = spec.shard_range(t, j)
+                        store.image_tables[t][lo:hi] = z[f"table_{t}"]
+                        store.image_accs[t][lo:hi] = z[f"acc_{t}"]
+        for e in manifest["events"]:
+            if e["kind"] == "partial" and (last_full is None or
+                                           e["step"] >= last_full):
+                with np.load(os.path.join(directory, e["file"])) as z:
+                    t = int(z["table"])
+                    store.image_tables[t][z["rows"]] = z["values"]
+                    store.image_accs[t][z["rows"]] = z["accs"]
+        return store
+
+
+def _to_numpy(tree):
+    if tree is None:
+        return None
+    import jax
+    return jax.tree.map(lambda a: np.asarray(a), tree)
+
+
+def _leaves(tree):
+    if tree is None:
+        return []
+    import jax
+    return jax.tree.leaves(tree)

@@ -1,0 +1,249 @@
+"""CPRManager — the policy engine tying PLS, trackers and the store together.
+
+Modes (paper §5.1 "Strategies"):
+  full       — full recovery, optimal interval sqrt(2·O_save·T_fail)   (Eq.1)
+  partial    — naive partial recovery at the full-recovery interval
+  cpr        — CPR-vanilla: interval from target PLS, with the benefit
+               analysis fallback to full recovery
+  cpr-mfu    — cpr + Most-Frequently-Used priority partial saves
+  cpr-ssu    — cpr + Sub-Sampled-Used priority partial saves
+  cpr-scar   — cpr + SCAR (shadow-copy) priority saves [Qiao et al. 2019]
+
+For the priority modes, the largest tables covering >=99 % of embedding rows
+(the paper's "7 of 26 tables") are saved partially: every r·T_save, at most
+r·N rows, cycling; the remaining small tables are always fully saved at each
+T_save boundary.  PLS bookkeeping per shard uses T_save-boundary events only
+(partial saves improve restored values — Fig. 12's slope — not PLS itself).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.core import overhead as oh
+from repro.core import trackers as trk
+from repro.core.checkpoint import CheckpointStore, EmbShardSpec
+
+PRIORITY_MODES = ("cpr-mfu", "cpr-ssu", "cpr-scar")
+ALL_MODES = ("full", "partial", "cpr") + PRIORITY_MODES
+
+
+@dataclass
+class OverheadLedger:
+    save: float = 0.0
+    load: float = 0.0
+    lost: float = 0.0
+    resched: float = 0.0
+
+    @property
+    def total(self):
+        return self.save + self.load + self.lost + self.resched
+
+    def as_dict(self, T_total=None):
+        d = {"save": self.save, "load": self.load, "lost": self.lost,
+             "resched": self.resched, "total": self.total}
+        if T_total:
+            d["fraction"] = self.total / T_total
+        return d
+
+
+class CPRManager:
+    def __init__(self, mode: str, sys_params: oh.SystemParams,
+                 table_sizes, target_pls: float = 0.1, r: float = 0.125,
+                 ssu_period: int = 2, big_table_coverage: float = 0.99,
+                 directory: Optional[str] = None):
+        assert mode in ALL_MODES, mode
+        self.mode = mode
+        self.p = sys_params
+        self.target_pls = target_pls
+        self.r = r
+        self.ssu_period = ssu_period
+        self.table_sizes = tuple(table_sizes)
+        self.spec = EmbShardSpec(table_sizes, sys_params.N_emb)
+        self.directory = directory
+
+        # ---- interval policy (paper Fig. 5) ----
+        self.decision = oh.choose_strategy(sys_params, target_pls)
+        if mode in ("full", "partial"):
+            self.T_save = self.decision["T_save_full_optimal"]
+            self.uses_partial_recovery = mode == "partial"
+        else:
+            self.uses_partial_recovery = self.decision["use_partial"]
+            self.T_save = (self.decision["T_save_partial"]
+                           if self.uses_partial_recovery
+                           else self.decision["T_save_full_optimal"])
+        self.effective_mode = (mode if (self.uses_partial_recovery or
+                                        mode == "full") else "full-fallback")
+
+        # ---- priority-save plan ----
+        order = np.argsort(self.table_sizes)[::-1]
+        total = sum(self.table_sizes)
+        self.big_tables: List[int] = []
+        cum = 0
+        for t in order:
+            if cum / total >= big_table_coverage:
+                break
+            self.big_tables.append(int(t))
+            cum += self.table_sizes[t]
+        self.small_tables = [t for t in range(len(self.table_sizes))
+                             if t not in self.big_tables]
+        self.n_subcycles = max(1, int(round(1.0 / r)))
+
+        # ---- runtime state ----
+        self.ledger = OverheadLedger()
+        self.pls = 0.0
+        self.n_failures = 0
+        self.last_cycle_time = np.zeros(sys_params.N_emb)  # per-shard
+        self._next_save_idx = 1       # multiples of sub-interval
+        self.store: Optional[CheckpointStore] = None
+        self.samples_seen = 0
+        self.samples_at_cycle = np.zeros(sys_params.N_emb)
+        self.history = []
+
+    # ----------------------------------------------------------- setup ----
+    @property
+    def is_priority(self):
+        return self.mode in PRIORITY_MODES and self.effective_mode == self.mode
+
+    def tracker_init(self, tables):
+        """Device-side tracker state to thread through the train step."""
+        if not self.is_priority:
+            return {}
+        if self.mode == "cpr-mfu":
+            return {t: trk.mfu_init(self.table_sizes[t]) for t in self.big_tables}
+        if self.mode == "cpr-ssu":
+            return {t: trk.ssu_init(max(1, int(self.r * self.table_sizes[t])))
+                    for t in self.big_tables}
+        if self.mode == "cpr-scar":
+            return {t: trk.scar_init(tables[t]) for t in self.big_tables}
+        return {}
+
+    def attach_store(self, tables, accs, trainer_state=None):
+        self.store = CheckpointStore(tables, accs, self.spec, trainer_state,
+                                     directory=self.directory)
+        self._total_bytes = sum(np.asarray(t).nbytes + np.asarray(a).nbytes
+                                for t, a in zip(tables, accs))
+        if trainer_state is not None:
+            import jax
+            self._total_bytes += sum(np.asarray(a).nbytes
+                                     for a in jax.tree.leaves(trainer_state))
+
+    # ------------------------------------------------------ save policy ----
+    @property
+    def save_interval(self) -> float:
+        """Interval between save *events* (sub-interval for priority modes)."""
+        return self.T_save / self.n_subcycles if self.is_priority else self.T_save
+
+    def due_saves(self, t: float):
+        """Save-event times in (last_handled, t]."""
+        out = []
+        while self._next_save_idx * self.save_interval <= t:
+            out.append(self._next_save_idx * self.save_interval)
+            self._next_save_idx += 1
+        return out
+
+    def run_save(self, t_event: float, tables, accs, tracker_state,
+                 trainer_state=None, step: int = 0):
+        """Execute one save event; returns updated tracker_state.
+        Charges save overhead proportional to bytes written."""
+        assert self.store is not None
+        bytes_before = self.store.bytes_written
+        is_boundary = (not self.is_priority) or (
+            round(t_event / self.save_interval) % self.n_subcycles == 0)
+        if self.is_priority:
+            # partial save of big tables by priority
+            for t in self.big_tables:
+                n = self.table_sizes[t]
+                rn = max(1, int(self.r * n))
+                tab = np.asarray(tables[t])
+                acc = np.asarray(accs[t])
+                if self.mode == "cpr-mfu":
+                    idx, new_counts = trk.mfu_select(tracker_state[t], rn)
+                    tracker_state = {**tracker_state, t: new_counts}
+                    rows = np.asarray(idx)
+                elif self.mode == "cpr-ssu":
+                    ids, reset = trk.ssu_select(tracker_state[t])
+                    tracker_state = {**tracker_state, t: reset}
+                    rows = np.asarray(ids)
+                    rows = rows[rows != int(trk.EMPTY)]
+                else:  # cpr-scar
+                    idx, new_state = trk.scar_select(tracker_state[t],
+                                                     tables[t], rn)
+                    tracker_state = {**tracker_state, t: new_state}
+                    rows = np.asarray(idx)
+                if rows.size:
+                    self.store.save_rows(t, rows, tab[rows], acc[rows],
+                                         step=step)
+            if is_boundary:
+                for t in self.small_tables:
+                    n = self.table_sizes[t]
+                    rows = np.arange(n)
+                    self.store.save_rows(t, rows, np.asarray(tables[t]),
+                                         np.asarray(accs[t]), step=step)
+        else:
+            self.store.save_full(tables, accs, trainer_state, step=step)
+        # bandwidth-proportional save cost
+        frac = (self.store.bytes_written - bytes_before) / max(self._total_bytes, 1)
+        self.ledger.save += self.p.O_save * frac
+        if is_boundary:
+            self.last_cycle_time[:] = t_event
+            self.samples_at_cycle[:] = self.samples_seen
+        self.history.append({"t": t_event, "event": "save",
+                             "boundary": bool(is_boundary)})
+        return tracker_state
+
+    # --------------------------------------------------------- failures ----
+    def on_failure(self, event, tables, accs):
+        """Apply a failure.  Returns (tables, accs, info).  For full recovery
+        the emulator exploits replay-determinism: state is *not* mutated, only
+        time is charged (reverting and re-running the same data reproduces the
+        exact pre-failure state, paper §5.1)."""
+        self.n_failures += 1
+        t = event.time
+        info = {"time": t, "shards": event.shard_ids, "mode": self.effective_mode}
+        if self.effective_mode in ("full", "full-fallback"):
+            last_save = float(np.max(self.last_cycle_time))
+            lost = max(0.0, t - last_save)
+            self.ledger.load += self.p.O_load
+            self.ledger.lost += lost
+            self.ledger.resched += self.p.O_res
+            info["lost_time"] = lost
+            self.history.append({"t": t, "event": "failure", **info})
+            return tables, accs, info
+        # ---- partial recovery ----
+        tables, accs = self.store.restore_shards(tables, accs, event.shard_ids)
+        self.ledger.load += self.p.O_load_partial
+        self.ledger.resched += self.p.O_res_partial
+        # PLS increment (Eq. 3): per failed shard, samples since its last
+        # checkpoint cycle / (S_total · N_emb)
+        for j in event.shard_ids:
+            self.pls += (self.samples_seen - self.samples_at_cycle[j]) / \
+                max(self._s_total, 1) / self.p.N_emb
+            # the restored shard is now at its checkpoint state
+            self.last_cycle_time[j] = t
+            self.samples_at_cycle[j] = self.samples_seen
+        info["pls"] = self.pls
+        self.history.append({"t": t, "event": "failure", **info})
+        return tables, accs, info
+
+    def set_total_samples(self, s_total: int):
+        self._s_total = s_total
+
+    # ----------------------------------------------------------- report ----
+    def report(self):
+        return {
+            "mode": self.mode,
+            "effective_mode": self.effective_mode,
+            "T_save": self.T_save,
+            "save_interval": self.save_interval,
+            "target_pls": self.target_pls,
+            "expected_pls": (oh.expected_pls(self.p, self.T_save)
+                             if self.uses_partial_recovery else 0.0),
+            "measured_pls": self.pls,
+            "n_failures": self.n_failures,
+            "overheads": self.ledger.as_dict(self.p.T_total),
+            "bytes_written": self.store.bytes_written if self.store else 0,
+            "decision": self.decision,
+        }

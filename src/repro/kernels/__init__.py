@@ -1,0 +1,1 @@
+"""Pallas-TPU kernels; see ops.py for the jit'd public wrappers."""

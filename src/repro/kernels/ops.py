@@ -1,0 +1,40 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+On this CPU container the kernels execute in ``interpret=True`` mode (the
+kernel body runs as traced JAX ops — bit-accurate semantics, no Mosaic);
+on TPU the same calls compile through Mosaic.  ``flash_attention`` adapts
+the model-layer layout (B, S, H, hd) to the kernel layout (B, H, S, hd).
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels import embedding_bag as _eb
+from repro.kernels import flash_attention as _fa
+from repro.kernels import rglru_scan as _rg
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def embedding_bag(table, idx, block_d: int = 512):
+    return _eb.embedding_bag(table, idx, block_d=block_d,
+                             interpret=_interpret())
+
+
+def flash_attention(q, k, v, causal=True, window=0, softcap=0.0,
+                    block_q=128, block_k=128):
+    """Layer layout: q (B, Sq, Hq, hd), k/v (B, Skv, Hkv, hd)."""
+    qt = q.swapaxes(1, 2)
+    kt = k.swapaxes(1, 2)
+    vt = v.swapaxes(1, 2)
+    out = _fa.flash_attention(qt, kt, vt, causal=causal, window=window,
+                              softcap=softcap, block_q=block_q,
+                              block_k=block_k, interpret=_interpret())
+    return out.swapaxes(1, 2)
+
+
+def rglru_scan(a, b, block_s: int = 256, block_w: int = 512):
+    return _rg.rglru_scan(a, b, block_s=block_s, block_w=block_w,
+                          interpret=_interpret())

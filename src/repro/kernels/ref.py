@@ -1,0 +1,51 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def embedding_bag(table, idx):
+    """table: (N, d); idx: (B, hot) -> (B, d) sum-pooled."""
+    return jnp.sum(table[idx], axis=1)
+
+
+def flash_attention(q, k, v, causal=True, window=0, softcap=0.0):
+    """q: (B, Hq, Sq, hd); k/v: (B, Hkv, Skv, hd) -> (B, Hq, Sq, hd)."""
+    B, Hq, Sq, hd = q.shape
+    Hkv, Skv = k.shape[1], k.shape[2]
+    g = Hq // Hkv
+    kq = jnp.repeat(k, g, axis=1)
+    vq = jnp.repeat(v, g, axis=1)
+    s = jnp.einsum("bhsd,bhtd->bhst", q.astype(jnp.float32),
+                   kq.astype(jnp.float32)) / math.sqrt(hd)
+    if softcap:
+        s = jnp.tanh(s / softcap) * softcap
+    i = jnp.arange(Sq)[:, None] + (Skv - Sq)   # right-aligned positions
+    j = jnp.arange(Skv)[None, :]
+    mask = jnp.ones((Sq, Skv), bool)
+    if causal:
+        mask &= j <= i
+    if window:
+        mask &= (i - j) < window
+    s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhst,bhtd->bhsd", p,
+                      vq.astype(jnp.float32)).astype(q.dtype)
+
+
+def rglru_scan(a, b, h0=None):
+    """h_t = a_t * h_{t-1} + b_t over axis 1.  a, b: (B, S, w)."""
+    B, S, w = a.shape
+    h = jnp.zeros((B, w), jnp.float32) if h0 is None else h0
+
+    def step(h, ab):
+        at, bt = ab
+        h = at * h + bt
+        return h, h
+
+    _, hs = jax.lax.scan(step, h, (jnp.moveaxis(a, 1, 0).astype(jnp.float32),
+                                   jnp.moveaxis(b, 1, 0).astype(jnp.float32)))
+    return jnp.moveaxis(hs, 0, 1).astype(a.dtype)

@@ -1,0 +1,28 @@
+"""Production mesh construction (TPU v5e pods; CPU placeholder for dry-runs).
+
+``make_production_mesh`` is a function (never a module-level constant) so
+importing this module never touches jax device state.  The dry-run driver
+sets ``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any jax
+import; everything else (tests, benchmarks) sees the 1 real CPU device.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """1-device mesh with the production axis names (CPU tests)."""
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+# TPU v5e hardware constants used by the roofline analysis.
+PEAK_FLOPS_BF16 = 197e12          # per chip
+HBM_BW = 819e9                    # bytes/s per chip
+ICI_BW = 50e9                     # bytes/s per link
+CHIP_HBM_BYTES = 16 * 1024**3     # 16 GiB

@@ -1,0 +1,171 @@
+"""Step builders: train / prefill / serve steps with shardings, plus
+ShapeDtypeStruct ``input_specs`` for the dry-run (no allocation).
+
+``build_*`` return (fn, in_shardings, out_shardings, example_inputs) ready
+for ``jax.jit(fn, in_shardings=..., out_shardings=...).lower(*inputs)``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import INPUT_SHAPES, ModelConfig
+from repro.models import transformer as T
+from repro.optim.optimizers import apply_updates, get_optimizer
+from repro.sharding import specs as S
+
+
+# --------------------------------------------------------------------------
+# ShapeDtypeStruct stand-ins
+# --------------------------------------------------------------------------
+def batch_struct(cfg: ModelConfig, shape_name: str) -> Dict[str, Any]:
+    """Model-input ShapeDtypeStructs for a (cfg, input-shape) pair."""
+    shp = INPUT_SHAPES[shape_name]
+    B, Sq = shp.global_batch, shp.seq_len
+    i32 = jnp.int32
+    dt = jnp.dtype(cfg.dtype)
+    if shp.kind == "decode":
+        return {"tokens": jax.ShapeDtypeStruct((B,), i32)}
+    batch: Dict[str, Any] = {}
+    if cfg.modality_frontend == "audio":
+        batch["embeds"] = jax.ShapeDtypeStruct((B, Sq, cfg.d_model), dt)
+        if shp.kind == "train":
+            batch["targets"] = jax.ShapeDtypeStruct((B, Sq), i32)
+            batch["target_mask"] = jax.ShapeDtypeStruct((B, Sq), jnp.float32)
+    else:
+        batch["tokens"] = jax.ShapeDtypeStruct((B, Sq), i32)
+        if cfg.modality_frontend == "vision":
+            Pn = Sq // 4  # quarter of the context is image patches
+            batch["patch_embeds"] = jax.ShapeDtypeStruct((B, Pn, cfg.d_model), dt)
+            batch["patch_positions"] = jax.ShapeDtypeStruct((B, Pn), i32)
+            batch["positions"] = jax.ShapeDtypeStruct((3, B, Sq), i32)
+    return batch
+
+
+def param_structs(cfg: ModelConfig):
+    """Parameter ShapeDtypeStructs via eval_shape (no allocation)."""
+    return jax.eval_shape(lambda k: T.init_model(cfg, k),
+                          jax.ShapeDtypeStruct((2,), jnp.uint32))
+
+
+def _cast_struct(tree, dtype):
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, dtype)
+        if jnp.issubdtype(s.dtype, jnp.floating) else s, tree)
+
+
+# --------------------------------------------------------------------------
+# step builders
+# --------------------------------------------------------------------------
+def build_train_step(cfg: ModelConfig, mesh, optimizer="adam", lr=3e-4,
+                     use_flash=False, param_dtype=jnp.float32,
+                     bf16_forward=True, microbatches: int = 1):
+    opt = get_optimizer(optimizer, lr)
+
+    def loss_fn(p, b):
+        if bf16_forward:
+            # cast the f32 masters to bf16 per-shard BEFORE the FSDP
+            # all-gathers: halves param collective volume + weight reads;
+            # grads flow through the cast back to f32
+            p = jax.tree.map(
+                lambda a: a.astype(jnp.bfloat16)
+                if a.dtype == jnp.float32 else a, p)
+        return T.lm_loss(p, b, cfg, use_flash, remat=True)
+
+    def train_step(params, opt_state, batch):
+        if microbatches > 1:
+            # gradient accumulation: 1/M of the activation footprint per
+            # microbatch at the same total flops (§Perf pair 2, iteration 3)
+            def split(path, a):
+                # mrope positions are (3, B, S): batch is axis 1
+                ax = 1 if (getattr(path[-1], "key", "") == "positions"
+                           and a.ndim == 3 and a.shape[0] == 3) else 0
+                a = a.reshape(a.shape[:ax] + (microbatches,
+                                              a.shape[ax] // microbatches)
+                              + a.shape[ax + 1:])
+                return jnp.moveaxis(a, ax, 0)
+
+            mb = jax.tree_util.tree_map_with_path(split, batch)
+
+            def acc(carry, b):
+                g_acc, l_acc = carry
+                (loss, (nll, aux)), g = jax.value_and_grad(
+                    loss_fn, has_aux=True)(params, b)
+                return (jax.tree.map(jnp.add, g_acc, g), l_acc + loss), \
+                    {"loss": loss, "nll": nll, "aux": aux}
+
+            zeros = jax.tree.map(jnp.zeros_like, params)
+            (grads, loss_sum), ms = jax.lax.scan(acc, (zeros, 0.0), mb)
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+            metrics = {"loss": loss_sum / microbatches,
+                       "nll": jnp.mean(ms["nll"]), "aux": jnp.mean(ms["aux"])}
+        else:
+            (loss, (nll, aux)), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+            metrics = {"loss": loss, "nll": nll, "aux": aux}
+        updates, opt_state = opt.update(grads, opt_state, params)
+        params = apply_updates(params, updates)
+        return params, opt_state, metrics
+
+    p_struct = _cast_struct(param_structs(cfg), param_dtype)
+    o_struct = jax.eval_shape(opt.init, p_struct)
+    p_spec = S.lm_param_specs(p_struct, cfg, mesh)
+    o_spec = _opt_specs(o_struct, p_spec)
+    return train_step, p_struct, o_struct, p_spec, o_spec
+
+
+def _opt_specs(o_struct, p_spec):
+    """Optimizer-state specs, structure-exact: adam m/v mirror the params;
+    scalars replicate; row-wise accumulators take the param's row axis."""
+    out = {}
+    if "m" in o_struct:
+        out["m"] = p_spec
+        out["v"] = p_spec
+        out["t"] = P()
+    if "mu" in o_struct:
+        out["mu"] = p_spec
+    if "acc" in o_struct:
+        def row_rule(spec, acc_leaf):
+            if acc_leaf.ndim == 1 and len(spec) >= 1:
+                return P(spec[0])
+            return spec
+        out["acc"] = jax.tree.map(
+            row_rule, p_spec, o_struct["acc"],
+            is_leaf=lambda x: isinstance(x, P))
+    return out
+
+
+def build_prefill_step(cfg: ModelConfig, mesh, use_flash=False,
+                       param_dtype=None):
+    def prefill_step(params, batch):
+        logits, _ = T.forward(params, batch, cfg, use_flash)
+        return logits
+
+    p_struct = param_structs(cfg)
+    if param_dtype is not None:
+        p_struct = _cast_struct(p_struct, param_dtype)
+    p_spec = S.lm_param_specs(p_struct, cfg, mesh)
+    return prefill_step, p_struct, p_spec
+
+
+def build_serve_step(cfg: ModelConfig, mesh, shape_name: str,
+                     param_dtype=None):
+    shp = INPUT_SHAPES[shape_name]
+    B, Sq = shp.global_batch, shp.seq_len
+
+    def serve_step(params, state, tokens, pos):
+        return T.decode_step(params, state, tokens, pos, cfg)
+
+    p_struct = param_structs(cfg)
+    if param_dtype is not None:
+        p_struct = _cast_struct(p_struct, param_dtype)
+    s_struct = jax.eval_shape(
+        lambda: T.init_decode_state(cfg, B, Sq, jnp.dtype(cfg.dtype)))
+    p_spec = S.lm_param_specs(p_struct, cfg, mesh)
+    s_spec = S.decode_state_specs(s_struct, cfg, mesh, B)
+    return serve_step, p_struct, s_struct, p_spec, s_spec

@@ -1,0 +1,1 @@
+from repro.metrics.classification import log_loss, roc_auc

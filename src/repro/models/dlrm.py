@@ -1,0 +1,128 @@
+"""DLRM (Naumov et al., arXiv:1906.00091) — the paper's workload.
+
+Dense features -> bottom MLP; sparse categorical features -> embedding-bag
+lookups (sum pooling); pairwise dot-product feature interaction; top MLP ->
+CTR logit.  Embedding tables are the Emb-PS state CPR partially recovers;
+they are sharded over the "model" mesh axis on the row dimension, exactly
+mirroring the paper's Emb PS row-range partitioning.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+
+Array = jax.Array
+
+
+@dataclass(frozen=True)
+class DLRMConfig:
+    name: str
+    num_dense: int                       # continuous features (13 for Criteo)
+    table_sizes: Tuple[int, ...]         # rows per sparse table (26 tables)
+    emb_dim: int                         # embedding vector dim
+    bottom_mlp: Tuple[int, ...]          # hidden sizes incl. output (= emb_dim)
+    top_mlp: Tuple[int, ...]             # hidden sizes, final = 1
+    multi_hot: int = 1                   # lookups per table per sample
+    source: str = ""
+
+    @property
+    def num_sparse(self) -> int:
+        return len(self.table_sizes)
+
+    @property
+    def interaction_dim(self) -> int:
+        f = self.num_sparse + 1
+        return f * (f - 1) // 2 + self.emb_dim
+
+    def total_emb_rows(self) -> int:
+        return sum(self.table_sizes)
+
+
+def init_mlp_stack(key, sizes):
+    ws = []
+    for i, (a, b) in enumerate(zip(sizes[:-1], sizes[1:])):
+        k1, k2, key = jax.random.split(key, 3)
+        ws.append({"w": dense_init(k1, (a, b)), "b": jnp.zeros((b,), jnp.float32)})
+    return ws
+
+
+def apply_mlp_stack(ws, x, final_act=True):
+    for i, p in enumerate(ws):
+        x = x @ p["w"] + p["b"]
+        if i < len(ws) - 1 or final_act:
+            x = jax.nn.relu(x)
+    return x
+
+
+def init_dlrm(cfg: DLRMConfig, key) -> dict:
+    k_emb, k_bot, k_top = jax.random.split(key, 3)
+    tables = []
+    for i, n in enumerate(cfg.table_sizes):
+        ki = jax.random.fold_in(k_emb, i)
+        scale = 1.0 / jnp.sqrt(jnp.float32(n))
+        tables.append(jax.random.uniform(ki, (n, cfg.emb_dim), jnp.float32,
+                                         -scale, scale))
+    return {
+        "tables": tables,
+        "bottom": init_mlp_stack(k_bot, (cfg.num_dense,) + cfg.bottom_mlp),
+        "top": init_mlp_stack(k_top, (cfg.interaction_dim,) + cfg.top_mlp),
+    }
+
+
+def embedding_bag(table: Array, idx: Array, use_kernel: bool = False) -> Array:
+    """Sum-pooled lookup.  idx: (B, multi_hot) -> (B, emb_dim)."""
+    if use_kernel:
+        from repro.kernels import ops as kops
+        return kops.embedding_bag(table, idx)
+    return jnp.sum(table[idx], axis=1)
+
+
+def dlrm_forward(params, batch, cfg: DLRMConfig, use_kernel=False) -> Array:
+    """batch: dense (B, num_dense) f32; sparse (B, num_sparse, multi_hot) i32.
+    Returns CTR logits (B,)."""
+    dense_out = apply_mlp_stack(params["bottom"], batch["dense"])  # (B, emb)
+    embs = [embedding_bag(t, batch["sparse"][:, i, :], use_kernel)
+            for i, t in enumerate(params["tables"])]
+    feats = jnp.stack([dense_out] + embs, axis=1)                  # (B, F, emb)
+    inter = jnp.einsum("bfe,bge->bfg", feats, feats)
+    f = feats.shape[1]
+    iu, ju = jnp.triu_indices(f, k=1)
+    pairwise = inter[:, iu, ju]                                    # (B, F(F-1)/2)
+    z = jnp.concatenate([dense_out, pairwise], axis=-1)
+    return apply_mlp_stack(params["top"], z, final_act=False)[:, 0]
+
+
+def dlrm_loss(params, batch, cfg: DLRMConfig, use_kernel=False):
+    logits = dlrm_forward(params, batch, cfg, use_kernel)
+    y = batch["label"].astype(jnp.float32)
+    # numerically-stable BCE with logits
+    loss = jnp.mean(jnp.maximum(logits, 0) - logits * y +
+                    jnp.log1p(jnp.exp(-jnp.abs(logits))))
+    return loss, logits
+
+
+# Paper §5.1 configurations (MLPerf DLRM reference hyperparameters).
+DLRM_KAGGLE = DLRMConfig(
+    name="dlrm-kaggle",
+    num_dense=13,
+    table_sizes=tuple(),   # filled by dataset (Criteo Kaggle cardinalities)
+    emb_dim=16,            # 64-byte fp32 vectors
+    bottom_mlp=(512, 256, 64, 16),
+    top_mlp=(512, 256, 1),
+    source="MLPerf DLRM reference / arXiv:1906.00091, Kaggle hyperparams",
+)
+
+DLRM_TERABYTE = DLRMConfig(
+    name="dlrm-terabyte",
+    num_dense=13,
+    table_sizes=tuple(),
+    emb_dim=64,            # 256-byte fp32 vectors
+    bottom_mlp=(512, 256, 64),
+    top_mlp=(512, 512, 256, 1),
+    source="MLPerf DLRM reference / arXiv:1906.00091, Terabyte hyperparams",
+)

@@ -1,0 +1,391 @@
+"""Core neural-net layers: norms, RoPE (+M-RoPE), GQA attention, MLPs.
+
+Functional style: ``init_*`` returns a param pytree, ``apply`` functions are
+pure.  Everything is plain JAX (no flax) so params shard cleanly under pjit.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+# --------------------------------------------------------------------------
+# initializers
+# --------------------------------------------------------------------------
+def dense_init(key, shape, in_axis=0, dtype=jnp.float32):
+    fan_in = shape[in_axis] if isinstance(in_axis, int) else 1
+    scale = 1.0 / math.sqrt(max(fan_in, 1))
+    return jax.random.uniform(key, shape, dtype, -scale, scale)
+
+
+# --------------------------------------------------------------------------
+# norms
+# --------------------------------------------------------------------------
+def init_norm(d, kind="rmsnorm"):
+    p = {"scale": jnp.ones((d,), jnp.float32)}
+    if kind == "layernorm":
+        p["bias"] = jnp.zeros((d,), jnp.float32)
+    return p
+
+
+def apply_norm(p, x, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    if "bias" in p:  # layernorm
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        out = (xf - mu) * jax.lax.rsqrt(var + eps) * p["scale"] + p["bias"]
+    else:  # rmsnorm (gemma-style 1+scale is folded into init for simplicity)
+        ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        out = xf * jax.lax.rsqrt(ms + eps) * p["scale"]
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# rotary embeddings
+# --------------------------------------------------------------------------
+def rope_freqs(head_dim: int, theta: float) -> Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: Array, positions: Array, theta: float) -> Array:
+    """x: (..., S, H, hd); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # (hd/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    ang = ang[..., None, :]                             # (..., S, 1, hd/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x: Array, positions: Array, theta: float,
+                sections=(16, 24, 24)) -> Array:
+    """Qwen2-VL multimodal RoPE.  positions: (3, ..., S) for (t, h, w).
+
+    ``sections`` are half-dim channel counts per position stream and must sum
+    to head_dim/2.
+    """
+    hd = x.shape[-1]
+    assert sum(sections) == hd // 2, (sections, hd)
+    freqs = rope_freqs(hd, theta)                       # (hd/2,)
+    # pick the position stream per frequency channel
+    sec_id = jnp.repeat(jnp.arange(3), jnp.array(sections),
+                        total_repeat_length=hd // 2)    # (hd/2,)
+    pos = positions.astype(jnp.float32)                 # (3, ..., S)
+    ang_all = pos[..., None] * freqs                    # (3, ..., S, hd/2)
+    onehot = jax.nn.one_hot(sec_id, 3, dtype=jnp.float32)  # (hd/2, 3)
+    ang = jnp.einsum("ct,t...c->...c", onehot, ang_all)    # (..., S, hd/2)
+    ang = ang[..., None, :]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# attention (GQA, optional sliding window / softcap / KV cache)
+# --------------------------------------------------------------------------
+def init_attention(key, cfg):
+    d, hd = cfg.d_model, cfg.head_dim
+    nq, nkv = cfg.num_heads, cfg.num_kv_heads
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (d, nq * hd)),
+        "wk": dense_init(ks[1], (d, nkv * hd)),
+        "wv": dense_init(ks[2], (d, nkv * hd)),
+        "wo": dense_init(ks[3], (nq * hd, d)),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((nq * hd,), jnp.float32)
+        p["bk"] = jnp.zeros((nkv * hd,), jnp.float32)
+        p["bv"] = jnp.zeros((nkv * hd,), jnp.float32)
+    return p
+
+
+def _softcap(x, cap):
+    return jnp.tanh(x / cap) * cap if cap else x
+
+
+def _chunked_sdpa(q, k, v, pos_q, pos_k, causal, window, softcap=0.0,
+                  block=1024):
+    """Online-softmax attention over KV blocks (flash-attention recurrence,
+    pure JAX).  Peak temp is O(Sq·block) instead of O(Sq·Skv); also the
+    numerical oracle for the Pallas kernel.
+
+    q: (B,Sq,Hq,hd), k/v: (B,Skv,Hkv,hd); pos_q: (B,Sq) or (Sq,), pos_k same.
+    """
+    B, Sq, Hq, hd = q.shape
+    Skv, Hkv = k.shape[1], k.shape[2]
+    g = Hq // Hkv
+    block = min(block, Skv)
+    nb = -(-Skv // block)
+    pad = nb * block - Skv
+    if pos_q.ndim == 1:
+        pos_q = pos_q[None, :]
+    if pos_k.ndim == 1:
+        pos_k = pos_k[None, :]
+    pos_q = jnp.broadcast_to(pos_q, (B, Sq))
+    pos_k = jnp.broadcast_to(pos_k, (B, Skv))
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        pos_k = jnp.pad(pos_k, ((0, 0), (0, pad)), constant_values=-(10 ** 9))
+    kb = k.reshape(B, nb, block, Hkv, hd).swapaxes(0, 1)
+    vb = v.reshape(B, nb, block, Hkv, hd).swapaxes(0, 1)
+    pkb = pos_k.reshape(B, nb, block).swapaxes(0, 1)
+    qf = q.astype(jnp.float32).reshape(B, Sq, Hkv, g, hd) / math.sqrt(hd)
+
+    def step(carry, inp):
+        m, l, acc = carry                       # (B,Hkv,g,Sq), same, (..,hd)
+        kblk, vblk, pk = inp
+        s = jnp.einsum("bskgd,btkd->bkgst", qf, kblk.astype(jnp.float32))
+        s = _softcap(s, softcap)
+        valid = jnp.ones((B, Sq, block), bool) if not causal else \
+            (pk[:, None, :] <= pos_q[:, :, None])
+        if window:
+            valid &= (pos_q[:, :, None] - pk[:, None, :]) < window
+        valid &= pk[:, None, :] >= 0
+        s = jnp.where(valid[:, None, None, :, :], s, -1e30)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bkgst,btkd->bkgsd", p, vblk.astype(jnp.float32))
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, Hkv, g, Sq), -1e30, jnp.float32)
+    l0 = jnp.zeros((B, Hkv, g, Sq), jnp.float32)
+    a0 = jnp.zeros((B, Hkv, g, Sq, hd), jnp.float32)
+    # save only the (m, l, acc) carries per block; recompute p in backward
+    step = jax.checkpoint(step, policy=jax.checkpoint_policies.nothing_saveable)
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0), (kb, vb, pkb))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    out = jnp.moveaxis(out, 3, 1).reshape(B, Sq, Hq, hd)
+    return out.astype(q.dtype)
+
+
+def _block_causal_sdpa(q, k, v, pos_q, window, softcap=0.0, n_chunks=4,
+                       block=1024):
+    """Causal attention in statically-unrolled query chunks; chunk i only
+    attends KV range [window_start_i : q_hi_i] (block-rounded), skipping
+    fully-masked KV blocks entirely (§Perf pair-1 iteration 2).
+
+    Assumes contiguous positions (training/prefill layout).
+    """
+    B, S, Hq, hd = q.shape
+    from repro.sharding.ctx import current_policy
+    pol = current_policy()
+    probe = bool(pol and pol.get("probe_full_blocks"))
+    while S % n_chunks:
+        n_chunks -= 1
+    c = S // n_chunks
+    outs = []
+    for i in range(n_chunks):
+        qlo, qhi = i * c, (i + 1) * c
+        klo = 0
+        if window:
+            klo = max(0, (qlo - window + 1) // block * block)
+        qc = q[:, qlo:qhi]
+        kc = k[:, klo:qhi]
+        vc = v[:, klo:qhi]
+        pq = pos_q[..., qlo:qhi]
+        pk = pos_q[..., klo:qhi] if pos_q.ndim else pos_q
+        blk = (qhi - klo) if probe else min(block, qhi - klo)
+        outs.append(_chunked_sdpa(qc, kc, vc, pq, pk, True, window,
+                                  softcap, block=blk))
+    return jnp.concatenate(outs, axis=1)
+
+
+def _sdpa(q, k, v, mask, softcap=0.0):
+    """q: (B,S,Hq,hd) k/v: (B,T,Hkv,hd); GQA via head grouping."""
+    B, S, Hq, hd = q.shape
+    Hkv = k.shape[2]
+    g = Hq // Hkv
+    qf = q.astype(jnp.float32).reshape(B, S, Hkv, g, hd)
+    kf = k.astype(jnp.float32)
+    logits = jnp.einsum("bskgd,btkd->bkgst", qf, kf) / math.sqrt(hd)
+    logits = _softcap(logits, softcap)
+    logits = jnp.where(mask[:, None, None, :, :], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgst,btkd->bskgd", probs, v.astype(jnp.float32))
+    return out.reshape(B, S, Hq, hd).astype(q.dtype)
+
+
+def attention_forward(p, x, cfg, kind, positions=None, use_flash=False):
+    """Full-sequence attention (train / prefill).
+
+    kind: "attn" (global) or "local" (sliding window).  Encoder models
+    (cfg.causal=False) attend bidirectionally.
+    """
+    B, S, d = x.shape
+    nq, nkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = x @ p["wq"].astype(x.dtype)
+    k = x @ p["wk"].astype(x.dtype)
+    v = x @ p["wv"].astype(x.dtype)
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(x.dtype)
+        k = k + p["bk"].astype(x.dtype)
+        v = v + p["bv"].astype(x.dtype)
+    q = q.reshape(B, S, nq, hd)
+    k = k.reshape(B, S, nkv, hd)
+    v = v.reshape(B, S, nkv, hd)
+    if positions is None:
+        positions = jnp.arange(S)[None, :]
+    if cfg.mrope:
+        q = apply_mrope(q, positions, cfg.rope_theta, mrope_sections(hd))
+        k = apply_mrope(k, positions, cfg.rope_theta, mrope_sections(hd))
+        pos1d = positions[0]
+    elif cfg.rope_theta > 0:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+        pos1d = positions
+    else:
+        pos1d = positions if not cfg.mrope else positions[0]
+    window = cfg.sliding_window if kind == "local" else 0
+    if use_flash:
+        from repro.kernels import ops as kops
+        out = kops.flash_attention(q, k, v, causal=cfg.causal, window=window,
+                                   softcap=cfg.attn_softcap)
+    elif S > 1024 and cfg.causal:
+        # block-triangular: q-chunks attend only their truncated KV range
+        out = _block_causal_sdpa(q, k, v, pos1d, window, cfg.attn_softcap)
+    elif S > 1024:  # encoder: online-softmax over KV blocks
+        from repro.sharding.ctx import current_policy
+        pol = current_policy()
+        blk = S if (pol and pol.get("probe_full_blocks")) else 1024
+        out = _chunked_sdpa(q, k, v, pos1d, pos1d, cfg.causal, window,
+                            cfg.attn_softcap, block=blk)
+    else:
+        i = pos1d[:, :, None] if pos1d.ndim == 2 else pos1d[None, :, None]
+        j = pos1d[:, None, :] if pos1d.ndim == 2 else pos1d[None, None, :]
+        if cfg.causal:
+            mask = j <= i
+            if window:
+                mask &= (i - j) < window
+        else:
+            mask = jnp.ones((1, S, S), bool)
+        out = _sdpa(q, k, v, mask, cfg.attn_softcap)
+    return out.reshape(B, S, nq * hd) @ p["wo"].astype(x.dtype)
+
+
+def mrope_sections(head_dim):
+    """(t, h, w) half-dim channel split used by Qwen2-VL (head_dim=128 -> 16/24/24)."""
+    half = head_dim // 2
+    t = half // 4
+    rest = half - t
+    return (t, rest // 2, rest - rest // 2)
+
+
+def init_kv_cache(cfg, kind, batch, max_len, dtype):
+    """KV cache for one attention layer.  Local layers use a ring buffer of
+    window size; global layers a full-length buffer.  With
+    ``cfg.kv_cache_dtype == "int8"`` keys/values are stored quantized with a
+    per-(token, kv-head) scale (§Perf pair 3)."""
+    W = min(cfg.sliding_window, max_len) if (kind == "local" and cfg.sliding_window) else max_len
+    shape = (batch, W, cfg.num_kv_heads, cfg.head_dim)
+    if cfg.kv_cache_dtype == "int8":
+        return {"k": jnp.zeros(shape, jnp.int8),
+                "v": jnp.zeros(shape, jnp.int8),
+                "ks": jnp.zeros(shape[:3], jnp.bfloat16),
+                "vs": jnp.zeros(shape[:3], jnp.bfloat16)}
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def _quantize_kv(x):
+    """x: (B, 1, kv, hd) -> (int8 values, per-(B,1,kv) scale)."""
+    s = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1) / 127.0
+    s = jnp.maximum(s, 1e-8)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / s[..., None]),
+                 -127, 127).astype(jnp.int8)
+    return q, s.astype(jnp.bfloat16)
+
+
+def attention_decode(p, x, cache, pos, cfg, kind):
+    """One-token decode step.  x: (B, 1, d); pos: scalar int32 (same for the
+    whole batch — continuous batching offsets are handled a level up).
+    Keys are rotated at insert time so the ring buffer never re-rotates."""
+    B, _, d = x.shape
+    nq, nkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = x @ p["wq"].astype(x.dtype)
+    k = x @ p["wk"].astype(x.dtype)
+    v = x @ p["wv"].astype(x.dtype)
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(x.dtype)
+        k = k + p["bk"].astype(x.dtype)
+        v = v + p["bv"].astype(x.dtype)
+    q = q.reshape(B, 1, nq, hd)
+    k = k.reshape(B, 1, nkv, hd)
+    v = v.reshape(B, 1, nkv, hd)
+    posb = jnp.full((B, 1), pos, jnp.int32)
+    if cfg.mrope:
+        p3 = jnp.broadcast_to(posb, (3, B, 1))
+        q = apply_mrope(q, p3, cfg.rope_theta, mrope_sections(hd))
+        k = apply_mrope(k, p3, cfg.rope_theta, mrope_sections(hd))
+    elif cfg.rope_theta > 0:
+        q = apply_rope(q, posb, cfg.rope_theta)
+        k = apply_rope(k, posb, cfg.rope_theta)
+    W = cache["k"].shape[1]
+    slot = pos % W
+    quant = "ks" in cache
+    if quant:
+        kq, ks = _quantize_kv(k)
+        vq, vs = _quantize_kv(v)
+        new_cache = {
+            "k": jax.lax.dynamic_update_slice(cache["k"], kq, (0, slot, 0, 0)),
+            "v": jax.lax.dynamic_update_slice(cache["v"], vq, (0, slot, 0, 0)),
+            "ks": jax.lax.dynamic_update_slice(cache["ks"], ks, (0, slot, 0)),
+            "vs": jax.lax.dynamic_update_slice(cache["vs"], vs, (0, slot, 0)),
+        }
+        # dequantize for the attention reads (the convert+scale fuses into
+        # the attention dots; the HBM stream is the int8 buffer)
+        ck = new_cache["k"].astype(jnp.float32) * \
+            new_cache["ks"].astype(jnp.float32)[..., None]
+        cv = new_cache["v"].astype(jnp.float32) * \
+            new_cache["vs"].astype(jnp.float32)[..., None]
+        ck = ck.astype(x.dtype)
+        cv = cv.astype(x.dtype)
+    else:
+        ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype), (0, slot, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype), (0, slot, 0, 0))
+    # validity: slot t holds absolute position p_t; with ring writes,
+    # valid iff its position <= pos and within window (local) / history.
+    idx = jnp.arange(W)
+    wraps = (pos // W) * W + idx
+    abs_pos = jnp.where(idx <= slot, wraps, wraps - W)   # position stored in slot
+    valid = abs_pos >= 0
+    if kind == "local" and cfg.sliding_window:
+        valid &= (pos - abs_pos) < cfg.sliding_window
+    else:
+        valid &= abs_pos <= pos
+    mask = jnp.broadcast_to(valid[None, None, :], (B, 1, W))
+    out = _sdpa(q, ck, cv, mask, cfg.attn_softcap)
+    y = out.reshape(B, 1, nq * hd) @ p["wo"].astype(x.dtype)
+    return y, (new_cache if quant else {"k": ck, "v": cv})
+
+
+# --------------------------------------------------------------------------
+# MLP (SwiGLU / GELU)
+# --------------------------------------------------------------------------
+def init_mlp(key, d, d_ff, act="silu"):
+    ks = jax.random.split(key, 3)
+    if act == "silu":  # gated
+        return {"w_gate": dense_init(ks[0], (d, d_ff)),
+                "w_up": dense_init(ks[1], (d, d_ff)),
+                "w_down": dense_init(ks[2], (d_ff, d))}
+    return {"w_up": dense_init(ks[0], (d, d_ff)),
+            "w_down": dense_init(ks[1], (d_ff, d))}
+
+
+def apply_mlp(p, x, act="silu"):
+    if "w_gate" in p:
+        h = jax.nn.silu(x @ p["w_gate"].astype(x.dtype)) * (x @ p["w_up"].astype(x.dtype))
+    else:
+        h = jax.nn.gelu(x @ p["w_up"].astype(x.dtype))
+    return h @ p["w_down"].astype(x.dtype)

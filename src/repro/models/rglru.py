@@ -1,0 +1,107 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+y = W_out( GeLU(W_gate x) * RG_LRU(conv1d(W_x x)) )
+
+RG-LRU recurrence (per channel):
+    r_t = sigmoid(W_a x_t + b_a)          # recurrence gate
+    i_t = sigmoid(W_i x_t + b_i)          # input gate
+    a_t = exp(-c * softplus(Lambda) * r_t)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Linear in h -> computed with jax.lax.associative_scan (log-depth on TPU) for
+train/prefill, and a single fused step for decode.  The Pallas kernel in
+``repro/kernels/rglru_scan.py`` implements the blocked time-parallel scan.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+
+C_SCALE = 8.0
+
+
+def init_rglru_block(key, d_model, width, conv_width=4):
+    ks = jax.random.split(key, 7)
+    w = width or d_model
+    return {
+        "w_x": dense_init(ks[0], (d_model, w)),
+        "w_gate": dense_init(ks[1], (d_model, w)),
+        "conv_w": dense_init(ks[2], (conv_width, w)),
+        "conv_b": jnp.zeros((w,), jnp.float32),
+        "w_a": dense_init(ks[3], (w, w)),
+        "b_a": jnp.zeros((w,), jnp.float32),
+        "w_i": dense_init(ks[4], (w, w)),
+        "b_i": jnp.zeros((w,), jnp.float32),
+        # Lambda parametrized so a is in (0.9, 0.999) at init
+        "log_lambda": jnp.log(jnp.expm1(
+            -jnp.log(jax.random.uniform(ks[5], (w,), jnp.float32, 0.9, 0.999)) * C_SCALE)),
+        "w_out": dense_init(ks[6], (w, d_model)),
+    }
+
+
+def _gates(p, u):
+    """u: (..., w) conv output -> (a, b) of the affine recurrence h = a h + b."""
+    r = jax.nn.sigmoid(u @ p["w_a"].astype(u.dtype) + p["b_a"].astype(u.dtype))
+    i = jax.nn.sigmoid(u @ p["w_i"].astype(u.dtype) + p["b_i"].astype(u.dtype))
+    log_a = -jax.nn.softplus(p["log_lambda"]).astype(jnp.float32) * r.astype(jnp.float32)
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-9)) * \
+        (i.astype(jnp.float32) * u.astype(jnp.float32))
+    return a, b
+
+
+def causal_conv1d(p, x):
+    """Depthwise causal conv. x: (B, S, w)."""
+    K = p["conv_w"].shape[0]
+    pads = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(pads[:, k : k + x.shape[1], :] * p["conv_w"][k].astype(x.dtype)
+              for k in range(K))
+    return out + p["conv_b"].astype(x.dtype)
+
+
+def rglru_scan(a, b, h0=None):
+    """Associative scan of h_t = a_t h_{t-1} + b_t over axis 1. a,b: (B,S,w)."""
+    if h0 is not None:
+        b = b.at[:, 0].add(a[:, 0] * h0)
+    def combine(x, y):
+        ax, bx = x
+        ay, by = y
+        return ax * ay, ay * bx + by
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h
+
+
+def rglru_block_forward(p, x, use_kernel=False):
+    """x: (B, S, d) -> (B, S, d). Train/prefill path."""
+    gate = jax.nn.gelu(x @ p["w_gate"].astype(x.dtype))
+    u = causal_conv1d(p, x @ p["w_x"].astype(x.dtype))
+    a, b = _gates(p, u)
+    if use_kernel:
+        from repro.kernels import ops as kops
+        h = kops.rglru_scan(a, b)
+    else:
+        h = rglru_scan(a, b)
+    return (h.astype(x.dtype) * gate) @ p["w_out"].astype(x.dtype)
+
+
+def init_rglru_state(cfg, batch, dtype):
+    w = cfg.rglru_width or cfg.d_model
+    return {"h": jnp.zeros((batch, w), jnp.float32),
+            "conv": jnp.zeros((batch, cfg.conv1d_width - 1, w), dtype)}
+
+
+def rglru_block_decode(p, x, state):
+    """One-step decode. x: (B, 1, d)."""
+    B = x.shape[0]
+    gate = jax.nn.gelu(x @ p["w_gate"].astype(x.dtype))
+    xin = (x @ p["w_x"].astype(x.dtype))[:, 0]                    # (B, w)
+    hist = jnp.concatenate([state["conv"], xin[:, None]], axis=1)  # (B, K, w)
+    u = jnp.einsum("bkw,kw->bw", hist.astype(jnp.float32),
+                   p["conv_w"].astype(jnp.float32)) + p["conv_b"]
+    a, b = _gates(p, u)
+    h = a * state["h"] + b
+    y = (h[:, None].astype(x.dtype) * gate) @ p["w_out"].astype(x.dtype)
+    new_state = {"h": h, "conv": hist[:, 1:].astype(state["conv"].dtype)}
+    return y, new_state

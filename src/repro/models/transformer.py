@@ -1,0 +1,384 @@
+"""Generic decoder/encoder LM assembled from the block zoo.
+
+Depth handling: the config's ``block_pattern`` (period P) tiles the depth.
+The first ``R = L // P`` repetitions are executed with ``jax.lax.scan`` over
+stacked parameters (compile time O(P), not O(L)); the remaining ``L mod P``
+layers are unrolled.  KV caches / recurrent states are stacked the same way
+and threaded through the scan as per-iteration inputs/outputs.
+
+Three entry points:
+  * ``forward(params, batch, cfg)``            -> logits (+aux) for train/prefill
+  * ``init_decode_state(cfg, batch, max_len)`` -> stacked caches
+  * ``decode_step(params, state, token, pos)`` -> logits, new state
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+from jax.ad_checkpoint import checkpoint_name
+
+from repro.configs.base import (ATTN, LOCAL_ATTN, MLSTM, MOE, RECURRENT,
+                                SLSTM, ModelConfig)
+from repro.models import layers as L
+from repro.models import moe as moe_lib
+from repro.models import rglru as rglru_lib
+from repro.models import xlstm as xlstm_lib
+from repro.sharding.ctx import constrain
+
+
+# --------------------------------------------------------------------------
+# init
+# --------------------------------------------------------------------------
+def init_layer(key, cfg: ModelConfig, kind: str):
+    ks = jax.random.split(key, 4)
+    p: Dict[str, Any] = {"norm1": L.init_norm(cfg.d_model,
+                                              "layernorm" if not cfg.causal else "rmsnorm")}
+    if kind in (ATTN, LOCAL_ATTN, MOE):
+        p["attn"] = L.init_attention(ks[0], cfg)
+    elif kind == RECURRENT:
+        p["rglru"] = rglru_lib.init_rglru_block(ks[0], cfg.d_model,
+                                                cfg.rglru_width, cfg.conv1d_width)
+    elif kind == MLSTM:
+        p["mlstm"] = xlstm_lib.init_mlstm(ks[0], cfg.d_model, cfg.num_heads)
+    elif kind == SLSTM:
+        p["slstm"] = xlstm_lib.init_slstm(ks[0], cfg.d_model, cfg.num_heads)
+    else:
+        raise ValueError(kind)
+    if kind == MOE:
+        p["norm2"] = L.init_norm(cfg.d_model)
+        p["moe"] = moe_lib.init_moe(ks[1], cfg.d_model, cfg.moe)
+    elif cfg.d_ff:
+        p["norm2"] = L.init_norm(cfg.d_model,
+                                 "layernorm" if not cfg.causal else "rmsnorm")
+        p["mlp"] = L.init_mlp(ks[1], cfg.d_model, cfg.d_ff, cfg.act)
+    return p
+
+
+def init_model(cfg: ModelConfig, key) -> Dict[str, Any]:
+    kinds = cfg.layer_kinds
+    P = len(cfg.block_pattern)
+    R = cfg.num_layers // P
+    kr, ke, kh, *kl = jax.random.split(key, 3 + cfg.num_layers)
+    params: Dict[str, Any] = {}
+    if cfg.modality_frontend != "audio":       # hubert consumes raw embeds
+        params["embed"] = L.dense_init(ke, (cfg.vocab_size, cfg.d_model))
+    # scanned stages: one stacked tree per pattern position
+    stages = []
+    for j in range(P):
+        keys = jnp.stack([jax.random.fold_in(kr, i * P + j) for i in range(R)])
+        stacked = jax.vmap(lambda k: init_layer(k, cfg, cfg.block_pattern[j]))(keys)
+        stages.append(stacked)
+    params["stages"] = tuple(stages)
+    params["rest"] = tuple(init_layer(kl[i], cfg, kinds[R * P + i])
+                           for i in range(cfg.num_layers - R * P))
+    params["final_norm"] = L.init_norm(
+        cfg.d_model, "layernorm" if not cfg.causal else "rmsnorm")
+    if not cfg.tie_embeddings:
+        params["lm_head"] = L.dense_init(kh, (cfg.d_model, cfg.vocab_size))
+    return params
+
+
+# --------------------------------------------------------------------------
+# layer application (full-sequence)
+# --------------------------------------------------------------------------
+def apply_layer(p, x, cfg: ModelConfig, kind: str, positions, use_flash=False):
+    x = constrain(x, "activation")
+    h = L.apply_norm(p["norm1"], x, cfg.norm_eps)
+    aux = jnp.zeros((), jnp.float32)
+    if kind in (ATTN, MOE):
+        h = L.attention_forward(p["attn"], h, cfg, "attn", positions, use_flash)
+    elif kind == LOCAL_ATTN:
+        h = L.attention_forward(p["attn"], h, cfg, "local", positions, use_flash)
+    elif kind == RECURRENT:
+        h = rglru_lib.rglru_block_forward(p["rglru"], h)
+    elif kind == MLSTM:
+        h = xlstm_lib.mlstm_forward(p["mlstm"], h, cfg.num_heads)
+    elif kind == SLSTM:
+        h = xlstm_lib.slstm_forward(p["slstm"], h, cfg.num_heads)
+    x = x + h
+    if kind == MOE:
+        h2, aux = moe_lib.apply_moe_auto(p["moe"],
+                                    L.apply_norm(p["norm2"], x, cfg.norm_eps), cfg.moe)
+        x = x + h2
+    elif cfg.d_ff:
+        x = x + L.apply_mlp(p["mlp"],
+                            L.apply_norm(p["norm2"], x, cfg.norm_eps), cfg.act)
+    return constrain(x, "activation"), aux
+
+
+def embed_inputs(params, batch, cfg: ModelConfig):
+    """Token / multimodal embedding.  batch keys:
+    tokens (B,S) | embeds (B,S,d) [audio] | + patch_embeds/patch_positions [vlm]
+    + positions ((B,S) or (3,B,S) for mrope)."""
+    if cfg.modality_frontend == "audio":
+        x = batch["embeds"]
+    else:
+        x = params["embed"].astype(jnp.dtype(cfg.dtype))[batch["tokens"]]
+        if cfg.tie_embeddings:
+            x = x * (cfg.d_model ** 0.5)  # gemma-style lookup scaling
+        if cfg.modality_frontend == "vision" and "patch_embeds" in batch:
+            B = x.shape[0]
+            x = x.at[jnp.arange(B)[:, None], batch["patch_positions"]].set(
+                batch["patch_embeds"].astype(x.dtype))
+    positions = batch.get("positions")
+    if positions is None:
+        S = x.shape[1]
+        positions = jnp.arange(S)[None, :]
+        if cfg.mrope:
+            positions = jnp.broadcast_to(positions[None], (3,) + x.shape[:2])
+    return x, positions
+
+
+def unembed(params, x, cfg: ModelConfig, normed: bool = False):
+    h = x if normed else L.apply_norm(params["final_norm"], x, cfg.norm_eps)
+    if cfg.tie_embeddings:
+        logits = h @ params["embed"].astype(h.dtype).T
+    else:
+        logits = h @ params["lm_head"].astype(h.dtype)
+    if cfg.logit_softcap:
+        logits = jnp.tanh(logits / cfg.logit_softcap) * cfg.logit_softcap
+    return constrain(logits, "logits")
+
+
+def forward(params, batch, cfg: ModelConfig, use_flash=False, remat=False):
+    """Full-sequence forward -> (logits (B,S,V), aux_loss)."""
+    x, positions = embed_inputs(params, batch, cfg)
+    x = constrain(x.astype(jnp.dtype(cfg.dtype)), "activation")
+    P = len(cfg.block_pattern)
+    R = cfg.num_layers // P
+    aux0 = jnp.zeros((), jnp.float32)
+
+    x, aux0 = _run_stages(params, x, aux0, cfg, positions, use_flash, remat)
+    kinds = cfg.layer_kinds
+    for i, p in enumerate(params["rest"]):
+        x, a = apply_layer(p, x, cfg, kinds[R * P + i], positions, use_flash)
+        aux0 = aux0 + a
+    return unembed(params, x, cfg), aux0
+
+
+# --------------------------------------------------------------------------
+# losses
+# --------------------------------------------------------------------------
+def _ce_chunk(h_chunk, targets, mask, params, cfg):
+    """Cross-entropy for one sequence chunk; logits never escape the chunk.
+
+    The one-hot select fuses into the reductions (no (B,c,V) temp survives)
+    and no vocab gather is emitted (a gather would all-gather the
+    vocab-sharded logits)."""
+    logits = unembed(params, h_chunk, cfg, normed=True)  # h already norm'd
+    lf = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    V = logits.shape[-1]
+    onehot = (targets[..., None] ==
+              jax.lax.broadcasted_iota(jnp.int32, (1, 1, V), 2))
+    correct = jnp.sum(jnp.where(onehot, lf, 0.0), axis=-1)
+    nll = (lse - correct) * mask
+    return jnp.sum(nll), jnp.sum(mask)
+
+
+def chunked_ce(params, h, targets, mask, cfg: ModelConfig, chunk=1024):
+    """Sequence-chunked, rematerialized CE: peak temp is one chunk's logits
+    instead of the full (B,S,V)."""
+    B, S, d = h.shape
+    c = min(chunk, S)
+    nc = S // c
+    rem = S - nc * c
+
+    f = jax.checkpoint(lambda hc, tc, mc: _ce_chunk(hc, tc, mc, params, cfg),
+                       policy=jax.checkpoint_policies.nothing_saveable)
+
+    def step(carry, inp):
+        tot, cnt = carry
+        hc, tc, mc = inp
+        s, n = f(hc, tc, mc)
+        return (tot + s, cnt + n), None
+
+    hs = jnp.moveaxis(h[:, : nc * c].reshape(B, nc, c, d), 1, 0)
+    ts = jnp.moveaxis(targets[:, : nc * c].reshape(B, nc, c), 1, 0)
+    ms = jnp.moveaxis(mask[:, : nc * c].reshape(B, nc, c), 1, 0)
+    (tot, cnt), _ = jax.lax.scan(step, (jnp.zeros(()), jnp.zeros(())),
+                                 (hs, ts, ms))
+    if rem:
+        s, n = f(h[:, nc * c:], targets[:, nc * c:], mask[:, nc * c:])
+        tot, cnt = tot + s, cnt + n
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+def _remat_groups(R: int) -> int:
+    """Pick G for two-level (sqrt-style) remat: carries saved = G + R/G
+    instead of R.  Returns 1 (single level) when R is small or prime."""
+    if R < 20:
+        return 1
+    best, best_cost = 1, R + 1
+    for g in range(2, R):
+        if R % g == 0 and g + R // g < best_cost:
+            best, best_cost = g, g + R // g
+    return best
+
+
+def _run_stages(params, x, aux0, cfg, positions, use_flash, remat):
+    """Scan over pattern repetitions with optional two-level remat."""
+    P = len(cfg.block_pattern)
+    R = cfg.num_layers // P
+    if R == 0:
+        return x, aux0
+    if remat:
+        # scan unifies carry sharding with the INITIAL carry: constrain it
+        # d-sharded so the saved carry history is stored sharded where the
+        # partitioner allows (see DESIGN.md §8 on the CPU-backend caveat)
+        x = constrain(x, "residual")
+
+    def rep(carry, stage_params):
+        x, aux = carry
+        for j, kind in enumerate(cfg.block_pattern):
+            x, a = apply_layer(stage_params[j], x, cfg, kind, positions,
+                               use_flash)
+            aux = aux + a
+        x = checkpoint_name(constrain(x, "residual"), "resid")
+        return (x, aux), None
+
+    G = _remat_groups(R) if remat else 1
+    if remat:
+        rep = jax.checkpoint(
+            rep, policy=jax.checkpoint_policies.save_only_these_names("resid"))
+    if G > 1:
+        K = R // G
+        grouped = jax.tree.map(
+            lambda a: a.reshape((G, K) + a.shape[1:]), params["stages"])
+
+        def group(carry, group_params):
+            (x, aux), _ = jax.lax.scan(rep, carry, group_params)
+            # only group-boundary carries persist; inner "resid" saves are
+            # transient (recreated during this group's backward recompute)
+            x = checkpoint_name(x, "group_resid")
+            return (x, aux), None
+
+        group = jax.checkpoint(
+            group,
+            policy=jax.checkpoint_policies.save_only_these_names("group_resid"))
+        (x, aux0), _ = jax.lax.scan(group, (x, aux0), grouped)
+    else:
+        (x, aux0), _ = jax.lax.scan(rep, (x, aux0), params["stages"])
+    return x, aux0
+
+
+def forward_hidden(params, batch, cfg: ModelConfig, use_flash=False,
+                   remat=False):
+    """Like ``forward`` but stops at the final norm'd hidden states."""
+    x, positions = embed_inputs(params, batch, cfg)
+    x = constrain(x.astype(jnp.dtype(cfg.dtype)), "activation")
+    P = len(cfg.block_pattern)
+    R = cfg.num_layers // P
+    aux0 = jnp.zeros((), jnp.float32)
+    x, aux0 = _run_stages(params, x, aux0, cfg, positions, use_flash, remat)
+    kinds = cfg.layer_kinds
+    for i, p in enumerate(params["rest"]):
+        x, a = apply_layer(p, x, cfg, kinds[R * P + i], positions, use_flash)
+        aux0 = aux0 + a
+    return L.apply_norm(params["final_norm"], x, cfg.norm_eps), aux0
+
+
+def lm_loss(params, batch, cfg: ModelConfig, use_flash=False, remat=False):
+    """Next-token (causal) or masked-prediction (encoder) cross-entropy,
+    sequence-chunked so full (B,S,V) logits are never materialized."""
+    h, aux = forward_hidden(params, batch, cfg, use_flash, remat)
+    if cfg.causal:
+        h = h[:, :-1]
+        targets = batch["tokens"][:, 1:] if "tokens" in batch else batch["targets"][:, 1:]
+        mask = jnp.ones(targets.shape, jnp.float32)
+    else:
+        targets = batch["targets"]
+        mask = batch.get("target_mask", jnp.ones(targets.shape, jnp.float32))
+    loss = chunked_ce(params, h, targets, mask, cfg)
+    return loss + aux, (loss, aux)
+
+
+# --------------------------------------------------------------------------
+# decode
+# --------------------------------------------------------------------------
+def _init_layer_state(cfg, kind, batch, max_len, dtype):
+    if kind in (ATTN, MOE):
+        return L.init_kv_cache(cfg, "attn", batch, max_len, dtype)
+    if kind == LOCAL_ATTN:
+        return L.init_kv_cache(cfg, "local", batch, max_len, dtype)
+    if kind == RECURRENT:
+        return rglru_lib.init_rglru_state(cfg, batch, dtype)
+    if kind == MLSTM:
+        return xlstm_lib.init_mlstm_state(cfg.d_model, cfg.num_heads, batch)
+    if kind == SLSTM:
+        return xlstm_lib.init_slstm_state(cfg.d_model, cfg.num_heads, batch)
+    raise ValueError(kind)
+
+
+def init_decode_state(cfg: ModelConfig, batch: int, max_len: int,
+                      dtype=None) -> Dict[str, Any]:
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    P = len(cfg.block_pattern)
+    R = cfg.num_layers // P
+    stages = []
+    for j, kind in enumerate(cfg.block_pattern):
+        one = _init_layer_state(cfg, kind, batch, max_len, dtype)
+        stages.append(jax.tree.map(lambda a: jnp.broadcast_to(a, (R,) + a.shape), one))
+    kinds = cfg.layer_kinds
+    rest = tuple(_init_layer_state(cfg, kinds[R * P + i], batch, max_len, dtype)
+                 for i in range(cfg.num_layers - R * P))
+    return {"stages": tuple(stages), "rest": rest}
+
+
+def apply_layer_decode(p, x, state, pos, cfg: ModelConfig, kind: str):
+    h = L.apply_norm(p["norm1"], x, cfg.norm_eps)
+    if kind in (ATTN, MOE):
+        h, state = L.attention_decode(p["attn"], h, state, pos, cfg, "attn")
+    elif kind == LOCAL_ATTN:
+        h, state = L.attention_decode(p["attn"], h, state, pos, cfg, "local")
+    elif kind == RECURRENT:
+        h, state = rglru_lib.rglru_block_decode(p["rglru"], h, state)
+    elif kind == MLSTM:
+        h, state = xlstm_lib.mlstm_decode(p["mlstm"], h, state, cfg.num_heads)
+    elif kind == SLSTM:
+        h, state = xlstm_lib.slstm_decode(p["slstm"], h, state, cfg.num_heads)
+    x = x + h
+    if kind == MOE:
+        h2, _ = moe_lib.apply_moe_auto(p["moe"],
+                                  L.apply_norm(p["norm2"], x, cfg.norm_eps), cfg.moe)
+        x = x + h2
+    elif cfg.d_ff:
+        x = x + L.apply_mlp(p["mlp"],
+                            L.apply_norm(p["norm2"], x, cfg.norm_eps), cfg.act)
+    return x, state
+
+
+def decode_step(params, state, tokens, pos, cfg: ModelConfig):
+    """One decode step.  tokens: (B,) int32; pos: scalar int32.
+    Returns (logits (B,V), new_state)."""
+    x = params["embed"].astype(jnp.dtype(cfg.dtype))[tokens][:, None]  # (B,1,d)
+    if cfg.tie_embeddings:
+        x = x * (cfg.d_model ** 0.5)
+    P = len(cfg.block_pattern)
+    R = cfg.num_layers // P
+
+    if R > 0:
+        def rep(x, inp):
+            stage_params, stage_states = inp
+            new_states = []
+            for j, kind in enumerate(cfg.block_pattern):
+                x, ns = apply_layer_decode(stage_params[j], x, stage_states[j],
+                                           pos, cfg, kind)
+                new_states.append(ns)
+            return x, tuple(new_states)
+
+        x, new_stage_states = jax.lax.scan(
+            rep, x, (params["stages"], state["stages"]))
+    else:
+        new_stage_states = state["stages"]
+    kinds = cfg.layer_kinds
+    new_rest = []
+    for i, p in enumerate(params["rest"]):
+        x, ns = apply_layer_decode(p, x, state["rest"][i], pos, cfg,
+                                   kinds[R * P + i])
+        new_rest.append(ns)
+    logits = unembed(params, x, cfg)[:, 0]
+    return logits, {"stages": new_stage_states, "rest": tuple(new_rest)}

@@ -1,0 +1,193 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (matrix memory, parallelizable)
+and sLSTM (scalar memory, recurrent gating).
+
+mLSTM train/prefill uses the parallel (attention-like) form with the
+stabilized exponential gating; decode uses the recurrent form with carried
+(C, n, m) state.  sLSTM is inherently sequential -> lax.scan over time.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+
+
+# ---------------------------------------------------------------- mLSTM ----
+def init_mlstm(key, d, num_heads):
+    ks = jax.random.split(key, 7)
+    return {
+        "wq": dense_init(ks[0], (d, d)),
+        "wk": dense_init(ks[1], (d, d)),
+        "wv": dense_init(ks[2], (d, d)),
+        "wi": dense_init(ks[3], (d, num_heads)),
+        "bi": jnp.zeros((num_heads,), jnp.float32),
+        "wf": dense_init(ks[4], (d, num_heads)),
+        "bf": jnp.ones((num_heads,), jnp.float32) * 3.0,  # open forget gates
+        "wog": dense_init(ks[5], (d, d)),
+        "wout": dense_init(ks[6], (d, d)),
+    }
+
+
+def mlstm_forward(p, x, num_heads, chunk=256):
+    from repro.sharding.ctx import current_policy
+    pol = current_policy()
+    if pol and pol.get("probe_full_blocks"):
+        chunk = x.shape[1]   # single chunk: correct scan-body flop counting
+    """Chunkwise-parallel form (exactly matches the recurrent form).
+
+    x: (B, S, d).  Scans over chunks of length ``chunk`` carrying the
+    (C, n, m) state; within a chunk the (c, c) decay matrix is materialized.
+    Peak intermediate is O(B * c^2 * H) instead of O(B * S^2 * H).
+    """
+    B, S, d = x.shape
+    H, hd = num_heads, d // num_heads
+    c = min(chunk, S)
+    assert S % c == 0, (S, c)
+    q = (x @ p["wq"].astype(x.dtype)).reshape(B, S, H, hd).astype(jnp.float32)
+    k = (x @ p["wk"].astype(x.dtype)).reshape(B, S, H, hd).astype(jnp.float32) / math.sqrt(hd)
+    v = (x @ p["wv"].astype(x.dtype)).reshape(B, S, H, hd).astype(jnp.float32)
+    og = jax.nn.sigmoid(x @ p["wog"].astype(x.dtype))
+    itil = (x @ p["wi"].astype(x.dtype)).astype(jnp.float32) + p["bi"]   # (B,S,H)
+    logf = jax.nn.log_sigmoid(
+        (x @ p["wf"].astype(x.dtype)).astype(jnp.float32) + p["bf"])
+
+    nc = S // c
+    def to_chunks(a):  # (B,S,...) -> (nc, B, c, ...)
+        return jnp.moveaxis(a.reshape(B, nc, c, *a.shape[2:]), 1, 0)
+
+    qc, kc, vc, ic, fc = map(to_chunks, (q, k, v, itil, logf))
+    tri = jnp.tril(jnp.ones((c, c), bool))
+
+    def step(state, inp):
+        C0, n0, m0 = state["C"], state["n"], state["m"]   # (B,H,hd,hd),(B,H,hd),(B,H)
+        qt, kt, vt, it_, ft = inp                          # (B,c,H,*)
+        F = jnp.cumsum(ft, axis=1)                         # (B,c,H) inclusive
+        g = F + m0[:, None, :]                             # (B,c,H)
+        Dtil = F[:, :, None, :] - F[:, None, :, :] + it_[:, None, :, :]
+        Dtil = jnp.where(tri[None, :, :, None], Dtil, -jnp.inf)
+        m = jnp.maximum(g, jnp.max(Dtil, axis=2))          # (B,c,H) recurrent m_t
+        D = jnp.exp(Dtil - m[:, :, None, :])               # (B,c,c,H)
+        qk = jnp.einsum("bshd,bthd->bsth", qt, kt)
+        Cmat = qk * D                                      # (B,c,c,H)
+        inter_scale = jnp.exp(g - m)                       # (B,c,H)
+        num = jnp.einsum("bsth,bthd->bshd", Cmat, vt) + \
+            inter_scale[..., None] * jnp.einsum("bhde,bshe->bshd", C0, qt)
+        nvec = jnp.einsum("bsth,bthd->bshd", D, kt) + \
+            inter_scale[..., None] * n0[:, None]
+        den = jnp.maximum(jnp.abs(jnp.einsum("bshd,bshd->bsh", nvec, qt)),
+                          jnp.exp(-m))
+        h = num / den[..., None]                           # (B,c,H,hd)
+        # chunk-end state (at local index c-1)
+        mc = m[:, -1]                                      # (B,H)
+        w_end = jnp.exp(F[:, -1:, :] - F + it_ - mc[:, None])  # (B,c,H)
+        C_new = jnp.exp(F[:, -1] + m0 - mc)[..., None, None] * C0 + \
+            jnp.einsum("bth,bthd,bthe->bhde", w_end, vt, kt)
+        n_new = jnp.exp(F[:, -1] + m0 - mc)[..., None] * n0 + \
+            jnp.einsum("bth,bthd->bhd", w_end, kt)
+        return {"C": C_new, "n": n_new, "m": mc}, h
+
+    state0 = init_mlstm_state(d, H, B)
+    # save only the (C, n, m) chunk carries; recompute D in backward
+    step = jax.checkpoint(step, policy=jax.checkpoint_policies.nothing_saveable)
+    _, hs = jax.lax.scan(step, state0, (qc, kc, vc, ic, fc))
+    h = jnp.moveaxis(hs, 0, 1).reshape(B, S, d).astype(x.dtype) * og
+    return h @ p["wout"].astype(x.dtype)
+
+
+def init_mlstm_state(d, num_heads, batch):
+    hd = d // num_heads
+    return {"C": jnp.zeros((batch, num_heads, hd, hd), jnp.float32),
+            "n": jnp.zeros((batch, num_heads, hd), jnp.float32),
+            "m": jnp.full((batch, num_heads), -1e30, jnp.float32)}
+
+
+def mlstm_decode(p, x, state, num_heads):
+    """Recurrent form, one step. x: (B, 1, d)."""
+    B, _, d = x.shape
+    H, hd = num_heads, d // num_heads
+    q = (x @ p["wq"].astype(x.dtype)).reshape(B, H, hd).astype(jnp.float32)
+    k = (x @ p["wk"].astype(x.dtype)).reshape(B, H, hd).astype(jnp.float32) / math.sqrt(hd)
+    v = (x @ p["wv"].astype(x.dtype)).reshape(B, H, hd).astype(jnp.float32)
+    og = jax.nn.sigmoid(x @ p["wog"].astype(x.dtype))[:, 0]
+    itil = (x @ p["wi"].astype(x.dtype)).astype(jnp.float32)[:, 0] + p["bi"]  # (B,H)
+    ftil = (x @ p["wf"].astype(x.dtype)).astype(jnp.float32)[:, 0] + p["bf"]
+    logf = jax.nn.log_sigmoid(ftil)
+    m_new = jnp.maximum(logf + state["m"], itil)
+    fprime = jnp.exp(logf + state["m"] - m_new)
+    iprime = jnp.exp(itil - m_new)
+    C = fprime[..., None, None] * state["C"] + iprime[..., None, None] * \
+        jnp.einsum("bhd,bhe->bhde", v, k)
+    n = fprime[..., None] * state["n"] + iprime[..., None] * k
+    num = jnp.einsum("bhde,bhe->bhd", C, q)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", n, q)), jnp.exp(-m_new))
+    h = (num / den[..., None]).reshape(B, d).astype(x.dtype) * og
+    y = (h @ p["wout"].astype(x.dtype))[:, None]
+    return y, {"C": C, "n": n, "m": m_new}
+
+
+# ---------------------------------------------------------------- sLSTM ----
+def init_slstm(key, d, num_heads):
+    hd = d // num_heads
+    ks = jax.random.split(key, 9)
+    p = {"wout": dense_init(ks[8], (d, d))}
+    for i, g in enumerate(("z", "i", "f", "o")):
+        p[f"w{g}"] = dense_init(ks[2 * i], (d, d))
+        # block-diagonal recurrent weights: (H, hd, hd)
+        p[f"r{g}"] = dense_init(ks[2 * i + 1], (num_heads, hd, hd), in_axis=1) * 0.1
+        p[f"b{g}"] = (jnp.ones((d,), jnp.float32) * 2.0 if g == "f"
+                      else jnp.zeros((d,), jnp.float32))
+    return p
+
+
+def init_slstm_state(d, num_heads, batch):
+    return {"c": jnp.zeros((batch, d), jnp.float32),
+            "n": jnp.ones((batch, d), jnp.float32),
+            "h": jnp.zeros((batch, d), jnp.float32),
+            "m": jnp.zeros((batch, d), jnp.float32)}
+
+
+def _slstm_step(p, state, xt, num_heads):
+    """xt: (B, d) pre-computed input projections applied outside? No: raw."""
+    B, d = xt.shape
+    H, hd = num_heads, d // num_heads
+    hprev = state["h"].reshape(B, H, hd)
+
+    def rec(g):
+        return jnp.einsum("bhe,hed->bhd", hprev, p[f"r{g}"]).reshape(B, d)
+
+    xt32 = xt.astype(jnp.float32)
+    z = jnp.tanh(xt32 @ p["wz"] + rec("z") + p["bz"])
+    itil = xt32 @ p["wi"] + rec("i") + p["bi"]
+    ftil = xt32 @ p["wf"] + rec("f") + p["bf"]
+    o = jax.nn.sigmoid(xt32 @ p["wo"] + rec("o") + p["bo"])
+    logf = jax.nn.log_sigmoid(ftil)
+    m_new = jnp.maximum(logf + state["m"], itil)
+    iprime = jnp.exp(itil - m_new)
+    fprime = jnp.exp(logf + state["m"] - m_new)
+    c = fprime * state["c"] + iprime * z
+    n = jnp.maximum(fprime * state["n"] + iprime, 1e-6)
+    h = o * c / n
+    return {"c": c, "n": n, "h": h, "m": m_new}
+
+
+def slstm_forward(p, x, num_heads):
+    """x: (B, S, d), sequential scan over time."""
+    B, S, d = x.shape
+    state0 = init_slstm_state(d, num_heads, B)
+
+    def step(state, xt):
+        new = _slstm_step(p, state, xt, num_heads)
+        return new, new["h"]
+
+    _, hs = jax.lax.scan(step, state0, jnp.moveaxis(x, 1, 0))
+    h = jnp.moveaxis(hs, 0, 1).astype(x.dtype)
+    return h @ p["wout"].astype(x.dtype)
+
+
+def slstm_decode(p, x, state, num_heads):
+    new = _slstm_step(p, state, x[:, 0], num_heads)
+    y = (new["h"].astype(x.dtype) @ p["wout"].astype(x.dtype))[:, None]
+    return y, new

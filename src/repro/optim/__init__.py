@@ -1,0 +1,2 @@
+from repro.optim.optimizers import (adam, apply_updates, get_optimizer,
+                                    rowwise_adagrad, sgd)

@@ -1,0 +1,103 @@
+"""Optimizers from scratch (no optax): SGD, Adam(W), row-wise Adagrad.
+
+API mirrors optax: ``init(params) -> state``, ``update(grads, state, params)
+-> (updates, state)``; apply with ``apply_updates``.  Row-wise Adagrad is the
+standard choice for DLRM embedding tables (one accumulator scalar per row),
+and its state shards identically to the table, which matters for CPR:
+partial recovery must restore the *optimizer state* of a failed shard too.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any], Any]  # (grads, state, params) -> (updates, state)
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: (p + u).astype(p.dtype), params, updates)
+
+
+def sgd(lr: float, momentum: float = 0.0) -> Optimizer:
+    def init(params):
+        if momentum:
+            return {"mu": jax.tree.map(jnp.zeros_like, params)}
+        return {}
+
+    def update(grads, state, params=None):
+        if momentum:
+            mu = jax.tree.map(lambda m, g: momentum * m + g, state["mu"], grads)
+            return jax.tree.map(lambda m: -lr * m, mu), {"mu": mu}
+        return jax.tree.map(lambda g: -lr * g, grads), state
+
+    return Optimizer(init, update)
+
+
+def adam(lr: float, b1=0.9, b2=0.999, eps=1e-8, weight_decay=0.0) -> Optimizer:
+    def init(params):
+        return {"m": jax.tree.map(jnp.zeros_like, params),
+                "v": jax.tree.map(jnp.zeros_like, params),
+                "t": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params=None):
+        t = state["t"] + 1
+        m = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state["m"], grads)
+        v = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * g * g, state["v"], grads)
+        bc1 = 1 - b1 ** t.astype(jnp.float32)
+        bc2 = 1 - b2 ** t.astype(jnp.float32)
+
+        def upd(m, v, p):
+            u = -lr * (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+            if weight_decay and p is not None:
+                u = u - lr * weight_decay * p
+            return u
+
+        if weight_decay:
+            updates = jax.tree.map(upd, m, v, params)
+        else:
+            updates = jax.tree.map(lambda m, v: upd(m, v, None), m, v)
+        return updates, {"m": m, "v": v, "t": t}
+
+    return Optimizer(init, update)
+
+
+def rowwise_adagrad(lr: float, eps: float = 1e-8) -> Optimizer:
+    """DLRM-style: for >=2-D params keep one accumulator per row (mean of
+    squared grads over the row), for 1-D params a per-element accumulator."""
+
+    def _acc_like(p):
+        if p.ndim >= 2:
+            return jnp.zeros(p.shape[:1], jnp.float32)
+        return jnp.zeros_like(p, jnp.float32)
+
+    def init(params):
+        return {"acc": jax.tree.map(_acc_like, params)}
+
+    def update(grads, state, params=None):
+        def upd(g, a):
+            if g.ndim >= 2:
+                a_new = a + jnp.mean(jnp.square(g), axis=tuple(range(1, g.ndim)))
+                scale = jax.lax.rsqrt(a_new + eps)
+                u = -lr * g * scale.reshape(scale.shape + (1,) * (g.ndim - 1))
+            else:
+                a_new = a + jnp.square(g)
+                u = -lr * g * jax.lax.rsqrt(a_new + eps)
+            return u, a_new
+
+        flat_g, tdef = jax.tree.flatten(grads)
+        flat_a = tdef.flatten_up_to(state["acc"])
+        out = [upd(g, a) for g, a in zip(flat_g, flat_a)]
+        updates = tdef.unflatten([u for u, _ in out])
+        acc = tdef.unflatten([a for _, a in out])
+        return updates, {"acc": acc}
+
+    return Optimizer(init, update)
+
+
+def get_optimizer(name: str, lr: float, **kw) -> Optimizer:
+    return {"sgd": sgd, "adam": adam, "rowwise_adagrad": rowwise_adagrad}[name](lr, **kw)

@@ -1,0 +1,203 @@
+"""Sharding rules: param/input/state PartitionSpecs for every architecture.
+
+Mesh axes: ``("data", "model")`` single pod, ``("pod", "data", "model")``
+multi-pod.  Strategy (see DESIGN.md §6):
+
+  * batch           -> ("pod", "data")   (pure DP over the pod axis)
+  * weight matrices -> FSDP on the input dim over "data", tensor-parallel on
+                       the output dim over "model" (2-D sharding keeps 70B+
+                       params + Adam state within HBM)
+  * vocab dims      -> "model"  (the Emb-PS analogue: CPR's unit of recovery)
+  * MoE experts     -> "model" when divisible (expert parallel), else the
+                       per-expert FFN dim (tensor-parallel experts)
+  * KV caches       -> kv-heads over "model" when divisible; for B=1
+                       long-context decode the cache *sequence* dim shards
+                       over "data" (distributed attention over the cache)
+
+Every rule is divisibility-guarded: a dim that does not divide its mesh axis
+is left unsharded rather than failing (10/28/40-head attention projections
+shard their flattened head*dim columns instead of the head axis).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def _axis_size(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, (tuple, list)):
+        out = 1
+        for a in axis:
+            out *= dict(zip(mesh.axis_names, mesh.devices.shape))[a]
+        return out
+    return dict(zip(mesh.axis_names, mesh.devices.shape))[axis]
+
+
+def guard(mesh: Mesh, shape, spec: P) -> P:
+    """Drop any spec entry whose dim is not divisible by the axis size."""
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    out = []
+    for dim, axis in zip(shape, entries):
+        out.append(axis if axis and dim % _axis_size(mesh, axis) == 0 else None)
+    return P(*out)
+
+
+def batch_axes(mesh: Mesh):
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+FSDP = "data"     # FSDP shards stay within a pod (ICI, not DCN)
+TP = "model"
+
+
+def _lm_param_spec(path, leaf, mesh: Mesh) -> P:
+    """Rule table for transformer params keyed on the leaf's key path."""
+    keys = [getattr(k, "key", getattr(k, "idx", None)) for k in path]
+    name = keys[-1] if isinstance(keys[-1], str) else keys[-2]
+    stacked = "stages" in keys  # leading (R,) axis from scan stacking
+    nd = leaf.ndim - (1 if stacked else 0)
+
+    def mk(*spec):
+        spec = spec + (None,) * (nd - len(spec))
+        full = ((None,) + spec) if stacked else spec
+        return guard(mesh, leaf.shape, P(*full))
+
+    if name in ("embed",):
+        return mk(TP, FSDP)
+    if name in ("lm_head",):
+        return mk(FSDP, TP)
+    if name == "wo" and "attn" in keys:             # attention out-proj
+        return mk(TP, FSDP)
+    if name in ("wq", "wk", "wv", "w_gate", "w_up", "w_x", "wog", "wi", "wf",
+                "wz", "wo", "w_a", "w_i"):
+        return mk(FSDP, TP)
+    if name in ("wout", "w_down", "w_out"):
+        return mk(TP, FSDP)
+    if name in ("bq", "bk", "bv"):
+        return mk(TP)
+    if name == "router":
+        return mk(FSDP, None)
+    if name in ("rz", "ri", "rf", "ro"):           # sLSTM (H, hd, hd)
+        return mk(None, None, TP)
+    if name == "conv_w":
+        return mk(None, TP)
+    if name in ("log_lambda", "b_a", "b_i", "conv_b"):
+        return mk(TP)
+    if isinstance(name, str) and name.startswith("b"):
+        return mk(None)
+    if name in ("scale", "bias"):
+        return mk(None)
+    return mk(*([None] * nd))
+
+
+def _moe_param_spec(path, leaf, mesh: Mesh, num_experts: int) -> P:
+    keys = [getattr(k, "key", getattr(k, "idx", None)) for k in path]
+    name = next((k for k in reversed(keys) if isinstance(k, str)), None)
+    stacked = "stages" in keys
+    nd = leaf.ndim - (1 if stacked else 0)
+    ep = num_experts % _axis_size(mesh, TP) == 0
+
+    def mk(*spec):
+        spec = spec + (None,) * (nd - len(spec))
+        full = ((None,) + spec) if stacked else spec
+        return guard(mesh, leaf.shape, P(*full))
+
+    if name in ("w_gate", "w_up") and nd == 3:      # (E, d, f)
+        return mk(TP, FSDP, None) if ep else mk(None, FSDP, TP)
+    if name == "w_down" and nd == 3:                # (E, f, d)
+        return mk(TP, None, FSDP) if ep else mk(None, TP, FSDP)
+    return _lm_param_spec(path, leaf, mesh)
+
+
+def lm_param_specs(params, cfg, mesh: Mesh):
+    """PartitionSpec pytree matching a transformer param tree."""
+    def rule(path, leaf):
+        keys = [getattr(k, "key", getattr(k, "idx", None)) for k in path]
+        if cfg.moe is not None and ("moe" in keys):
+            return _moe_param_spec(path, leaf, mesh, cfg.moe.num_experts)
+        return _lm_param_spec(path, leaf, mesh)
+
+    return jax.tree_util.tree_map_with_path(rule, params)
+
+
+def lm_input_specs(batch_tree, mesh: Mesh):
+    """Shard every batch leaf's leading batch dim over (pod, data)."""
+    dp = batch_axes(mesh)
+
+    def rule(path, leaf):
+        keys = [getattr(k, "key", None) for k in path]
+        if "positions" in keys and leaf.ndim == 3:   # (3, B, S) mrope
+            return guard(mesh, leaf.shape, P(None, dp, None))
+        return guard(mesh, leaf.shape, P(dp, *([None] * (leaf.ndim - 1))))
+
+    return jax.tree_util.tree_map_with_path(rule, batch_tree)
+
+
+def decode_state_specs(state_tree, cfg, mesh: Mesh, batch: int):
+    """Caches / recurrent states.  Stacked leaves carry a leading (R,) axis.
+
+    kv caches (B, W, kv, hd): batch over dp when divisible; otherwise the
+    sequence dim W shards over "data" (distributed cache attention) and kv
+    heads over "model" when divisible.
+    """
+    dp = batch_axes(mesh)
+    batch_shardable = batch % _axis_size(mesh, dp) == 0
+
+    def rule(path, leaf):
+        keys = [getattr(k, "key", getattr(k, "idx", None)) for k in path]
+        name = next((k for k in reversed(keys) if isinstance(k, str)), None)
+        stacked = "stages" in keys
+        nd = leaf.ndim - (1 if stacked else 0)
+
+        def mk(*spec):
+            spec = spec + (None,) * (nd - len(spec))
+            full = ((None,) + spec) if stacked else spec
+            return guard(mesh, leaf.shape, P(*full))
+
+        if name in ("k", "v") and nd == 4:          # (B, W, kv, hd)
+            W, kv = (leaf.shape[-3], leaf.shape[-2])
+            kv_ok = kv % _axis_size(mesh, TP) == 0
+            if batch_shardable:
+                # kv heads rarely divide the model axis (4..10 heads vs 16):
+                # shard the cache *sequence* dim over "model" instead and let
+                # SPMD insert the softmax-stat collectives (distributed
+                # attention over the sharded cache).
+                return mk(dp, None, TP, None) if kv_ok else mk(dp, TP, None, None)
+            return mk(None, FSDP, TP, None) if kv_ok else mk(None, (FSDP, TP), None, None)
+        if name == "C" and nd == 4:                  # mLSTM (B, H, hd, hd)
+            return mk(dp if batch_shardable else None, None, TP, None)
+        if name in ("n",) and nd == 3:
+            return mk(dp if batch_shardable else None, None, TP)
+        if name in ("h", "c", "n", "m") and nd == 2:  # (B, w) / (B, d)
+            return mk(dp if batch_shardable else None, TP)
+        if name == "conv" and nd == 3:               # (B, K-1, w)
+            return mk(dp if batch_shardable else None, None, TP)
+        if nd >= 1:
+            return mk(dp if batch_shardable else None)
+        return mk()
+
+    return jax.tree_util.tree_map_with_path(rule, state_tree)
+
+
+def dlrm_param_specs(params, mesh: Mesh):
+    """DLRM: tables row-sharded over "model" (the Emb-PS partitioning),
+    MLPs replicated (data-parallel trainers)."""
+    def rule(path, leaf):
+        keys = [getattr(k, "key", getattr(k, "idx", None)) for k in path]
+        if "tables" in keys and leaf.ndim == 2:
+            return guard(mesh, leaf.shape, P(TP, None))
+        if "tables" in keys and leaf.ndim == 1:      # rowwise adagrad acc
+            return guard(mesh, leaf.shape, P(TP))
+        return P(*([None] * leaf.ndim))
+
+    return jax.tree_util.tree_map_with_path(rule, params)
+
+
+def to_shardings(spec_tree, mesh: Mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))

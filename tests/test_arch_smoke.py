@@ -1,0 +1,104 @@
+"""Per-architecture smoke tests (brief §f): a REDUCED variant of each
+assigned architecture (2 layers, d_model<=512, <=4 experts) runs one forward
+and one train step on CPU; output shapes and finiteness are asserted."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, list_archs
+from repro.models import transformer as T
+from repro.optim.optimizers import apply_updates, get_optimizer
+
+B, S = 2, 32
+
+
+def make_batch(cfg, key):
+    batch = {}
+    if cfg.modality_frontend == "audio":
+        batch["embeds"] = jax.random.normal(key, (B, S, cfg.d_model))
+        batch["targets"] = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+        batch["target_mask"] = jnp.ones((B, S), jnp.float32)
+    else:
+        batch["tokens"] = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+        if cfg.modality_frontend == "vision":
+            P = S // 4
+            batch["patch_embeds"] = jax.random.normal(key, (B, P, cfg.d_model))
+            batch["patch_positions"] = jnp.tile(jnp.arange(P), (B, 1))
+            batch["positions"] = jnp.broadcast_to(
+                jnp.arange(S)[None, None], (3, B, S)).astype(jnp.int32)
+    return batch
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_reduced_forward_shapes(arch):
+    cfg = get_config(arch).reduced()
+    assert cfg.num_layers == 2 and cfg.d_model <= 512
+    if cfg.moe:
+        assert cfg.moe.num_experts <= 4
+    params = T.init_model(cfg, jax.random.PRNGKey(0))
+    batch = make_batch(cfg, jax.random.PRNGKey(1))
+    logits, aux = T.forward(params, batch, cfg)
+    assert logits.shape == (B, S, cfg.vocab_size)
+    assert bool(jnp.isfinite(logits).all()), "NaN/Inf in logits"
+    assert bool(jnp.isfinite(aux))
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_reduced_train_step(arch):
+    cfg = get_config(arch).reduced()
+    params = T.init_model(cfg, jax.random.PRNGKey(0))
+    batch = make_batch(cfg, jax.random.PRNGKey(1))
+    opt = get_optimizer("adam", 1e-3)
+    ostate = opt.init(params)
+
+    @jax.jit
+    def step(params, ostate, batch):
+        (loss, _), grads = jax.value_and_grad(
+            lambda p: T.lm_loss(p, batch, cfg), has_aux=True)(params)
+        updates, ostate = opt.update(grads, ostate, params)
+        return apply_updates(params, updates), ostate, loss
+
+    params2, ostate2, loss1 = step(params, ostate, batch)
+    _, _, loss2 = step(params2, ostate2, batch)
+    assert np.isfinite(float(loss1)) and np.isfinite(float(loss2))
+    # one adam step on the same batch should not explode the loss
+    assert float(loss2) < float(loss1) + 1.0
+
+
+@pytest.mark.parametrize("arch", [a for a in list_archs()
+                                  if get_config(a).supports_decode])
+def test_reduced_decode_matches_prefill(arch):
+    cfg = get_config(arch).reduced()
+    params = T.init_model(cfg, jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(2), (B, 16), 0,
+                              cfg.vocab_size)
+    logits_full, _ = T.forward(params, {"tokens": toks}, cfg)
+    state = T.init_decode_state(cfg, B, max_len=16, dtype=jnp.float32)
+    step = jax.jit(lambda p, s, t, i: T.decode_step(p, s, t, i, cfg))
+    for i in range(16):
+        logits_dec, state = step(params, state, toks[:, i], jnp.int32(i))
+    np.testing.assert_allclose(np.asarray(logits_dec),
+                               np.asarray(logits_full[:, -1]),
+                               rtol=2e-2, atol=2e-3)
+
+
+def test_encoder_has_no_decode():
+    cfg = get_config("hubert-xlarge")
+    assert not cfg.supports_decode
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_param_counts_reasonable(arch):
+    """Full config analytic param count is within 2x of the headline size."""
+    cfg = get_config(arch)
+    headline = {
+        "recurrentgemma-2b": 2.7e9, "phi3-medium-14b": 14e9,
+        "hubert-xlarge": 1e9, "qwen2-moe-a2.7b": 14.3e9, "qwen2-7b": 7.6e9,
+        "qwen2.5-14b": 14.7e9, "qwen2-vl-72b": 72e9, "xlstm-1.3b": 1.3e9,
+        "qwen3-moe-30b-a3b": 30e9, "gemma2-2b": 2.6e9,
+    }[arch]
+    total = cfg.param_counts()["total"]
+    assert headline / 2.2 < total < headline * 2.2, (total, headline)

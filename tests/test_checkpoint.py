@@ -1,0 +1,147 @@
+"""CheckpointStore / EmbShardSpec / tracker behaviour tests."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import trackers as trk
+from repro.core.checkpoint import CheckpointStore, EmbShardSpec
+
+
+def make_state(sizes=(40, 17, 5), d=8, seed=0):
+    rng = np.random.default_rng(seed)
+    tables = [rng.normal(size=(n, d)).astype(np.float32) for n in sizes]
+    accs = [np.zeros(n, np.float32) for n in sizes]
+    return tables, accs
+
+
+# ------------------------------------------------------------- shard spec --
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.integers(1, 1000), min_size=1, max_size=8),
+       st.integers(1, 16))
+def test_shard_ranges_partition_every_table(sizes, n_shards):
+    spec = EmbShardSpec(sizes, n_shards)
+    for t, n in enumerate(sizes):
+        covered = []
+        for j in range(n_shards):
+            lo, hi = spec.shard_range(t, j)
+            covered.extend(range(lo, hi))
+        assert covered == list(range(n))   # exact disjoint cover
+
+
+def test_shard_of_rows_inverse_of_ranges():
+    spec = EmbShardSpec((100,), 8)
+    rows = np.arange(100)
+    owners = spec.shard_of_rows(0, rows)
+    for j in range(8):
+        lo, hi = spec.shard_range(0, j)
+        assert (owners[lo:hi] == j).all()
+
+
+# ------------------------------------------------------------------ store --
+def test_partial_restore_only_touches_failed_shards():
+    tables, accs = make_state()
+    spec = EmbShardSpec([t.shape[0] for t in tables], 4)
+    store = CheckpointStore(tables, accs, spec)
+    # train: everything drifts
+    drifted = [t + 1.0 for t in tables]
+    drifted_acc = [a + 0.5 for a in accs]
+    store.save_full(drifted, drifted_acc, step=10)
+    # more drift after the checkpoint
+    newer = [t + 2.0 for t in tables]
+    newer_acc = [a + 1.0 for a in accs]
+    out_t, out_a = store.restore_shards(newer, newer_acc, shard_ids=[1])
+    for t in range(len(tables)):
+        lo, hi = spec.shard_range(t, 1)
+        np.testing.assert_array_equal(out_t[t][lo:hi], drifted[t][lo:hi])
+        np.testing.assert_array_equal(out_a[t][lo:hi], drifted_acc[t][lo:hi])
+        # survivors keep their newer state
+        mask = np.ones(tables[t].shape[0], bool)
+        mask[lo:hi] = False
+        np.testing.assert_array_equal(out_t[t][mask], newer[t][mask])
+
+
+def test_cold_rows_restore_to_initial_values():
+    """A row never saved restores to its init value (the partial-save
+    'base = init' property CPR-MFU/SSU rely on)."""
+    tables, accs = make_state(sizes=(10,))
+    spec = EmbShardSpec((10,), 2)
+    store = CheckpointStore(tables, accs, spec)
+    hot = np.array([0, 3])
+    store.save_rows(0, hot, tables[0][hot] + 9.0, accs[0][hot] + 1.0)
+    out_t, _ = store.restore_shards([tables[0] + 5.0], [accs[0]], [0, 1])
+    np.testing.assert_array_equal(out_t[0][hot], tables[0][hot] + 9.0)
+    cold = np.setdiff1d(np.arange(10), hot)
+    np.testing.assert_array_equal(out_t[0][cold], tables[0][cold])
+
+
+def test_disk_roundtrip(tmp_path):
+    tables, accs = make_state()
+    spec = EmbShardSpec([t.shape[0] for t in tables], 3)
+    store = CheckpointStore(tables, accs, spec, directory=str(tmp_path))
+    drift = [t + 1.5 for t in tables]
+    dacc = [a + 2.0 for a in accs]
+    store.save_full(drift, dacc, step=5)
+    store.save_rows(0, np.array([1, 2]), drift[0][[1, 2]] + 1.0,
+                    dacc[0][[1, 2]] + 1.0, step=7)
+    loaded = CheckpointStore.load_latest(str(tmp_path), tables, accs, spec)
+    np.testing.assert_array_equal(loaded.image_tables[1], drift[1])
+    np.testing.assert_array_equal(loaded.image_tables[0][[1, 2]],
+                                  drift[0][[1, 2]] + 1.0)
+    np.testing.assert_array_equal(loaded.image_accs[0][[1, 2]],
+                                  dacc[0][[1, 2]] + 1.0)
+
+
+# --------------------------------------------------------------- trackers --
+def test_mfu_counts_and_topk():
+    c = trk.mfu_init(10)
+    c = trk.mfu_update(c, jnp.array([[1, 1], [1, 5], [5, 7]]))
+    idx, cleared = trk.mfu_select(c, 2)
+    assert set(np.asarray(idx).tolist()) == {1, 5}
+    assert int(cleared[1]) == 0 and int(cleared[5]) == 0
+    assert int(cleared[7]) == 1   # unsaved counter survives
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.integers(0, 99), min_size=1, max_size=64),
+       st.integers(4, 32))
+def test_ssu_buffer_invariants(ids, rn):
+    """Buffer stays sorted, deduplicated, bounded, and only contains ids
+    that were actually inserted (period=1: every id is a candidate)."""
+    state = trk.ssu_init(rn)
+    state = trk.ssu_update(state, jnp.array(ids, jnp.int32), period=1)
+    buf = np.asarray(state["buf"])
+    valid = buf[buf != int(trk.EMPTY)]
+    assert len(valid) == len(set(valid.tolist()))       # dedup
+    assert (np.sort(valid) == valid).all()              # sorted
+    assert set(valid.tolist()) <= set(ids)              # only inserted ids
+    assert len(valid) == min(len(set(ids)), rn)         # bounded, no waste
+
+
+def test_ssu_high_pass_filter_property():
+    """Frequent ids survive random eviction more often than rare ids."""
+    rng = np.random.default_rng(0)
+    hits_hot = hits_cold = 0
+    for trial in range(20):
+        state = trk.ssu_init(8)
+        for step in range(30):
+            ids = rng.zipf(1.5, size=16) % 64          # id 1 is hottest
+            state = trk.ssu_update(state, jnp.asarray(ids, jnp.int32), 1)
+        buf = set(np.asarray(state["buf"]).tolist())
+        hits_hot += 1 in buf
+        hits_cold += 50 in buf
+    assert hits_hot > hits_cold
+
+
+def test_scar_selects_most_changed_rows():
+    table = jnp.zeros((6, 4))
+    state = trk.scar_init(table)
+    moved = table.at[2].set(3.0).at[4].set(1.0)
+    idx, state = trk.scar_select(state, moved, 1)
+    assert int(idx[0]) == 2
+    # shadow updated -> selecting again prefers the next-most-changed row
+    idx2, _ = trk.scar_select(state, moved, 1)
+    assert int(idx2[0]) == 4

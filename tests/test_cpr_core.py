@@ -1,0 +1,101 @@
+"""Unit + property tests for the CPR core (overhead math, PLS, policy)."""
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import overhead as oh
+from repro.core.failure import FailureInjector, GammaFailureModel
+
+pos = st.floats(0.01, 100.0, allow_nan=False)
+
+
+def test_eq1_matches_paper_structure():
+    p = oh.SystemParams(T_total=56, T_fail=28, O_save=0.06, O_load=0.1,
+                        O_res=0.25)
+    T_save = 2.0
+    got = oh.full_recovery_overhead(p, T_save)
+    want = 0.06 * 56 / 2 + (0.1 + 1.0 + 0.25) * 2
+    assert got == pytest.approx(want)
+
+
+def test_optimal_full_interval_formula():
+    p = oh.SystemParams(O_save=0.06, T_fail=28)
+    assert oh.t_save_full_optimal(p) == pytest.approx(math.sqrt(2 * 0.06 * 28))
+
+
+@settings(max_examples=50, deadline=None)
+@given(pos, pos)
+def test_optimal_interval_minimizes_eq1(o_save, t_fail):
+    p = oh.SystemParams(O_save=o_save, T_fail=t_fail)
+    t_opt = oh.t_save_full_optimal(p)
+    base = oh.full_recovery_overhead(p, t_opt)
+    for f in (0.5, 0.9, 1.1, 2.0):
+        assert base <= oh.full_recovery_overhead(p, t_opt * f) + 1e-9
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.floats(0.005, 0.5), st.integers(2, 64), pos)
+def test_pls_interval_roundtrip(target_pls, n_emb, t_fail):
+    """T_save,part = 2·PLS·N·T_fail inverts E[PLS] exactly (Eq. 4)."""
+    p = oh.SystemParams(N_emb=n_emb, T_fail=t_fail)
+    ts = oh.t_save_partial(p, target_pls)
+    assert oh.expected_pls(p, ts) == pytest.approx(target_pls)
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.floats(0.01, 0.3), st.integers(2, 32))
+def test_choose_strategy_consistent(target_pls, n_emb):
+    p = oh.SystemParams(N_emb=n_emb)
+    d = oh.choose_strategy(p, target_pls)
+    # the decision always picks the cheaper side
+    if d["use_partial"]:
+        assert d["overhead_partial"] <= d["overhead_full"]
+        assert d["T_save"] == d["T_save_partial"]
+    else:
+        assert d["overhead_partial"] >= d["overhead_full"]
+
+
+def test_partial_recovery_has_no_lost_computation_term():
+    p = oh.SystemParams()
+    ts = 2.0
+    diff_full = (oh.full_recovery_overhead(p, ts)
+                 - oh.full_recovery_overhead(p, ts + 2.0))
+    # Eq.2 has no T_save/2 term: changing T_save only changes save cost
+    d_par = (oh.partial_recovery_overhead(p, ts)
+             - oh.partial_recovery_overhead(p, ts + 2.0))
+    d_save_only = p.O_save * p.T_total * (1 / ts - 1 / (ts + 2.0))
+    assert d_par == pytest.approx(d_save_only)
+    assert diff_full != pytest.approx(d_save_only)
+
+
+def test_scalability_cpr_beats_full_at_scale():
+    rows = oh.scalability_curve((8, 64, 256))
+    for r in rows:
+        assert r["cpr_frac"] <= r["full_frac"]
+
+
+# ---------------------------------------------------------------- failure --
+def test_gamma_fit_recovers_parameters():
+    true = GammaFailureModel(shape=0.9, scale=20.0)
+    rng = np.random.default_rng(0)
+    fit = GammaFailureModel.fit(true.sample(rng, size=20000))
+    assert fit.shape == pytest.approx(0.9, rel=0.1)
+    assert fit.scale == pytest.approx(20.0, rel=0.1)
+    assert fit.fit_rmse(true.sample(rng, size=5000)) < 0.1
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 20), st.sampled_from([0.125, 0.25, 0.5]),
+       st.integers(2, 32))
+def test_injector_events_well_formed(n_failures, frac, n_shards):
+    inj = FailureInjector(n_failures, frac, n_shards, T_total=56.0, seed=1)
+    assert len(inj.events) == n_failures
+    for e in inj.events:
+        assert 0 <= e.time <= 56.0
+        assert len(e.shard_ids) == max(1, round(frac * n_shards))
+        assert len(set(e.shard_ids)) == len(e.shard_ids)
+        assert all(0 <= j < n_shards for j in e.shard_ids)
+    times = [e.time for e in inj.events]
+    assert times == sorted(times)

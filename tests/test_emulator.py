@@ -1,0 +1,79 @@
+"""Integration tests for the emulation framework (the paper's §5.1 engine)."""
+import numpy as np
+import pytest
+
+from repro.configs.dlrm import DLRM_KAGGLE, scaled
+from repro.core import CPRManager, Emulator, FailureInjector, SystemParams
+from repro.data.synthetic import ClickLogDataset
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = scaled(DLRM_KAGGLE, max_rows=2000)
+    ds = ClickLogDataset(cfg.table_sizes, num_samples=8000, seed=3)
+    return cfg, ds
+
+
+def run(cfg, ds, mode, **kw):
+    p = kw.pop("sys_params", SystemParams())
+    mgr = CPRManager(mode, p, cfg.table_sizes,
+                     target_pls=kw.pop("target_pls", 0.1))
+    inj = FailureInjector(kw.pop("n_failures", 2), kw.pop("fraction", 0.25),
+                          p.N_emb, p.T_total, seed=kw.pop("fail_seed", 11))
+    return Emulator(cfg, ds, mgr, inj, batch_size=256).run(
+        max_steps=kw.pop("max_steps", None))
+
+
+def test_training_learns(setup):
+    cfg, ds = setup
+    r = run(cfg, ds, "full", n_failures=0)
+    assert r.auc > 0.75          # synthetic task is learnable
+    assert np.isfinite(r.final_loss)
+
+
+def test_partial_recovery_cheaper_than_full(setup):
+    cfg, ds = setup
+    rf = run(cfg, ds, "full")
+    rp = run(cfg, ds, "cpr")
+    of, op = rf.report["overheads"], rp.report["overheads"]
+    assert op["total"] < of["total"]
+    assert op["lost"] == 0.0            # Eq.2: no lost-computation term
+    assert of["lost"] > 0.0
+    # PLS only accrues under partial recovery
+    assert rf.report["measured_pls"] == 0.0
+    assert rp.report["measured_pls"] > 0.0
+
+
+def test_expected_pls_tracks_measured(setup):
+    """E[PLS] (Eq. 4) predicts the measured PLS within ~3x (2-failure noise)."""
+    cfg, ds = setup
+    r = run(cfg, ds, "cpr", target_pls=0.1)
+    exp = r.report["expected_pls"]
+    meas = r.report["measured_pls"]
+    assert exp > 0
+    assert meas < 6 * exp + 0.05
+
+
+def test_priority_modes_improve_or_match_vanilla(setup):
+    cfg, ds = setup
+    base = run(cfg, ds, "cpr").auc
+    for mode in ("cpr-mfu", "cpr-scar"):
+        assert run(cfg, ds, mode).auc >= base - 0.02
+
+
+def test_failures_degrade_vanilla_partial(setup):
+    """Heavy failures with naive partial recovery lose accuracy vs no-failure."""
+    cfg, ds = setup
+    clean = run(cfg, ds, "full", n_failures=0).auc
+    hurt = run(cfg, ds, "cpr", n_failures=8, fraction=0.5,
+               target_pls=0.5).auc
+    assert hurt < clean + 0.005
+
+
+def test_fallback_to_full_when_no_benefit(setup):
+    cfg, ds = setup
+    # absurdly expensive partial path -> CPR must fall back
+    p = SystemParams(O_load_partial=5.0, O_res_partial=5.0)
+    mgr = CPRManager("cpr", p, cfg.table_sizes, target_pls=0.02)
+    assert mgr.effective_mode == "full-fallback"
+    assert not mgr.uses_partial_recovery

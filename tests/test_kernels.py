@@ -1,0 +1,116 @@
+"""Per-kernel allclose sweeps against the pure-jnp oracles (interpret mode).
+
+Shapes and dtypes are swept per the brief; hypothesis covers the
+embedding-bag index space.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+
+
+# ------------------------------------------------------------ embedding ----
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("N,d,B,hot", [
+    (64, 16, 8, 1), (128, 64, 4, 4), (1000, 32, 16, 3), (32, 512, 2, 2),
+])
+def test_embedding_bag_matches_ref(N, d, B, hot, dtype):
+    key = jax.random.PRNGKey(0)
+    table = jax.random.normal(key, (N, d), dtype)
+    idx = jax.random.randint(jax.random.PRNGKey(1), (B, hot), 0, N)
+    got = ops.embedding_bag(table, idx, block_d=min(512, d))
+    want = ref.embedding_bag(table, idx)
+    tol = 1e-6 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(2, 50), st.integers(1, 5), st.data())
+def test_embedding_bag_property(N, hot, data):
+    B = data.draw(st.integers(1, 8))
+    idx = np.array(data.draw(st.lists(
+        st.lists(st.integers(0, N - 1), min_size=hot, max_size=hot),
+        min_size=B, max_size=B)), np.int32)
+    table = np.random.default_rng(0).normal(size=(N, 16)).astype(np.float32)
+    got = ops.embedding_bag(jnp.asarray(table), jnp.asarray(idx), block_d=16)
+    want = table[idx].sum(1)
+    np.testing.assert_allclose(np.asarray(got), want, rtol=1e-5, atol=1e-5)
+
+
+# ------------------------------------------------------ flash attention ----
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,Hq,Hkv,Sq,Skv,hd,causal,window,softcap", [
+    (2, 4, 4, 128, 128, 32, True, 0, 0.0),
+    (1, 8, 2, 128, 128, 64, True, 0, 0.0),       # GQA 4:1
+    (2, 4, 1, 256, 256, 32, True, 64, 0.0),      # MQA + sliding window
+    (1, 2, 2, 128, 128, 32, True, 0, 50.0),      # softcap (gemma2)
+    (1, 4, 4, 128, 128, 32, False, 0, 0.0),      # encoder (hubert)
+    (1, 4, 2, 128, 384, 32, True, 0, 0.0),       # Skv > Sq (decode-ish)
+])
+def test_flash_attention_matches_ref(B, Hq, Hkv, Sq, Skv, hd, causal,
+                                     window, softcap, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (B, Sq, Hq, hd), dtype)
+    k = jax.random.normal(ks[1], (B, Skv, Hkv, hd), dtype)
+    v = jax.random.normal(ks[2], (B, Skv, Hkv, hd), dtype)
+    got = ops.flash_attention(q, k, v, causal=causal, window=window,
+                              softcap=softcap, block_q=64, block_k=64)
+    want = ref.flash_attention(q.swapaxes(1, 2), k.swapaxes(1, 2),
+                               v.swapaxes(1, 2), causal, window,
+                               softcap).swapaxes(1, 2)
+    tol = 2e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_flash_matches_model_chunked_attention():
+    """The Pallas kernel and the model's online-softmax path agree."""
+    from repro.models.layers import _chunked_sdpa
+    ks = jax.random.split(jax.random.PRNGKey(3), 3)
+    B, S, H, hd = 2, 256, 4, 32
+    q = jax.random.normal(ks[0], (B, S, H, hd))
+    k = jax.random.normal(ks[1], (B, S, 2, hd))
+    v = jax.random.normal(ks[2], (B, S, 2, hd))
+    pos = jnp.arange(S)
+    want = _chunked_sdpa(q, k, v, pos, pos, True, 0, 0.0, block=64)
+    got = ops.flash_attention(q, k, v, causal=True, block_q=64, block_k=64)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+# ------------------------------------------------------------ rglru scan ----
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,S,w,bs,bw", [
+    (2, 128, 64, 32, 64), (1, 256, 128, 256, 64), (3, 64, 32, 16, 32),
+])
+def test_rglru_scan_matches_ref(B, S, w, bs, bw, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(0), 2)
+    # decay in (0, 1) like real RG-LRU gates
+    a = jax.nn.sigmoid(jax.random.normal(ks[0], (B, S, w))).astype(dtype)
+    b = (jax.random.normal(ks[1], (B, S, w)) * 0.1).astype(dtype)
+    got = ops.rglru_scan(a, b, block_s=bs, block_w=bw)
+    want = ref.rglru_scan(a, b)
+    tol = 1e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(1, 3), st.integers(1, 4), st.integers(1, 4))
+def test_rglru_block_invariance(B, sblocks, wblocks):
+    """Property: result is independent of the block decomposition."""
+    S, w = 32 * sblocks, 32 * wblocks
+    ks = jax.random.split(jax.random.PRNGKey(B * 100 + S + w), 2)
+    a = jax.nn.sigmoid(jax.random.normal(ks[0], (B, S, w)))
+    b = jax.random.normal(ks[1], (B, S, w)) * 0.1
+    full = ops.rglru_scan(a, b, block_s=S, block_w=w)
+    blocked = ops.rglru_scan(a, b, block_s=32, block_w=32)
+    np.testing.assert_allclose(np.asarray(full), np.asarray(blocked),
+                               rtol=1e-5, atol=1e-5)

@@ -1,0 +1,75 @@
+"""CPRManager policy + PLS-accounting properties, and the serve driver."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import CPRManager, FailureEvent, SystemParams
+from repro.core.manager import PRIORITY_MODES
+
+
+def make_mgr(mode="cpr", n_emb=8, **kw):
+    p = SystemParams(N_emb=n_emb)
+    sizes = (100, 40, 7)
+    mgr = CPRManager(mode, p, sizes, **kw)
+    tables = [np.zeros((n, 4), np.float32) for n in sizes]
+    accs = [np.zeros(n, np.float32) for n in sizes]
+    mgr.attach_store(tables, accs)
+    mgr.set_total_samples(10_000)
+    return mgr, tables, accs
+
+
+def test_priority_modes_use_subintervals():
+    for mode in PRIORITY_MODES:
+        mgr, *_ = make_mgr(mode)
+        assert mgr.save_interval == pytest.approx(mgr.T_save / 8)
+    mgr, *_ = make_mgr("cpr")
+    assert mgr.save_interval == mgr.T_save
+
+
+def test_big_table_selection_covers_99pct():
+    mgr, *_ = make_mgr("cpr-mfu")
+    covered = sum(mgr.table_sizes[t] for t in mgr.big_tables)
+    assert covered / sum(mgr.table_sizes) >= 0.9
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(1, 4), st.integers(100, 9000))
+def test_pls_increment_matches_eq3(n_shards_failed, samples):
+    """Eq. 3: one failure adds k/N · (S_i − S_last)/S_total to PLS."""
+    mgr, tables, accs = make_mgr("cpr", n_emb=8)
+    mgr.samples_seen = samples
+    ids = tuple(range(n_shards_failed))
+    ev = FailureEvent(time=1.0, shard_ids=ids, fraction=n_shards_failed / 8)
+    _, _, info = mgr.on_failure(ev, tables, accs)
+    want = n_shards_failed * samples / 10_000 / 8
+    assert mgr.pls == pytest.approx(want)
+    # second failure of the same shards right away adds ~nothing
+    mgr.on_failure(FailureEvent(1.1, ids, ev.fraction), tables, accs)
+    assert mgr.pls == pytest.approx(want)
+
+
+def test_full_recovery_accrues_no_pls():
+    mgr, tables, accs = make_mgr("full")
+    mgr.samples_seen = 5000
+    mgr.on_failure(FailureEvent(1.0, (0, 1), 0.25), tables, accs)
+    assert mgr.pls == 0.0
+    assert mgr.ledger.lost > 0.0
+
+
+def test_due_saves_monotone_and_complete():
+    mgr, *_ = make_mgr("cpr")
+    evs = mgr.due_saves(mgr.T_save * 3.5)
+    assert len(evs) == 3
+    assert evs == sorted(evs)
+    assert mgr.due_saves(mgr.T_save * 3.6) == []
+
+
+def test_serve_driver_end_to_end():
+    from repro.configs import get_config
+    from repro.launch.serve import make_requests, serve
+    cfg = get_config("gemma2-2b").reduced()
+    reqs = make_requests(5, 8, cfg.vocab_size)
+    done, stats = serve(cfg, reqs, batch=2, gen=4)
+    assert set(done) == set(range(5))
+    assert all(len(v) == 4 for v in done.values())
+    assert stats["refills"] == 3
