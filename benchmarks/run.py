@@ -25,6 +25,7 @@ BENCHMARKS = [
     ("fig11", "benchmarks.fig11_pls_accuracy", {}),
     ("fig12", "benchmarks.fig12_ssu_slope", {}),
     ("fig13", "benchmarks.fig13_scalability", {}),
+    ("fig14", "benchmarks.fig14_async_save", {}),
     ("table1", "benchmarks.table1_trackers", {}),
 ]
 
@@ -32,6 +33,8 @@ FAST_OVERRIDES = {
     "fig7": {"datasets": ("kaggle",)},
     "fig11": {"n_points": 6},
     "fig10": {"n_failures": (2, 20)},
+    "fig14": {"max_rows": (20_000,), "events": 3,
+              "select_sizes": (50_000,)},
 }
 
 

@@ -4,6 +4,7 @@ Public API:
   SystemParams, choose_strategy, expected_pls  — overhead/PLS policy (Eq.1-4)
   CPRManager                                   — mode policy + orchestration
   CheckpointStore, EmbShardSpec                — sharded partial checkpoints
+  AsyncCheckpointWriter                        — background incremental saves
   GammaFailureModel, FailureInjector           — failure modeling (§3)
   Emulator                                     — the evaluation framework (§5.1)
   trackers                                     — MFU / SSU / SCAR (§4.2)
@@ -12,7 +13,8 @@ from repro.core.overhead import (SystemParams, choose_strategy, expected_pls,
                                  full_recovery_overhead,
                                  partial_recovery_overhead, scalability_curve,
                                  t_save_full_optimal, t_save_partial)
-from repro.core.checkpoint import CheckpointStore, EmbShardSpec
+from repro.core.checkpoint import (AsyncCheckpointWriter, CheckpointStore,
+                                   EmbShardSpec)
 from repro.core.failure import FailureEvent, FailureInjector, GammaFailureModel
 from repro.core.manager import ALL_MODES, CPRManager
 from repro.core.emulator import EmulationResult, Emulator

@@ -14,12 +14,20 @@ back.  Backends:
              reconstructs the image from disk (crash-durable path used by
              the example drivers and tests).
 
+``AsyncCheckpointWriter`` wraps a store with a background writer thread and
+double-buffered snapshot staging, so save calls only pay for the host-side
+snapshot copy (the image/disk apply overlaps training) — the Check-N-Run
+style decoupling.  ``fence()`` drains in-flight saves; callers must fence
+before reading the image (restores, byte audits).
+
 Byte accounting feeds the emulator's save-overhead model.
 """
 from __future__ import annotations
 
 import json
 import os
+import queue
+import threading
 import time
 from typing import List, Optional, Sequence
 
@@ -87,13 +95,19 @@ class CheckpointStore:
             self._log_event({"kind": "full", "step": step, "bytes": nbytes})
         return nbytes
 
+    def _filter_rows(self, table: int, rows, values, acc_values):
+        """Drop row ids outside the table (shared with the async writer so
+        byte accounting stays in lockstep across both paths)."""
+        rows = np.asarray(rows)
+        valid = (rows >= 0) & (rows < self.spec.table_sizes[table])
+        return (rows[valid], np.asarray(values)[valid],
+                np.asarray(acc_values)[valid])
+
     def save_rows(self, table: int, rows: np.ndarray, values: np.ndarray,
                   acc_values: np.ndarray, step: int = 0):
         """Partial (priority) save of selected rows of one table."""
-        rows = np.asarray(rows)
-        valid = rows < self.spec.table_sizes[table]
-        rows, values, acc_values = rows[valid], np.asarray(values)[valid], \
-            np.asarray(acc_values)[valid]
+        rows, values, acc_values = self._filter_rows(table, rows, values,
+                                                     acc_values)
         if rows.size == 0:
             return 0
         self.image_tables[table][rows] = values
@@ -171,6 +185,115 @@ class CheckpointStore:
                     store.image_tables[t][z["rows"]] = z["values"]
                     store.image_accs[t][z["rows"]] = z["accs"]
         return store
+
+
+class AsyncCheckpointWriter:
+    """Asynchronous front-end for a :class:`CheckpointStore`.
+
+    ``save_full`` / ``save_rows`` take a consistent host snapshot of their
+    inputs on the caller thread (the only critical-path work), enqueue it,
+    and return the snapshot's byte count immediately; a background thread
+    applies the event to the store (image update + optional disk persist)
+    in submission order.  Staging is double-buffered: at most
+    ``max_inflight`` (default 2) snapshots may be queued, so a third save
+    arriving while both buffers are in flight blocks.  That back-pressure
+    wait (and any fence) lands inside the caller's save-call wall time,
+    which ``CPRManager.run_save`` measures into the overhead ledger as the
+    critical-path save cost.
+
+    Consistency contract: ``fence()`` before any image read (restore,
+    ``load_latest``, byte audits) observes every previously enqueued save.
+    Failures are fail-stop: once a queued apply raises, later queued saves
+    are discarded (never applied out of order around the hole) and every
+    subsequent ``save_*``/``fence`` re-raises the latched error — the image
+    can no longer silently diverge from what the caller believes is saved.
+    ``close()`` is best-effort shutdown and does not raise.
+    """
+
+    def __init__(self, store: CheckpointStore, max_inflight: int = 2):
+        self.store = store
+        self._q: queue.Queue = queue.Queue(maxsize=max_inflight)
+        self._exc: Optional[BaseException] = None
+        self._closed = False
+        self._thread = threading.Thread(target=self._worker,
+                                        name="cpr-async-ckpt", daemon=True)
+        self._thread.start()
+
+    # ------------------------------------------------------------ worker --
+    def _worker(self):
+        while True:
+            item = self._q.get()
+            try:
+                if item is None:
+                    return
+                if self._exc is None:          # fail-stop: drop after error
+                    fn, args, kw = item
+                    fn(*args, **kw)
+            except BaseException as e:        # latched, re-raised on caller
+                self._exc = e
+            finally:
+                self._q.task_done()
+
+    def _submit(self, fn, *args, **kw):
+        self._check()
+        if self._closed:   # not an assert: under -O a stripped check would
+            raise RuntimeError("writer is closed")  # enqueue into a dead
+        self._q.put((fn, args, kw))           # thread and deadlock on full
+
+    def _check(self):
+        if self._exc is not None:             # stays latched: fail-stop
+            raise RuntimeError("async checkpoint writer failed; "
+                               "saves after the failure were discarded"
+                               ) from self._exc
+
+    # ------------------------------------------------------------- saves --
+    @staticmethod
+    def _snap(a):
+        """Host snapshot that the caller cannot mutate afterwards.  Device
+        arrays already become a private host copy under ``np.asarray``
+        (device_get), so only host-side numpy inputs need an extra copy."""
+        out = np.asarray(a)
+        return np.array(out) if out is a or isinstance(a, np.ndarray) else out
+
+    def save_full(self, tables, accs, trainer_state=None, step: int = 0):
+        """Snapshot + enqueue a full checkpoint; returns snapshot bytes."""
+        snap_t = [self._snap(t) for t in tables]
+        snap_a = [self._snap(a) for a in accs]
+        snap_tr = None
+        if trainer_state is not None:
+            import jax
+            snap_tr = jax.tree.map(self._snap, trainer_state)
+        nbytes = sum(t.nbytes + a.nbytes for t, a in zip(snap_t, snap_a))
+        if snap_tr is not None:
+            nbytes += sum(a.nbytes for a in _leaves(snap_tr))
+        self._submit(self.store.save_full, snap_t, snap_a, snap_tr, step)
+        return nbytes
+
+    def save_rows(self, table: int, rows, values, acc_values, step: int = 0):
+        """Snapshot + enqueue a partial save; returns snapshot bytes."""
+        # boolean-mask indexing in _filter_rows yields fresh host copies,
+        # so the snapshot never aliases caller memory
+        rows, values, acc_values = self.store._filter_rows(
+            table, rows, values, acc_values)
+        if rows.size == 0:
+            return 0
+        self._submit(self.store.save_rows, table, rows, values, acc_values,
+                     step)
+        return values.nbytes + acc_values.nbytes + rows.nbytes
+
+    # ------------------------------------------------------------- sync ---
+    def fence(self):
+        """Block until every enqueued save has been applied to the store."""
+        self._q.join()
+        self._check()
+
+    def close(self):
+        """Best-effort shutdown; never raises (use fence() to check)."""
+        if self._closed:
+            return
+        self._closed = True
+        self._q.put(None)
+        self._thread.join()
 
 
 def _to_numpy(tree):

@@ -16,6 +16,7 @@ matches the no-failure accuracy.
 """
 from __future__ import annotations
 
+import time
 from dataclasses import dataclass
 from typing import Optional
 
@@ -51,7 +52,7 @@ class EmulationResult:
 class Emulator:
     def __init__(self, dlrm_cfg, dataset, manager: CPRManager,
                  injector: FailureInjector, batch_size=512, lr=0.02,
-                 seed=0, eval_frac=0.1, use_kernel=False):
+                 seed=0, eval_frac=0.1, use_kernel=False, optimizer=None):
         self.cfg = dlrm_cfg
         self.ds = dataset
         self.mgr = manager
@@ -61,10 +62,15 @@ class Emulator:
         self.seed = seed
         self.eval_frac = eval_frac
         self.use_kernel = use_kernel
+        # any Optimizer whose state carries row-wise accumulators under
+        # state["acc"] (extra top-level entries — step counters, momenta —
+        # are preserved across failure restores)
+        self.optimizer = optimizer
+        self.final_ostate = None
 
     def _build_step(self):
         cfg, mgr = self.cfg, self.mgr
-        opt = get_optimizer("rowwise_adagrad", self.lr)
+        opt = self.optimizer or get_optimizer("rowwise_adagrad", self.lr)
         mode = mgr.mode if mgr.is_priority else None
         big = mgr.big_tables if mgr.is_priority else []
         period = mgr.ssu_period
@@ -106,12 +112,24 @@ class Emulator:
 
         t = 0.0
         loss = jnp.zeros(())
+        wall0 = time.perf_counter()
         for i, batch in enumerate(self.ds.batches(self.batch_size, tr0, tr1)):
             if i >= n_steps:
                 break
             params, ostate, tracker, loss = step_fn(params, ostate, tracker, batch)
             mgr.samples_seen += self.batch_size
             t_prev, t = t, t + dt
+            # sim-hours per wall-second at the steady-state *training* rate:
+            # step 0 (jit compilation) and time already blocked inside save
+            # events are both excluded from the denominator, else the
+            # measured save cost is deflated by compile/save artifacts
+            if i == 0:
+                wall0 = time.perf_counter()
+                blocked0 = mgr.ledger.save_blocked_s
+            else:
+                train_wall = (time.perf_counter() - wall0) - \
+                    (mgr.ledger.save_blocked_s - blocked0)
+                mgr.wall_time_scale = (t - dt) / max(train_wall, 1e-9)
             for t_ev in mgr.due_saves(t):
                 tracker = mgr.run_save(
                     t_ev, params["tables"], ostate["acc"]["tables"], tracker,
@@ -122,8 +140,13 @@ class Emulator:
                     [np.asarray(x) for x in ostate["acc"]["tables"]])
                 params = {**params,
                           "tables": [jnp.asarray(x) for x in new_t]}
-                ostate = {"acc": {**ostate["acc"],
+                # rebuild via {**ostate, ...}: optimizer state beyond "acc"
+                # (momenta, step counters) must survive a failure restore
+                ostate = {**ostate,
+                          "acc": {**ostate["acc"],
                                   "tables": [jnp.asarray(x) for x in new_a]}}
+        mgr.close()   # drain + stop the async writer thread (if any)
+        self.final_ostate = ostate
 
         # ---- evaluation ----
         scores, labels = [], []

@@ -74,13 +74,22 @@ class FailureInjector:
 
     ``uniform=True`` mirrors the paper's emulation (failure probability is
     near-constant, §3.1, so failures are injected uniformly at random);
-    otherwise inter-failure gaps are drawn from the gamma model.
+    otherwise inter-failure gaps are drawn from the gamma model.  Pinned
+    scenarios (deterministic tests) pass explicit ``times`` and optionally
+    ``shard_sets``; both override the sampled schedule.
     """
 
     def __init__(self, n_failures, fail_fraction, n_shards, T_total,
-                 seed=0, uniform=True, gamma: GammaFailureModel = None):
+                 seed=0, uniform=True, gamma: GammaFailureModel = None,
+                 times=None, shard_sets=None):
         rng = np.random.default_rng(seed)
-        if uniform:
+        if times is not None:
+            order = np.argsort(np.asarray(times, dtype=float))
+            times = np.asarray(times, dtype=float)[order]
+            if shard_sets is not None:
+                assert len(shard_sets) == len(times)
+                shard_sets = [shard_sets[i] for i in order]
+        elif uniform:
             times = np.sort(rng.uniform(0, T_total, size=n_failures))
         else:
             gamma = gamma or GammaFailureModel()
@@ -89,9 +98,14 @@ class FailureInjector:
             times = times[times < T_total][:n_failures]
         k = max(1, int(round(fail_fraction * n_shards)))
         self.events = []
-        for t in times:
-            ids = tuple(sorted(rng.choice(n_shards, size=k, replace=False)))
-            self.events.append(FailureEvent(float(t), ids, k / n_shards))
+        for i, t in enumerate(times):
+            if shard_sets is not None:
+                ids = tuple(sorted(int(j) for j in shard_sets[i]))
+            else:
+                ids = tuple(sorted(rng.choice(n_shards, size=k,
+                                              replace=False)))
+            self.events.append(FailureEvent(float(t), ids,
+                                            len(ids) / n_shards))
 
     def between(self, t0, t1):
         return [e for e in self.events if t0 < e.time <= t1]

@@ -17,6 +17,7 @@ T_save boundary.  PLS bookkeeping per shard uses T_save-boundary events only
 """
 from __future__ import annotations
 
+import time
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional
 
@@ -24,7 +25,8 @@ import numpy as np
 
 from repro.core import overhead as oh
 from repro.core import trackers as trk
-from repro.core.checkpoint import CheckpointStore, EmbShardSpec
+from repro.core.checkpoint import (AsyncCheckpointWriter, CheckpointStore,
+                                   EmbShardSpec)
 
 PRIORITY_MODES = ("cpr-mfu", "cpr-ssu", "cpr-scar")
 ALL_MODES = ("full", "partial", "cpr") + PRIORITY_MODES
@@ -32,10 +34,22 @@ ALL_MODES = ("full", "partial", "cpr") + PRIORITY_MODES
 
 @dataclass
 class OverheadLedger:
+    """Simulated-hours overhead charges.
+
+    ``save`` is the *modeled* per-bytes O_save charge (Eq. 1/2); the
+    ``save_blocked_s`` / ``save_measured`` pair is the *measured*
+    overlap-aware cost: wall-clock seconds the training thread actually
+    spent blocked inside save events (snapshotting, staging back-pressure,
+    fences — for the sync store, the whole save), and the same mapped onto
+    simulated hours via the manager's ``wall_time_scale``.  Totals stay on
+    the modeled charge so strategy comparisons remain machine-independent.
+    """
     save: float = 0.0
     load: float = 0.0
     lost: float = 0.0
     resched: float = 0.0
+    save_blocked_s: float = 0.0   # measured wall seconds on the critical path
+    save_measured: float = 0.0    # the same, mapped to simulated hours
 
     @property
     def total(self):
@@ -43,7 +57,9 @@ class OverheadLedger:
 
     def as_dict(self, T_total=None):
         d = {"save": self.save, "load": self.load, "lost": self.lost,
-             "resched": self.resched, "total": self.total}
+             "resched": self.resched, "total": self.total,
+             "save_blocked_s": self.save_blocked_s,
+             "save_measured": self.save_measured}
         if T_total:
             d["fraction"] = self.total / T_total
         return d
@@ -53,8 +69,10 @@ class CPRManager:
     def __init__(self, mode: str, sys_params: oh.SystemParams,
                  table_sizes, target_pls: float = 0.1, r: float = 0.125,
                  ssu_period: int = 2, big_table_coverage: float = 0.99,
-                 directory: Optional[str] = None):
+                 directory: Optional[str] = None, async_save: bool = False,
+                 tracker_backend: str = "host", seg_size: int = 512):
         assert mode in ALL_MODES, mode
+        assert tracker_backend in ("host", "pallas"), tracker_backend
         self.mode = mode
         self.p = sys_params
         self.target_pls = target_pls
@@ -63,6 +81,13 @@ class CPRManager:
         self.table_sizes = tuple(table_sizes)
         self.spec = EmbShardSpec(table_sizes, sys_params.N_emb)
         self.directory = directory
+        self.async_save = async_save
+        self.tracker_backend = tracker_backend
+        self.seg_size = seg_size
+        # sim-hours per wall-second of blocked save time; the emulator sets
+        # this from its measured step rate so save_measured is comparable
+        # to the modeled charges.  0 -> only raw seconds are recorded.
+        self.wall_time_scale = 0.0
 
         # ---- interval policy (paper Fig. 5) ----
         self.decision = oh.choose_strategy(sys_params, target_pls)
@@ -98,6 +123,7 @@ class CPRManager:
         self.last_cycle_time = np.zeros(sys_params.N_emb)  # per-shard
         self._next_save_idx = 1       # multiples of sub-interval
         self.store: Optional[CheckpointStore] = None
+        self.writer: Optional[AsyncCheckpointWriter] = None
         self.samples_seen = 0
         self.samples_at_cycle = np.zeros(sys_params.N_emb)
         self.history = []
@@ -112,23 +138,50 @@ class CPRManager:
         if not self.is_priority:
             return {}
         if self.mode == "cpr-mfu":
-            return {t: trk.mfu_init(self.table_sizes[t]) for t in self.big_tables}
+            state = {t: trk.mfu_init(self.table_sizes[t])
+                     for t in self.big_tables}
+            if self.tracker_backend == "pallas":
+                # pre-warm the selection kernel per table shape so the
+                # first save event's measured blocked time is checkpoint
+                # cost, not jit compilation
+                for t in self.big_tables:
+                    rn = max(1, int(self.r * self.table_sizes[t]))
+                    trk.mfu_select_segmented(state[t], rn,
+                                             seg_size=self.seg_size)
+            return state
         if self.mode == "cpr-ssu":
-            return {t: trk.ssu_init(max(1, int(self.r * self.table_sizes[t])))
+            # per-table seeds: shared eviction streams would drop the same
+            # buffer positions in every table
+            return {t: trk.ssu_init(max(1, int(self.r * self.table_sizes[t])),
+                                    seed=17 + t)
                     for t in self.big_tables}
         if self.mode == "cpr-scar":
             return {t: trk.scar_init(tables[t]) for t in self.big_tables}
         return {}
 
     def attach_store(self, tables, accs, trainer_state=None):
+        if self.writer is not None:           # re-attach: stop the old thread
+            self.writer.close()
         self.store = CheckpointStore(tables, accs, self.spec, trainer_state,
                                      directory=self.directory)
+        if self.async_save:
+            self.writer = AsyncCheckpointWriter(self.store)
         self._total_bytes = sum(np.asarray(t).nbytes + np.asarray(a).nbytes
                                 for t, a in zip(tables, accs))
         if trainer_state is not None:
             import jax
             self._total_bytes += sum(np.asarray(a).nbytes
                                      for a in jax.tree.leaves(trainer_state))
+
+    def fence(self):
+        """Drain in-flight async saves (no-op for the sync store)."""
+        if self.writer is not None:
+            self.writer.fence()
+
+    def close(self):
+        """Drain and stop the async writer thread (idempotent)."""
+        if self.writer is not None:
+            self.writer.close()
 
     # ------------------------------------------------------ save policy ----
     @property
@@ -145,11 +198,24 @@ class CPRManager:
         return out
 
     def run_save(self, t_event: float, tables, accs, tracker_state,
-                 trainer_state=None, step: int = 0):
+                 trainer_state=None, step: int = 0, pending_indices=None):
         """Execute one save event; returns updated tracker_state.
-        Charges save overhead proportional to bytes written."""
+
+        Charges the modeled O_save cost proportional to bytes written, and
+        separately records the *measured* critical-path cost of this event
+        (everything the training thread blocked on: tracker selection,
+        host snapshots, staging back-pressure and — at T_save boundaries —
+        the durability fence).  With ``async_save`` the image/disk apply
+        overlaps training, so only the snapshot/fence time lands here.
+
+        ``pending_indices`` (cpr-mfu + pallas backend only) are accessed
+        row ids per big table not yet folded into the device counters; the
+        fused kernel applies them during selection.
+        """
         assert self.store is not None
-        bytes_before = self.store.bytes_written
+        t_wall0 = time.perf_counter()
+        saver = self.writer if self.writer is not None else self.store
+        nbytes = 0
         is_boundary = (not self.is_priority) or (
             round(t_event / self.save_interval) % self.n_subcycles == 0)
         if self.is_priority:
@@ -160,9 +226,18 @@ class CPRManager:
                 tab = np.asarray(tables[t])
                 acc = np.asarray(accs[t])
                 if self.mode == "cpr-mfu":
-                    idx, new_counts = trk.mfu_select(tracker_state[t], rn)
+                    if self.tracker_backend == "pallas":
+                        pend = None if pending_indices is None else \
+                            pending_indices.get(t)
+                        idx, new_counts = trk.mfu_select_segmented(
+                            tracker_state[t], rn, indices=pend,
+                            seg_size=self.seg_size)
+                        rows = np.asarray(idx)
+                        rows = rows[rows < n]       # drop padding picks
+                    else:
+                        idx, new_counts = trk.mfu_select(tracker_state[t], rn)
+                        rows = np.asarray(idx)
                     tracker_state = {**tracker_state, t: new_counts}
-                    rows = np.asarray(idx)
                 elif self.mode == "cpr-ssu":
                     ids, reset = trk.ssu_select(tracker_state[t])
                     tracker_state = {**tracker_state, t: reset}
@@ -174,19 +249,30 @@ class CPRManager:
                     tracker_state = {**tracker_state, t: new_state}
                     rows = np.asarray(idx)
                 if rows.size:
-                    self.store.save_rows(t, rows, tab[rows], acc[rows],
-                                         step=step)
+                    nbytes += saver.save_rows(t, rows, tab[rows], acc[rows],
+                                              step=step)
             if is_boundary:
                 for t in self.small_tables:
                     n = self.table_sizes[t]
                     rows = np.arange(n)
-                    self.store.save_rows(t, rows, np.asarray(tables[t]),
-                                         np.asarray(accs[t]), step=step)
+                    nbytes += saver.save_rows(t, rows, np.asarray(tables[t]),
+                                              np.asarray(accs[t]), step=step)
         else:
-            self.store.save_full(tables, accs, trainer_state, step=step)
-        # bandwidth-proportional save cost
-        frac = (self.store.bytes_written - bytes_before) / max(self._total_bytes, 1)
+            nbytes += saver.save_full(tables, accs, trainer_state, step=step)
+        if is_boundary and self.is_priority and self.writer is not None:
+            # a boundary completes a multi-sub-interval priority cycle: drain
+            # it before PLS bookkeeping stamps the cycle as the shards'
+            # recovery point.  Non-priority saves never fence here — queue
+            # ordering plus the fence in on_failure/report already guarantee
+            # restores observe them, so the apply fully overlaps training.
+            self.writer.fence()
+        # bandwidth-proportional modeled save cost
+        frac = nbytes / max(self._total_bytes, 1)
         self.ledger.save += self.p.O_save * frac
+        # measured overlap-aware critical-path cost
+        blocked = time.perf_counter() - t_wall0
+        self.ledger.save_blocked_s += blocked
+        self.ledger.save_measured += blocked * self.wall_time_scale
         if is_boundary:
             self.last_cycle_time[:] = t_event
             self.samples_at_cycle[:] = self.samples_seen
@@ -213,6 +299,7 @@ class CPRManager:
             self.history.append({"t": t, "event": "failure", **info})
             return tables, accs, info
         # ---- partial recovery ----
+        self.fence()   # restores must observe every enqueued save
         tables, accs = self.store.restore_shards(tables, accs, event.shard_ids)
         self.ledger.load += self.p.O_load_partial
         self.ledger.resched += self.p.O_res_partial
@@ -233,9 +320,12 @@ class CPRManager:
 
     # ----------------------------------------------------------- report ----
     def report(self):
+        self.fence()   # bytes_written must include in-flight saves
         return {
             "mode": self.mode,
             "effective_mode": self.effective_mode,
+            "async_save": self.async_save,
+            "tracker_backend": self.tracker_backend,
             "T_save": self.T_save,
             "save_interval": self.save_interval,
             "target_pls": self.target_pls,

@@ -63,9 +63,18 @@ def expected_pls(p: SystemParams, T_save: float) -> float:
 def choose_strategy(p: SystemParams, target_pls: float) -> dict:
     """CPR's benefit analysis (paper Fig. 5): pick full vs partial recovery
     and the saving interval.  Falls back to full recovery when partial has
-    no expected benefit."""
+    no expected benefit.
+
+    Note the clamp: a loose PLS target can make Eq. 4's interval exceed the
+    whole run (e.g. target_pls=0.5, N_emb=8, T_fail=28 -> 224 h > T_total),
+    in which case T_save_partial is clamped to T_total — the first (only)
+    save then lands at the very end of the run, so every failure before it
+    reverts its shards to their *initial* values.  ``t_save_partial_clamped``
+    flags this regime; emulations in it measure pure failure damage.
+    """
     ts_full = t_save_full_optimal(p)
-    ts_part = min(t_save_partial(p, target_pls), p.T_total)
+    ts_part_raw = t_save_partial(p, target_pls)
+    ts_part = min(ts_part_raw, p.T_total)
     o_full = full_recovery_overhead(p, ts_full)
     o_part = partial_recovery_overhead(p, ts_part)
     use_partial = o_part < o_full
@@ -74,6 +83,7 @@ def choose_strategy(p: SystemParams, target_pls: float) -> dict:
         "T_save": ts_part if use_partial else ts_full,
         "T_save_full_optimal": ts_full,
         "T_save_partial": ts_part,
+        "t_save_partial_clamped": ts_part_raw > p.T_total,
         "overhead_full": o_full,
         "overhead_partial": o_part,
         "expected_pls": expected_pls(p, ts_part) if use_partial else 0.0,

@@ -45,10 +45,44 @@ def mfu_select(counts, rn: int):
     return idx, counts.at[idx].set(0)
 
 
+def segmented_k(n: int, rn: int, seg_size: int = 512):
+    """(seg, k) plan for segment-wise selection: segment width and the
+    per-segment quota covering rn rows total.  Shared by the selection
+    wrapper and the benchmark's parity audit."""
+    seg = min(seg_size, max(n, 1))
+    n_seg = -(-n // seg)
+    return seg, max(1, min(-(-rn // n_seg), seg))
+
+
+def mfu_select_segmented(counts, rn: int, indices=None, seg_size: int = 512):
+    """Device-side fused MFU update + segment-wise top-k (Pallas kernel).
+
+    Replaces the global ``top_k`` over the full counter table with a
+    per-segment top-``ceil(rn/n_seg)`` selection; ``indices`` (optional
+    pending accessed ids not yet counted) are folded in by the same kernel,
+    so priority saves never round-trip the table through a host sort.
+    Selected ids may include padding picks >= N; callers drop those.
+    Returns (row_ids, new_counts) like ``mfu_select``.
+
+    Caveat: the per-segment quota matches global top-k only when hot rows
+    are spread across segments.  Ids clustered into few segments (e.g. raw
+    un-permuted zipf ids) lose hot-set coverage to the quota — keep the
+    manager's ``tracker_backend="host"`` default there, or permute ids.
+    """
+    from repro.kernels import ops
+    seg, k = segmented_k(counts.shape[0], rn, seg_size)
+    if indices is None:
+        indices = jnp.zeros((0,), jnp.int32)
+    return ops.tracker_select(counts, indices, k, seg_size=seg)
+
+
 # ------------------------------------------------------------------ SSU ----
-def ssu_init(rn: int):
+def ssu_init(rn: int, seed: int = 17):
+    """``seed`` decorrelates eviction streams across tracker instances —
+    with a shared key every table/trial evicts the same buffer positions,
+    which systematically drops the hottest (lowest-position) ids."""
     return {"buf": jnp.full((rn,), EMPTY, jnp.int32),
-            "key": jax.random.PRNGKey(17)}
+            "key": jax.random.PRNGKey(seed)}
 
 
 def ssu_update(state, indices, period: int = 2):

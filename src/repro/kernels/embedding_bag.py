@@ -18,6 +18,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import compiler_params
+
 
 def _kernel(idx_ref, table_ref, out_ref):
     j = pl.program_id(1)
@@ -53,7 +55,7 @@ def embedding_bag(table, idx, block_d: int = 512, interpret: bool = True):
         ),
         out_shape=jax.ShapeDtypeStruct((B, d), table.dtype),
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compiler_params(
             dimension_semantics=("parallel", "arbitrary",
                                              "parallel")),
     )(idx, table)

@@ -18,6 +18,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import compiler_params
+
 NEG_INF = -1e30
 
 
@@ -102,7 +104,7 @@ def flash_attention(q, k, v, causal=True, window=0, softcap=0.0,
             pltpu.VMEM((bq, hd), jnp.float32),   # output accumulator
         ],
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compiler_params(
             dimension_semantics=("parallel", "parallel",
                                              "parallel", "arbitrary")),
     )(q, k, v)

@@ -12,6 +12,7 @@ import jax
 from repro.kernels import embedding_bag as _eb
 from repro.kernels import flash_attention as _fa
 from repro.kernels import rglru_scan as _rg
+from repro.kernels import tracker_select as _ts
 
 
 def _interpret() -> bool:
@@ -38,3 +39,9 @@ def flash_attention(q, k, v, causal=True, window=0, softcap=0.0,
 def rglru_scan(a, b, block_s: int = 256, block_w: int = 512):
     return _rg.rglru_scan(a, b, block_s=block_s, block_w=block_w,
                           interpret=_interpret())
+
+
+def tracker_select(counts, indices, k: int, seg_size: int = 512):
+    """Fused MFU count-update + segment-wise top-k row selection."""
+    return _ts.tracker_select(counts, indices, k, seg_size=seg_size,
+                              interpret=_interpret())

@@ -1,10 +1,11 @@
-"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+"""Pure-jnp/numpy oracles for every Pallas kernel (the allclose targets)."""
 from __future__ import annotations
 
 import math
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 def embedding_bag(table, idx):
@@ -34,6 +35,36 @@ def flash_attention(q, k, v, causal=True, window=0, softcap=0.0):
     p = jax.nn.softmax(s, axis=-1)
     return jnp.einsum("bhst,bhtd->bhsd", p,
                       vq.astype(jnp.float32)).astype(q.dtype)
+
+
+def tracker_select(counts, indices, k: int, seg_size: int = 512):
+    """Numpy MFU reference for ``tracker_select`` (exact-match target).
+
+    Folds ``indices`` into ``counts``, then per fixed-size row segment picks
+    the ``k`` highest-count rows (ties -> lowest row id) and clears their
+    counters.  Padding rows of the last segment count as -1, so selected
+    ids may exceed N when a segment runs out of live rows; callers drop
+    ids >= N.  Returns (row_ids (n_seg*k,) int32, new_counts (N,) int32).
+    """
+    counts = np.asarray(counts, np.int32).copy()
+    (N,) = counts.shape
+    seg = min(seg_size, max(N, 1))
+    n_seg = -(-N // seg)
+    k = min(k, seg)
+    flat = np.asarray(indices, np.int64).reshape(-1)
+    flat = flat[(flat >= 0) & (flat < N)]
+    counts += np.bincount(flat, minlength=N).astype(np.int32)
+    padded = np.full(n_seg * seg, -1, np.int32)
+    padded[:N] = counts
+    ids = np.empty(n_seg * k, np.int32)
+    for s in range(n_seg):
+        work = padded[s * seg:(s + 1) * seg].astype(np.int64)
+        for j in range(k):
+            pos = int(np.argmax(work))        # first (lowest) index on ties
+            ids[s * k + j] = s * seg + pos
+            work[pos] = np.iinfo(np.int64).min
+            padded[s * seg + pos] = 0
+    return ids, padded[:N]
 
 
 def rglru_scan(a, b, h0=None):

@@ -1,0 +1,117 @@
+"""Pallas-TPU fused MFU tracker update + segment-wise top-k row selection.
+
+The CPR-MFU hot path at every priority-save sub-interval is: fold the
+pending accessed-row ids into the per-row access counters, then pick the
+r·N highest-count rows and clear their counters.  The host implementation
+round-trips the full counter table through a global sort per sub-interval;
+this kernel keeps everything on device and replaces the global sort with a
+*segment-wise* top-k: the table is cut into fixed-size row segments and the
+top ``k`` rows of each segment are selected.  For skewed (Zipf-like) access
+distributions hot rows are spread across segments, so segment-wise
+selection covers the same hot set while needing only an O(seg) scan per
+grid step — no global argsort, no host round-trip.
+
+Grid: one step per segment.  Each step
+  1. DMAs its (1, seg) counter block into VMEM,
+  2. adds the pending-id histogram for its row range (computed by comparing
+     the prefetched flat id list against the segment's global row iota),
+  3. runs ``k`` max/argmin-of-tie iterations to emit the segment's top-k
+     global row ids,
+  4. writes back the updated counters with the selected rows cleared.
+
+``interpret=True`` (the CPU container) runs the same kernel body as traced
+JAX ops — bit-identical to the Mosaic path and to ``ref.tracker_select``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels import compiler_params
+
+_INT32_MIN = jnp.iinfo(jnp.int32).min
+
+
+def _kernel(idx_ref, cnt_ref, out_idx_ref, out_cnt_ref, *, seg: int, k: int):
+    lo = pl.program_id(0) * seg
+    col = jax.lax.broadcasted_iota(jnp.int32, (1, seg), 1)        # 0..seg-1
+    gid = lo + col                                                # global ids
+    # --- fused count update: histogram of pending ids over this segment ---
+    hits = jnp.sum((idx_ref[...] == gid).astype(jnp.int32), axis=0,
+                   keepdims=True)                                 # (1, seg)
+    counts = cnt_ref[...] + hits
+
+    # --- segment-wise top-k (ties -> lowest row id) ---
+    def body(j, carry):
+        work, selected, ids = carry
+        m = jnp.max(work)
+        pos = jnp.min(jnp.where(work == m, col, seg))
+        ids = jax.lax.dynamic_update_slice(
+            ids, (lo + pos).reshape(1, 1).astype(jnp.int32), (0, j))
+        hit = col == pos
+        return (jnp.where(hit, _INT32_MIN, work), selected | hit, ids)
+
+    work0 = counts
+    sel0 = jnp.zeros((1, seg), jnp.bool_)
+    ids0 = jnp.zeros((1, k), jnp.int32)
+    _, selected, ids = jax.lax.fori_loop(0, k, body, (work0, sel0, ids0))
+    out_idx_ref[...] = ids
+    out_cnt_ref[...] = jnp.where(selected, 0, counts)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("k", "seg_size", "interpret"))
+def tracker_select(counts, indices, k: int, seg_size: int = 512,
+                   interpret: bool = True):
+    """Fused MFU update + segment-wise top-k.
+
+    counts:  (N,) int32 per-row access counters.
+    indices: int array of pending accessed row ids (any shape; may be empty)
+             not yet folded into ``counts``.
+    k:       rows to select per segment.
+
+    Returns ``(row_ids, new_counts)``: ``row_ids`` is (n_seg * k,) int32
+    global ids (entries >= N are padding-segment picks and must be dropped
+    by the caller); ``new_counts`` is (N,) with pending ids folded in and
+    the selected rows' counters cleared.
+    """
+    counts = jnp.asarray(counts, jnp.int32)
+    (N,) = counts.shape
+    seg = min(seg_size, max(int(N), 1))
+    n_seg = -(-N // seg)                      # ceil
+    k = min(k, seg)
+    assert k >= 1, k
+    pad = n_seg * seg - N
+    # padded rows get count -1 so any live row outranks them
+    cgrid = jnp.pad(counts, (0, pad), constant_values=-1).reshape(n_seg, seg)
+    flat = jnp.asarray(indices, jnp.int32).reshape(-1)
+    if flat.size == 0:                        # no pending ids: match nothing
+        flat = jnp.full((1,), -1, jnp.int32)
+    # ids outside [0, N) must match nothing — N..n_seg*seg-1 would otherwise
+    # inflate padding-row counters and displace live rows from the top-k
+    flat = jnp.where((flat >= 0) & (flat < N), flat, -1)
+    idx2d = flat.reshape(-1, 1)
+
+    ids, new_counts = pl.pallas_call(
+        functools.partial(_kernel, seg=seg, k=k),
+        grid=(n_seg,),
+        in_specs=[
+            pl.BlockSpec((idx2d.shape[0], 1), lambda i: (0, 0)),
+            pl.BlockSpec((1, seg), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, k), lambda i: (i, 0)),
+            pl.BlockSpec((1, seg), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_seg, k), jnp.int32),
+            jax.ShapeDtypeStruct((n_seg, seg), jnp.int32),
+        ],
+        interpret=interpret,
+        compiler_params=compiler_params(
+            dimension_semantics=("arbitrary",)),
+    )(idx2d, cgrid)
+    return ids.reshape(-1), new_counts.reshape(-1)[:N]

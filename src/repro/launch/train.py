@@ -38,7 +38,8 @@ def build_cfg(args):
 
 def train(cfg, steps=200, batch=8, seq=128, lr=0.005, mode="cpr-mfu",
           n_failures=2, fail_fraction=0.25, seed=0, target_pls=0.1,
-          checkpoint_dir=None, log_every=20, use_flash=False):
+          checkpoint_dir=None, log_every=20, use_flash=False,
+          async_save=False, tracker_backend="pallas"):
     """Returns (final_params, history dict)."""
     assert cfg.causal and cfg.modality_frontend is None, \
         "LM driver needs a causal text model"
@@ -51,7 +52,8 @@ def train(cfg, steps=200, batch=8, seq=128, lr=0.005, mode="cpr-mfu",
     # --- CPR over the Emb-PS analogue: the token-embedding rows ---
     p = SystemParams(T_total=float(steps), T_fail=float(steps) / max(n_failures, 1))
     mgr = CPRManager(mode, p, (cfg.vocab_size,), target_pls=target_pls,
-                     directory=checkpoint_dir)
+                     directory=checkpoint_dir, async_save=async_save,
+                     tracker_backend=tracker_backend)
     tracker = mgr.tracker_init([params["embed"]])
     mgr.attach_store([params["embed"]], [ostate["acc"]["embed"]],
                      {k: v for k, v in params.items() if k != "embed"})
@@ -86,6 +88,13 @@ def train(cfg, steps=200, batch=8, seq=128, lr=0.005, mode="cpr-mfu",
             break
         params, ostate, tracker, loss = step_fn(params, ostate, tracker, b)
         mgr.samples_seen += batch
+        if i == 0:      # step 0 is jit compile; time the steady-state rate
+            t_steady = time.time()
+            blocked0 = mgr.ledger.save_blocked_s
+        else:           # exclude time already blocked inside save events
+            train_wall = (time.time() - t_steady) - \
+                (mgr.ledger.save_blocked_s - blocked0)
+            mgr.wall_time_scale = i / max(train_wall, 1e-9)
         t_prev, t_sim = t_sim, t_sim + 1.0
         for t_ev in mgr.due_saves(t_sim):
             tracker = mgr.run_save(
@@ -97,13 +106,17 @@ def train(cfg, steps=200, batch=8, seq=128, lr=0.005, mode="cpr-mfu",
                 ev, [np.asarray(params["embed"])],
                 [np.asarray(ostate["acc"]["embed"])])
             params = {**params, "embed": jnp.asarray(new_t[0])}
-            ostate = {"acc": {**ostate["acc"], "embed": jnp.asarray(new_a[0])}}
+            # {**ostate, ...}: non-"acc" optimizer state must survive restores
+            ostate = {**ostate,
+                      "acc": {**ostate["acc"], "embed": jnp.asarray(new_a[0])}}
             history["events"].append(("failure", i, info.get("pls", 0.0)))
         if i % log_every == 0 or i == steps - 1:
             history["loss"].append((i, float(loss)))
             print(f"step {i:5d} loss {float(loss):.4f} "
                   f"({(time.time() - t0) / (i + 1):.2f}s/step)", flush=True)
+    mgr.fence()   # drain in-flight async saves before reporting
     history["report"] = mgr.report()
+    mgr.close()
     return params, history
 
 
@@ -120,15 +133,23 @@ def main():
     ap.add_argument("--failures", type=int, default=2)
     ap.add_argument("--target-pls", type=float, default=0.1)
     ap.add_argument("--checkpoint-dir", default=None)
+    ap.add_argument("--async-save", action="store_true",
+                    help="background double-buffered checkpoint writer")
+    ap.add_argument("--tracker-backend", choices=("host", "pallas"),
+                    default="pallas")
     args = ap.parse_args()
     cfg = build_cfg(args)
     _, hist = train(cfg, steps=args.steps, batch=args.batch, seq=args.seq,
                     lr=args.lr, mode=args.mode, n_failures=args.failures,
                     target_pls=args.target_pls,
-                    checkpoint_dir=args.checkpoint_dir)
+                    checkpoint_dir=args.checkpoint_dir,
+                    async_save=args.async_save,
+                    tracker_backend=args.tracker_backend)
     r = hist["report"]
+    o = r["overheads"]
     print(f"done: mode={r['mode']} pls={r['measured_pls']:.4f} "
-          f"overhead={r['overheads']['fraction'] * 100:.2f}% "
+          f"overhead={o['fraction'] * 100:.2f}% "
+          f"save_blocked={o['save_blocked_s']:.3f}s "
           f"final_loss={hist['loss'][-1][1]:.4f}")
 
 

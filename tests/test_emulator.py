@@ -62,12 +62,63 @@ def test_priority_modes_improve_or_match_vanilla(setup):
 
 
 def test_failures_degrade_vanilla_partial(setup):
-    """Heavy failures with naive partial recovery lose accuracy vs no-failure."""
+    """Heavy late failures with naive partial recovery lose accuracy.
+
+    Deterministic scenario: target_pls=0.5 puts Eq. 4's interval (224 h)
+    past T_total, so ``choose_strategy`` clamps it to 56 h — *zero* save
+    events land during the run (the only one is due exactly at its end)
+    and every failure reverts its shards to initialization.  Failure times
+    and shard sets are pinned late in the run so the reverted rows get
+    little retraining: both the measured PLS (Eq. 3 over pinned times) and
+    the AUC drop are stable, seed-independent assertions.
+    """
     cfg, ds = setup
     clean = run(cfg, ds, "full", n_failures=0).auc
-    hurt = run(cfg, ds, "cpr", n_failures=8, fraction=0.5,
-               target_pls=0.5).auc
-    assert hurt < clean + 0.005
+    p = SystemParams()
+    mgr = CPRManager("cpr", p, cfg.table_sizes, target_pls=0.5)
+    assert mgr.decision["t_save_partial_clamped"]   # the documented clamp
+    assert mgr.T_save == p.T_total
+    times = (40.0, 44.0, 48.0, 52.0)
+    shard_sets = ((0, 1, 2, 3), (4, 5, 6, 7), (0, 1, 2, 3), (4, 5, 6, 7))
+    inj = FailureInjector(len(times), 0.5, p.N_emb, p.T_total,
+                          times=times, shard_sets=shard_sets)
+    res = Emulator(cfg, ds, mgr, inj, batch_size=256).run()
+    # Eq. 3 with never-checkpointed shards: each event charges
+    # 4/8 * t_event/T_total minus what the prior revert already reset.
+    # t=40: .5*40/56  t=44: .5*44/56  t=48: .5*8/56  t=52: .5*8/56
+    expect_pls = 0.5 * (40 + 44 + 8 + 8) / 56
+    assert res.report["measured_pls"] == pytest.approx(expect_pls, abs=0.05)
+    assert res.report["overheads"]["lost"] == 0.0   # partial recovery
+    # every embedding shard reverted to init at >= 71 % through training
+    assert res.auc < clean - 0.01
+
+
+def test_failure_restore_preserves_extra_optimizer_state(setup):
+    """Regression: the failure path must rebuild ostate via {**ostate, ...}
+    — rebuilding as {"acc": ...} silently dropped any non-"acc" top-level
+    optimizer state (step counters, momenta), breaking optimizer swaps."""
+    import jax.numpy as jnp
+    from repro.optim.optimizers import Optimizer, get_optimizer
+    base = get_optimizer("rowwise_adagrad", 0.02)
+
+    def init(params):
+        return {**base.init(params), "t": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params=None):
+        u, s2 = base.update(grads, {"acc": state["acc"]}, params)
+        return u, {**s2, "t": state["t"] + 1}
+
+    cfg, ds = setup
+    p = SystemParams()
+    mgr = CPRManager("cpr", p, cfg.table_sizes, target_pls=0.1)
+    inj = FailureInjector(2, 0.25, p.N_emb, p.T_total,
+                          times=(10.0, 30.0))
+    emu = Emulator(cfg, ds, mgr, inj, batch_size=256,
+                   optimizer=Optimizer(init, update))
+    res = emu.run(max_steps=20)
+    assert mgr.n_failures == 2
+    assert "t" in emu.final_ostate           # survived both restores
+    assert int(emu.final_ostate["t"]) == res.n_steps
 
 
 def test_fallback_to_full_when_no_benefit(setup):

@@ -1,7 +1,7 @@
 """CPRManager policy + PLS-accounting properties, and the serve driver."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st
 
 from repro.core import CPRManager, FailureEvent, SystemParams
 from repro.core.manager import PRIORITY_MODES
