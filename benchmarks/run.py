@@ -26,6 +26,7 @@ BENCHMARKS = [
     ("fig12", "benchmarks.fig12_ssu_slope", {}),
     ("fig13", "benchmarks.fig13_scalability", {}),
     ("fig14", "benchmarks.fig14_async_save", {}),
+    ("fig15", "benchmarks.fig15_sharded_save", {}),
     ("table1", "benchmarks.table1_trackers", {}),
 ]
 
@@ -35,6 +36,7 @@ FAST_OVERRIDES = {
     "fig10": {"n_failures": (2, 20)},
     "fig14": {"max_rows": (20_000,), "events": 3,
               "select_sizes": (50_000,)},
+    "fig15": {"max_rows": 8_000, "n_shards": (1, 2, 4), "events": 3},
 }
 
 

@@ -5,6 +5,8 @@ Public API:
   CPRManager                                   — mode policy + orchestration
   CheckpointStore, EmbShardSpec                — sharded partial checkpoints
   AsyncCheckpointWriter                        — background incremental saves
+  ShardedCheckpointWriter, ShardSaveError      — per-shard writer fleet with
+                                                 a coordinator fence
   GammaFailureModel, FailureInjector           — failure modeling (§3)
   Emulator                                     — the evaluation framework (§5.1)
   trackers                                     — MFU / SSU / SCAR (§4.2)
@@ -13,8 +15,10 @@ from repro.core.overhead import (SystemParams, choose_strategy, expected_pls,
                                  full_recovery_overhead,
                                  partial_recovery_overhead, scalability_curve,
                                  t_save_full_optimal, t_save_partial)
-from repro.core.checkpoint import (AsyncCheckpointWriter, CheckpointStore,
-                                   EmbShardSpec)
+from repro.core.checkpoint import (AsyncApplier, AsyncCheckpointWriter,
+                                   CheckpointStore, EmbShardSpec)
+from repro.core.sharded_checkpoint import (ShardedCheckpointWriter,
+                                           ShardSaveError, load_latest_auto)
 from repro.core.failure import FailureEvent, FailureInjector, GammaFailureModel
 from repro.core.manager import ALL_MODES, CPRManager
 from repro.core.emulator import EmulationResult, Emulator

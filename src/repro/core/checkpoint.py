@@ -14,6 +14,21 @@ back.  Backends:
              reconstructs the image from disk (crash-durable path used by
              the example drivers and tests).
 
+Disk-format invariants (each fixes a durability bug):
+  * every persisted file is keyed by a monotonically increasing event
+    sequence number (``partial_t<t>_e<seq>.npz`` / ``full_e<seq>.npz``),
+    never by (table, step) — two saves of the same table within one
+    training step must not overwrite each other on disk;
+  * ``load_latest`` replays strictly in manifest event order from the last
+    full event onward — a partial persisted *before* a full at the same
+    step must not be re-applied over the newer full image;
+  * full checkpoints persist the trainer replica tree (bottom/top MLPs)
+    alongside shard 0, and ``load_latest`` restores it.
+
+``repro.core.sharded_checkpoint`` builds the per-shard writer fleet
+(one writer + directory per Emb-PS shard, coordinator fence) on top of
+these primitives.
+
 ``AsyncCheckpointWriter`` wraps a store with a background writer thread and
 double-buffered snapshot staging, so save calls only pay for the host-side
 snapshot copy (the image/disk apply overlaps training) — the Check-N-Run
@@ -54,6 +69,45 @@ class EmbShardSpec:
         return np.searchsorted(self.boundaries[table], rows, side="right") - 1
 
 
+# flat-store manifest layout tag; "v2" = event-seq-keyed filenames,
+# manifest-order replay, trainer persist (the sharded fleet uses its own
+# "sharded-v1" tag — see repro.core.sharded_checkpoint)
+STORE_LAYOUT = "store-v2"
+
+
+def snap_host(a):
+    """Host snapshot that the caller cannot mutate afterwards.  Device
+    arrays already become a private host copy under ``np.asarray``
+    (device_get), so only host-side numpy inputs need an extra copy."""
+    out = np.asarray(a)
+    return np.array(out) if out is a or isinstance(a, np.ndarray) else out
+
+
+def _read_manifest(directory: str, layout: str, spec: "EmbShardSpec"):
+    """Read + validate ``directory``'s manifest against ``layout`` and the
+    caller's shard spec; returns None when no manifest exists.  A layout or
+    spec mismatch is an error — replaying another layout's (or another
+    N_emb's) files would scatter rows to wrong offsets."""
+    path = os.path.join(directory, "manifest.json")
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        manifest = json.load(f)
+    if manifest.get("layout") != layout:
+        raise ValueError(
+            f"unsupported checkpoint layout {manifest.get('layout')!r} in "
+            f"{directory} (expected {layout!r}; pre-v2 checkpoints used "
+            f"step-keyed filenames and must be re-created)")
+    if (manifest["n_shards"] != spec.n_shards or
+            list(manifest["table_sizes"]) != list(spec.table_sizes)):
+        raise ValueError(
+            f"checkpoint in {directory} was written for n_shards="
+            f"{manifest['n_shards']}, table_sizes={manifest['table_sizes']} "
+            f"but the caller's spec has n_shards={spec.n_shards}, "
+            f"table_sizes={list(spec.table_sizes)}")
+    return manifest
+
+
 class CheckpointStore:
     def __init__(self, tables: List[np.ndarray], accs: List[np.ndarray],
                  spec: EmbShardSpec, trainer_state=None,
@@ -69,10 +123,25 @@ class CheckpointStore:
         self.bytes_written = 0
         self.save_events = 0
         self.last_full_save_step = -1
+        self._seq = 0   # monotonically increasing event sequence number
         if directory:
             os.makedirs(directory, exist_ok=True)
-            self._manifest = {"events": [], "n_shards": spec.n_shards,
-                              "table_sizes": list(spec.table_sizes)}
+            # continue an existing checkpoint history rather than truncating
+            # it: a restarted run must not clobber the manifest (and reuse
+            # seq-keyed filenames) the previous run's recovery depends on
+            prev = _read_manifest(directory, STORE_LAYOUT, spec)
+            if prev is not None:
+                self._manifest = prev
+                self._seq = max((e.get("seq", 0)
+                                 for e in prev["events"]), default=0)
+            else:
+                self._manifest = {"layout": STORE_LAYOUT, "events": [],
+                                  "n_shards": spec.n_shards,
+                                  "table_sizes": list(spec.table_sizes)}
+
+    def _next_seq(self) -> int:
+        self._seq += 1
+        return self._seq
 
     # ------------------------------------------------------------ saves ----
     def save_full(self, tables, accs, trainer_state=None, step: int = 0):
@@ -90,9 +159,32 @@ class CheckpointStore:
         self.save_events += 1
         self.last_full_save_step = step
         if self.directory:
+            seq = self._next_seq()
             for j in range(self.spec.n_shards):
-                self._persist_shard(j, step, kind="full")
-            self._log_event({"kind": "full", "step": step, "bytes": nbytes})
+                self._persist_shard(j, seq, kind="full")
+            ev = {"kind": "full", "step": step, "seq": seq, "bytes": nbytes}
+            if trainer_state is not None:
+                # the trainer replica (bottom/top MLPs) travels with the
+                # full: disk-mode full recovery must not restore fresh MLPs
+                ev["trainer_file"] = self._persist_trainer(seq)
+            self._log_event(ev)
+        return nbytes
+
+    def save_trainer(self, trainer_state, step: int = 0):
+        """Persist/refresh the trainer replica image on its own (priority
+        modes never call ``save_full``, yet disk recovery still needs the
+        bottom/top MLPs — the manager ships them at T_save boundaries)."""
+        if trainer_state is None:
+            return 0
+        self.trainer_image = _to_numpy(trainer_state)
+        nbytes = sum(a.nbytes for a in _leaves(self.trainer_image))
+        self.bytes_written += nbytes
+        self.save_events += 1
+        if self.directory:
+            seq = self._next_seq()
+            self._log_event({"kind": "trainer", "step": step, "seq": seq,
+                             "bytes": nbytes,
+                             "trainer_file": self._persist_trainer(seq)})
         return nbytes
 
     def _filter_rows(self, table: int, rows, values, acc_values):
@@ -116,11 +208,17 @@ class CheckpointStore:
         self.bytes_written += nbytes
         self.save_events += 1
         if self.directory:
-            path = os.path.join(self.directory, f"partial_t{table}_s{step}.npz")
-            np.savez_compressed(path, rows=rows, values=values,
+            # keyed by event seq, not (table, step): two sub-interval saves
+            # of the same table in one training step must land in distinct
+            # files, else the manifest replays both events from whichever
+            # file survived the overwrite
+            seq = self._next_seq()
+            fname = f"partial_t{table}_e{seq}.npz"
+            np.savez_compressed(os.path.join(self.directory, fname),
+                                rows=rows, values=values,
                                 accs=acc_values, table=table, step=step)
             self._log_event({"kind": "partial", "table": table, "step": step,
-                             "bytes": nbytes, "file": os.path.basename(path)})
+                             "seq": seq, "bytes": nbytes, "file": fname})
         return nbytes
 
     # --------------------------------------------------------- restores ----
@@ -144,7 +242,7 @@ class CheckpointStore:
                 self.trainer_image)
 
     # ------------------------------------------------------------- disk ----
-    def _persist_shard(self, shard: int, step: int, kind: str):
+    def _persist_shard(self, shard: int, seq: int, kind: str):
         d = os.path.join(self.directory, f"shard_{shard}")
         os.makedirs(d, exist_ok=True)
         arrs = {}
@@ -152,7 +250,15 @@ class CheckpointStore:
             lo, hi = self.spec.shard_range(t, shard)
             arrs[f"table_{t}"] = self.image_tables[t][lo:hi]
             arrs[f"acc_{t}"] = self.image_accs[t][lo:hi]
-        np.savez_compressed(os.path.join(d, f"{kind}_{step}.npz"), **arrs)
+        np.savez_compressed(os.path.join(d, f"{kind}_e{seq}.npz"), **arrs)
+
+    def _persist_trainer(self, seq: int) -> str:
+        """Persist the trainer replica tree alongside shard 0."""
+        d = os.path.join(self.directory, "shard_0")
+        os.makedirs(d, exist_ok=True)
+        fname = f"trainer_e{seq}.npz"
+        save_trainer_tree(os.path.join(d, fname), self.trainer_image)
+        return fname
 
     def _log_event(self, ev):
         ev["time"] = time.time()
@@ -161,33 +267,124 @@ class CheckpointStore:
             json.dump(self._manifest, f)
 
     @classmethod
-    def load_latest(cls, directory: str, tables, accs, spec: EmbShardSpec):
-        """Reconstruct the image from disk (latest full + later partials)."""
+    def load_latest(cls, directory: str, tables, accs, spec: EmbShardSpec,
+                    trainer_state=None):
+        """Reconstruct the image from disk.
+
+        Replays strictly in **manifest event order**: the last full event is
+        the base image, and only partial events logged *after* it are
+        re-applied — a partial persisted before the full at the same step is
+        already folded into (or superseded by) the full image and must not
+        resurface over it.  ``trainer_state`` supplies the tree structure the
+        persisted trainer leaves are unflattened into (when omitted, the raw
+        leaf list is kept).
+        """
         store = cls(tables, accs, spec, directory=None)
-        with open(os.path.join(directory, "manifest.json")) as f:
-            manifest = json.load(f)
-        fulls = [e for e in manifest["events"] if e["kind"] == "full"]
-        last_full = max((e["step"] for e in fulls), default=None)
-        if last_full is not None:
+        manifest = _read_manifest(directory, STORE_LAYOUT, spec)
+        if manifest is None:
+            raise FileNotFoundError(f"no manifest.json in {directory}")
+        events = manifest["events"]
+        full_idx = None
+        for i, e in enumerate(events):
+            if e["kind"] == "full":
+                full_idx = i
+        start = 0
+        if full_idx is not None:
+            e = events[full_idx]
             for j in range(spec.n_shards):
                 path = os.path.join(directory, f"shard_{j}",
-                                    f"full_{last_full}.npz")
+                                    f"full_e{e['seq']}.npz")
                 with np.load(path) as z:
                     for t in range(len(tables)):
                         lo, hi = spec.shard_range(t, j)
                         store.image_tables[t][lo:hi] = z[f"table_{t}"]
                         store.image_accs[t][lo:hi] = z[f"acc_{t}"]
-        for e in manifest["events"]:
-            if e["kind"] == "partial" and (last_full is None or
-                                           e["step"] >= last_full):
+            start = full_idx + 1
+        for e in events[start:]:
+            if e["kind"] == "partial":
                 with np.load(os.path.join(directory, e["file"])) as z:
                     t = int(z["table"])
                     store.image_tables[t][z["rows"]] = z["values"]
                     store.image_accs[t][z["rows"]] = z["accs"]
+        # trainer replica: every trainer-bearing event (full or standalone)
+        # carries the complete tree, so the last one logged wins
+        tr_ev = None
+        for e in events:
+            if e.get("trainer_file"):
+                tr_ev = e
+        if tr_ev is not None:
+            store.trainer_image = load_trainer_tree(
+                os.path.join(directory, "shard_0", tr_ev["trainer_file"]),
+                trainer_state)
         return store
 
 
-class AsyncCheckpointWriter:
+class AsyncApplier:
+    """Background apply thread with bounded staging and a fail-stop latch.
+
+    The generic machinery under :class:`AsyncCheckpointWriter`, factored out
+    so the per-shard writer fleet (``repro.core.sharded_checkpoint``) can run
+    one applier per Emb-PS shard: ``submit`` enqueues ``fn(*args, **kw)`` for
+    the worker thread (blocking when ``max_inflight`` snapshots are already
+    staged), ``fence`` drains the queue and re-raises any latched worker
+    error, and after a worker error every later submission is discarded —
+    never applied out of order around the hole.
+    """
+
+    def __init__(self, name: str = "cpr-async-ckpt", max_inflight: int = 2):
+        self._q: queue.Queue = queue.Queue(maxsize=max_inflight)
+        self._exc: Optional[BaseException] = None
+        self._closed = False
+        self._thread = threading.Thread(target=self._worker, name=name,
+                                        daemon=True)
+        self._thread.start()
+
+    @property
+    def error(self) -> Optional[BaseException]:
+        """The latched worker error, if any (fail-stop: it never clears)."""
+        return self._exc
+
+    def _worker(self):
+        while True:
+            item = self._q.get()
+            try:
+                if item is None:
+                    return
+                if self._exc is None:          # fail-stop: drop after error
+                    fn, args, kw = item
+                    fn(*args, **kw)
+            except BaseException as e:        # latched, re-raised on caller
+                self._exc = e
+            finally:
+                self._q.task_done()
+
+    def submit(self, fn, *args, **kw):
+        self._check()
+        if self._closed:   # not an assert: under -O a stripped check would
+            raise RuntimeError("writer is closed")  # enqueue into a dead
+        self._q.put((fn, args, kw))           # thread and deadlock on full
+
+    def _check(self):
+        if self._exc is not None:             # stays latched: fail-stop
+            raise RuntimeError("async checkpoint writer failed; "
+                               "saves after the failure were discarded"
+                               ) from self._exc
+
+    def fence(self):
+        """Block until every enqueued apply has run (or been discarded)."""
+        self._q.join()
+        self._check()
+
+    def close(self):
+        """Best-effort shutdown; never raises (use fence() to check)."""
+        if self._closed:
+            return
+        self._closed = True
+        self._q.put(None)
+        self._thread.join()
+
+
+class AsyncCheckpointWriter(AsyncApplier):
     """Asynchronous front-end for a :class:`CheckpointStore`.
 
     ``save_full`` / ``save_rows`` take a consistent host snapshot of their
@@ -212,48 +409,13 @@ class AsyncCheckpointWriter:
 
     def __init__(self, store: CheckpointStore, max_inflight: int = 2):
         self.store = store
-        self._q: queue.Queue = queue.Queue(maxsize=max_inflight)
-        self._exc: Optional[BaseException] = None
-        self._closed = False
-        self._thread = threading.Thread(target=self._worker,
-                                        name="cpr-async-ckpt", daemon=True)
-        self._thread.start()
+        super().__init__(max_inflight=max_inflight)
 
-    # ------------------------------------------------------------ worker --
-    def _worker(self):
-        while True:
-            item = self._q.get()
-            try:
-                if item is None:
-                    return
-                if self._exc is None:          # fail-stop: drop after error
-                    fn, args, kw = item
-                    fn(*args, **kw)
-            except BaseException as e:        # latched, re-raised on caller
-                self._exc = e
-            finally:
-                self._q.task_done()
-
-    def _submit(self, fn, *args, **kw):
-        self._check()
-        if self._closed:   # not an assert: under -O a stripped check would
-            raise RuntimeError("writer is closed")  # enqueue into a dead
-        self._q.put((fn, args, kw))           # thread and deadlock on full
-
-    def _check(self):
-        if self._exc is not None:             # stays latched: fail-stop
-            raise RuntimeError("async checkpoint writer failed; "
-                               "saves after the failure were discarded"
-                               ) from self._exc
+    # kept under the historical name: tests poke failure injection through it
+    _submit = AsyncApplier.submit
 
     # ------------------------------------------------------------- saves --
-    @staticmethod
-    def _snap(a):
-        """Host snapshot that the caller cannot mutate afterwards.  Device
-        arrays already become a private host copy under ``np.asarray``
-        (device_get), so only host-side numpy inputs need an extra copy."""
-        out = np.asarray(a)
-        return np.array(out) if out is a or isinstance(a, np.ndarray) else out
+    _snap = staticmethod(snap_host)
 
     def save_full(self, tables, accs, trainer_state=None, step: int = 0):
         """Snapshot + enqueue a full checkpoint; returns snapshot bytes."""
@@ -281,19 +443,34 @@ class AsyncCheckpointWriter:
                      step)
         return values.nbytes + acc_values.nbytes + rows.nbytes
 
-    # ------------------------------------------------------------- sync ---
-    def fence(self):
-        """Block until every enqueued save has been applied to the store."""
-        self._q.join()
-        self._check()
+    def save_trainer(self, trainer_state, step: int = 0):
+        """Snapshot + enqueue a trainer-replica save; returns snapshot bytes."""
+        if trainer_state is None:
+            return 0
+        import jax
+        snap = jax.tree.map(self._snap, trainer_state)
+        self._submit(self.store.save_trainer, snap, step)
+        return sum(np.asarray(a).nbytes for a in _leaves(snap))
 
-    def close(self):
-        """Best-effort shutdown; never raises (use fence() to check)."""
-        if self._closed:
-            return
-        self._closed = True
-        self._q.put(None)
-        self._thread.join()
+
+def save_trainer_tree(path: str, tree) -> int:
+    """Persist a (numpy) pytree as an .npz of ordered leaves; returns bytes."""
+    leaves = _leaves(tree)
+    np.savez_compressed(path, **{f"leaf_{i}": np.asarray(a)
+                                 for i, a in enumerate(leaves)})
+    return sum(np.asarray(a).nbytes for a in leaves)
+
+
+def load_trainer_tree(path: str, template=None):
+    """Inverse of :func:`save_trainer_tree`.  ``template`` supplies the tree
+    structure (leaf order is jax's canonical flatten order); without it the
+    raw leaf list is returned."""
+    with np.load(path) as z:
+        leaves = [z[f"leaf_{i}"] for i in range(len(z.files))]
+    if template is None:
+        return leaves
+    import jax
+    return jax.tree.unflatten(jax.tree.structure(template), leaves)
 
 
 def _to_numpy(tree):

@@ -27,6 +27,7 @@ import numpy as np
 from repro.core import trackers as trk
 from repro.core.failure import FailureInjector
 from repro.core.manager import CPRManager
+from repro.core.sharded_checkpoint import load_latest_auto
 from repro.metrics.classification import log_loss, roc_auc
 from repro.models import dlrm as D
 from repro.optim.optimizers import apply_updates, get_optimizer
@@ -93,11 +94,30 @@ class Emulator:
 
         return step, opt
 
-    def run(self, max_steps: Optional[int] = None) -> EmulationResult:
+    def run(self, max_steps: Optional[int] = None,
+            resume_from: Optional[str] = None) -> EmulationResult:
         cfg, mgr = self.cfg, self.mgr
         params = D.init_dlrm(cfg, jax.random.PRNGKey(self.seed))
         step_fn, opt = self._build_step()
         ostate = opt.init(params)
+        if resume_from:
+            # disk-mode full recovery: embedding shards + optimizer rows +
+            # the trainer replica (bottom/top MLPs) all come back from the
+            # last consistent checkpoint cycle, whichever store layout
+            # (flat or per-shard fleet) wrote it
+            loaded = load_latest_auto(
+                resume_from, [np.asarray(t) for t in params["tables"]],
+                [np.asarray(a) for a in ostate["acc"]["tables"]], mgr.spec,
+                trainer_state={"bottom": params["bottom"],
+                               "top": params["top"]})
+            r_t, r_a, trainer = loaded.restore_all()
+            params = {**params, "tables": [jnp.asarray(x) for x in r_t]}
+            if trainer is not None:
+                params = {**params,
+                          **jax.tree.map(jnp.asarray, trainer)}
+            ostate = {**ostate,
+                      "acc": {**ostate["acc"],
+                              "tables": [jnp.asarray(x) for x in r_a]}}
         tracker = mgr.tracker_init(params["tables"])
         mgr.attach_store(params["tables"], ostate["acc"]["tables"],
                          {"bottom": params["bottom"], "top": params["top"]})

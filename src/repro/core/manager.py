@@ -27,6 +27,8 @@ from repro.core import overhead as oh
 from repro.core import trackers as trk
 from repro.core.checkpoint import (AsyncCheckpointWriter, CheckpointStore,
                                    EmbShardSpec)
+from repro.core.sharded_checkpoint import (ShardedCheckpointWriter,
+                                           ShardSaveError)
 
 PRIORITY_MODES = ("cpr-mfu", "cpr-ssu", "cpr-scar")
 ALL_MODES = ("full", "partial", "cpr") + PRIORITY_MODES
@@ -70,7 +72,9 @@ class CPRManager:
                  table_sizes, target_pls: float = 0.1, r: float = 0.125,
                  ssu_period: int = 2, big_table_coverage: float = 0.99,
                  directory: Optional[str] = None, async_save: bool = False,
-                 tracker_backend: str = "host", seg_size: int = 512):
+                 tracker_backend: str = "host", seg_size: int = 512,
+                 sharded_save: bool = False,
+                 delta_saves: Optional[bool] = None):
         assert mode in ALL_MODES, mode
         assert tracker_backend in ("host", "pallas"), tracker_backend
         self.mode = mode
@@ -82,6 +86,11 @@ class CPRManager:
         self.spec = EmbShardSpec(table_sizes, sys_params.N_emb)
         self.directory = directory
         self.async_save = async_save
+        # sharded_save: one writer + directory per Emb-PS shard behind a
+        # coordinator fence (Check-N-Run's decoupled architecture); delta
+        # saves (row-hash skip of unchanged rows) default on with it
+        self.sharded_save = sharded_save
+        self.delta_saves = sharded_save if delta_saves is None else delta_saves
         self.tracker_backend = tracker_backend
         self.seg_size = seg_size
         # sim-hours per wall-second of blocked save time; the emulator sets
@@ -119,11 +128,13 @@ class CPRManager:
         # ---- runtime state ----
         self.ledger = OverheadLedger()
         self.pls = 0.0
+        self.pls_by_shard = np.zeros(sys_params.N_emb)
         self.n_failures = 0
         self.last_cycle_time = np.zeros(sys_params.N_emb)  # per-shard
         self._next_save_idx = 1       # multiples of sub-interval
-        self.store: Optional[CheckpointStore] = None
-        self.writer: Optional[AsyncCheckpointWriter] = None
+        self.store = None             # CheckpointStore | ShardedCheckpointWriter
+        self.writer = None            # async/sharded front-end (fence/close)
+        self.shard_failures: Dict[int, BaseException] = {}  # poisoned shards
         self.samples_seen = 0
         self.samples_at_cycle = np.zeros(sys_params.N_emb)
         self.history = []
@@ -162,10 +173,20 @@ class CPRManager:
     def attach_store(self, tables, accs, trainer_state=None):
         if self.writer is not None:           # re-attach: stop the old thread
             self.writer.close()
-        self.store = CheckpointStore(tables, accs, self.spec, trainer_state,
-                                     directory=self.directory)
-        if self.async_save:
-            self.writer = AsyncCheckpointWriter(self.store)
+        if self.sharded_save:
+            # the sharded fleet is both the store (image, restores, byte
+            # accounting) and the writer (fence/close routing)
+            self.store = ShardedCheckpointWriter(
+                tables, accs, self.spec, trainer_state,
+                directory=self.directory, async_save=self.async_save,
+                delta_saves=self.delta_saves)
+            self.writer = self.store
+        else:
+            self.store = CheckpointStore(tables, accs, self.spec,
+                                         trainer_state,
+                                         directory=self.directory)
+            self.writer = (AsyncCheckpointWriter(self.store)
+                           if self.async_save else None)
         self._total_bytes = sum(np.asarray(t).nbytes + np.asarray(a).nbytes
                                 for t, a in zip(tables, accs))
         if trainer_state is not None:
@@ -174,9 +195,18 @@ class CPRManager:
                                      for a in jax.tree.leaves(trainer_state))
 
     def fence(self):
-        """Drain in-flight async saves (no-op for the sync store)."""
+        """Drain in-flight async saves (no-op for the sync store).
+
+        A poisoned shard in the sharded fleet is fail-stop per shard: the
+        coordinator fence still drains/stamps the healthy shards, and the
+        error is recorded in ``shard_failures`` (surfaced in ``report()``)
+        instead of killing training — the poisoned shard simply recovers
+        from its last-good image."""
         if self.writer is not None:
-            self.writer.fence()
+            try:
+                self.writer.fence()
+            except ShardSaveError as e:
+                self.shard_failures.update(e.shard_errors)
 
     def close(self):
         """Drain and stop the async writer thread (idempotent)."""
@@ -257,15 +287,25 @@ class CPRManager:
                     rows = np.arange(n)
                     nbytes += saver.save_rows(t, rows, np.asarray(tables[t]),
                                               np.asarray(accs[t]), step=step)
+                # priority modes never run save_full, so the trainer replica
+                # (bottom/top MLPs) rides along at every cycle boundary —
+                # disk-mode recovery must not restore fresh MLPs
+                if trainer_state is not None:
+                    nbytes += saver.save_trainer(trainer_state, step=step)
         else:
             nbytes += saver.save_full(tables, accs, trainer_state, step=step)
-        if is_boundary and self.is_priority and self.writer is not None:
+        if is_boundary and self.writer is not None and (
+                self.is_priority or (self.sharded_save and self.directory)):
             # a boundary completes a multi-sub-interval priority cycle: drain
             # it before PLS bookkeeping stamps the cycle as the shards'
-            # recovery point.  Non-priority saves never fence here — queue
-            # ordering plus the fence in on_failure/report already guarantee
-            # restores observe them, so the apply fully overlaps training.
-            self.writer.fence()
+            # recovery point.  Flat-store non-priority saves never fence
+            # here — queue ordering plus the fence in on_failure/report
+            # already guarantee restores observe them, so the apply fully
+            # overlaps training.  The sharded fleet with a disk directory
+            # must fence every boundary regardless: its crash-durability
+            # point is the coordinator's cycle stamp, which only a fence
+            # writes — without it a crash would lose the whole run's saves.
+            self.fence()
         # bandwidth-proportional modeled save cost
         frac = nbytes / max(self._total_bytes, 1)
         self.ledger.save += self.p.O_save * frac
@@ -274,8 +314,17 @@ class CPRManager:
         self.ledger.save_blocked_s += blocked
         self.ledger.save_measured += blocked * self.wall_time_scale
         if is_boundary:
-            self.last_cycle_time[:] = t_event
-            self.samples_at_cycle[:] = self.samples_seen
+            # a poisoned shard's saves were dropped, so its recovery point
+            # (and hence its PLS/lost-time accounting) must stay at the last
+            # cycle that actually reached its writer
+            ok = np.ones(self.p.N_emb, dtype=bool)
+            bad = set(self.shard_failures)
+            if self.sharded_save and self.store is not None:
+                bad |= set(self.store.failed)
+            for j in bad:
+                ok[j] = False
+            self.last_cycle_time[ok] = t_event
+            self.samples_at_cycle[ok] = self.samples_seen
         self.history.append({"t": t_event, "event": "save",
                              "boundary": bool(is_boundary)})
         return tracker_state
@@ -306,8 +355,10 @@ class CPRManager:
         # PLS increment (Eq. 3): per failed shard, samples since its last
         # checkpoint cycle / (S_total · N_emb)
         for j in event.shard_ids:
-            self.pls += (self.samples_seen - self.samples_at_cycle[j]) / \
+            inc = (self.samples_seen - self.samples_at_cycle[j]) / \
                 max(self._s_total, 1) / self.p.N_emb
+            self.pls += inc
+            self.pls_by_shard[j] += inc
             # the restored shard is now at its checkpoint state
             self.last_cycle_time[j] = t
             self.samples_at_cycle[j] = self.samples_seen
@@ -321,10 +372,11 @@ class CPRManager:
     # ----------------------------------------------------------- report ----
     def report(self):
         self.fence()   # bytes_written must include in-flight saves
-        return {
+        out = {
             "mode": self.mode,
             "effective_mode": self.effective_mode,
             "async_save": self.async_save,
+            "sharded_save": self.sharded_save,
             "tracker_backend": self.tracker_backend,
             "T_save": self.T_save,
             "save_interval": self.save_interval,
@@ -332,8 +384,17 @@ class CPRManager:
             "expected_pls": (oh.expected_pls(self.p, self.T_save)
                              if self.uses_partial_recovery else 0.0),
             "measured_pls": self.pls,
+            "pls_by_shard": self.pls_by_shard.tolist(),
             "n_failures": self.n_failures,
             "overheads": self.ledger.as_dict(self.p.T_total),
             "bytes_written": self.store.bytes_written if self.store else 0,
             "decision": self.decision,
         }
+        if self.sharded_save and self.store is not None:
+            out["shard_bytes"] = self.store.shard_bytes
+            out["shard_events"] = self.store.shard_events
+            out["delta_rows_skipped"] = self.store.delta_rows_skipped
+            out["delta_bytes_skipped"] = self.store.delta_bytes_skipped
+            out["dropped_bytes"] = self.store.dropped_bytes
+            out["shard_failures"] = sorted(self.shard_failures)
+        return out

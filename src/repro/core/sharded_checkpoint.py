@@ -1,0 +1,569 @@
+"""Per-shard async checkpoint writer fleet with a coordinator fence.
+
+The paper's production setting (and Check-N-Run, Eisenman et al.) decouples
+snapshot from persist *per Emb-PS shard*: every shard owns its slice of each
+embedding table and persists it independently, so a slow or failed shard
+never blocks — or loses — the others' saves.  This module is that
+architecture on one host:
+
+  * :class:`ShardedCheckpointWriter` owns one :class:`_ShardStore` (image +
+    disk persistence for the shard's row ranges) and one applier — an
+    :class:`AsyncApplier` worker thread, or an inline applier in sync mode —
+    per shard.  ``save_rows`` routes each row to its owning shard via
+    ``EmbShardSpec.shard_of_rows``; ``save_full`` takes ONE immutable host
+    snapshot per table and hands it to every writer, whose worker slices
+    out its own row ranges — so the save-event critical path (snapshot +
+    n_shards enqueues) does not grow with shard count.
+
+  * **Coordinator fence** (two-phase): phase 1 drains every shard's queue so
+    all enqueued applies are durably in that shard's image/directory; phase
+    2 flushes the completed per-shard events into the single coordinator
+    manifest and stamps a global ``cycle`` record.  ``load_latest`` only
+    replays events logged *before* the last cycle stamp, so it reconstructs
+    a consistent cross-shard image even when shards persisted at different
+    rates (events persisted after the last fence may exist on disk for some
+    shards but not others — they are ignored).
+
+  * **Per-shard fail-stop**: a worker error poisons only its own shard.
+    Later work routed to a poisoned shard is dropped (and counted), other
+    shards keep saving; ``fence`` still drains and stamps the healthy shards
+    before raising :class:`ShardSaveError`, so one writer's error never
+    loses the others' saves.  A poisoned shard's image stays frozen at its
+    last successful apply — exactly the fail-stop image partial recovery
+    restores from.
+
+  * **Delta saves**: with ``delta_saves`` the writer keeps a 64-bit FNV-1a
+    content hash per row of the last value it shipped; ``save_rows`` skips
+    rows whose (value, accumulator) hash is unchanged, cutting partial-save
+    bytes for rows the tracker selected but training did not touch.  Hashes
+    are only advanced for rows actually routed to a healthy shard.
+
+Disk layout (all under the coordinator ``directory``)::
+
+    manifest.json               coordinator event log + cycle stamps
+    shard_<j>/full_e<seq>.npz   shard j's slice of every table at seq
+    shard_<j>/partial_t<t>_e<seq>.npz
+    shard_0/trainer_e<seq>.npz  trainer replica tree (full saves only)
+
+Every event carries the global, monotonically increasing ``seq`` assigned at
+submit time; filenames are keyed by it, never by (table, step).
+"""
+from __future__ import annotations
+
+import json
+import os
+import threading
+import time
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.checkpoint import (AsyncApplier, EmbShardSpec, _leaves,
+                                   _read_manifest, _to_numpy,
+                                   load_trainer_tree, save_trainer_tree,
+                                   snap_host)
+
+LAYOUT = "sharded-v1"
+
+_FNV_OFFSET = np.uint64(14695981039346656037)
+_FNV_PRIME = np.uint64(1099511628211)
+
+
+def row_hash(values: np.ndarray, acc_values: np.ndarray) -> np.ndarray:
+    """Vectorized per-row 64-bit FNV-1a over the bytes of (value, acc) rows,
+    folded in zero-padded 64-bit words (8x fewer passes than per-byte)."""
+    n = np.asarray(values).shape[0]
+    h = np.full(n, _FNV_OFFSET, np.uint64)
+    for part in (values, acc_values):
+        b = np.ascontiguousarray(part).reshape(n, -1).view(np.uint8)
+        pad = -b.shape[1] % 8
+        if pad:
+            b = np.pad(b, ((0, 0), (0, pad)))
+        w = np.ascontiguousarray(b).view(np.uint64)
+        with np.errstate(over="ignore"):
+            for i in range(w.shape[1]):
+                h = (h ^ w[:, i]) * _FNV_PRIME
+    return h
+
+
+class ShardSaveError(RuntimeError):
+    """One or more shard writers failed (fail-stop).  Healthy shards' saves
+    were drained and stamped before this was raised."""
+
+    def __init__(self, shard_errors: Dict[int, BaseException]):
+        self.shard_errors = dict(shard_errors)
+        names = ", ".join(f"{j}: {e!r}" for j, e in
+                          sorted(self.shard_errors.items()))
+        super().__init__(
+            f"checkpoint writer(s) for shard(s) "
+            f"{sorted(self.shard_errors)} failed fail-stop ({names}); "
+            f"their saves after the failure were discarded, other shards' "
+            f"saves are intact")
+
+
+class _InlineApplier:
+    """Same surface as :class:`AsyncApplier`, applied on the caller thread
+    (sync mode) with the same fail-stop latch semantics."""
+
+    def __init__(self):
+        self._exc: Optional[BaseException] = None
+
+    @property
+    def error(self) -> Optional[BaseException]:
+        return self._exc
+
+    def submit(self, fn, *args, **kw):
+        """Apply inline; raises on the latching call (parity with
+        ``AsyncApplier.submit`` raising once an error is latched) so the
+        router never counts a failed apply as saved."""
+        if self._exc is not None:              # fail-stop after error
+            raise RuntimeError("shard writer failed") from self._exc
+        try:
+            fn(*args, **kw)
+        except BaseException as e:
+            self._exc = e
+            raise RuntimeError("checkpoint apply failed") from e
+
+    def fence(self):
+        if self._exc is not None:
+            raise RuntimeError("checkpoint apply failed") from self._exc
+
+    def close(self):
+        pass
+
+
+class _ShardStore:
+    """Image + disk persistence for one shard's row ranges.
+
+    ``apply_*`` methods run on the shard's (single) applier thread; the
+    completed-event list is only read by the coordinator after that queue
+    has been drained, so no locking is needed.
+    """
+
+    def __init__(self, shard: int, spec: EmbShardSpec, tables, accs,
+                 directory: Optional[str] = None):
+        self.shard = shard
+        self.spec = spec
+        self.ranges = [spec.shard_range(t, shard)
+                       for t in range(len(spec.table_sizes))]
+        self.image_tables = [np.array(np.asarray(t)[lo:hi])
+                             for t, (lo, hi) in zip(tables, self.ranges)]
+        self.image_accs = [np.array(np.asarray(a)[lo:hi])
+                           for a, (lo, hi) in zip(accs, self.ranges)]
+        self.trainer_image = None              # populated on shard 0 only
+        self.directory = directory
+        self.bytes_written = 0
+        self.save_events = 0
+        self.applied: List[dict] = []          # completed events, in order
+        if directory:
+            os.makedirs(directory, exist_ok=True)
+
+    def _record(self, ev):
+        ev["shard"] = self.shard
+        ev["time"] = time.time()
+        self.bytes_written += ev["bytes"]
+        self.save_events += 1
+        self.applied.append(ev)
+
+    def apply_full(self, tables, accs, step: int, seq: int):
+        """``tables``/``accs`` are immutable full-table snapshots shared
+        with the other shards' workers (read-only); slice out our ranges."""
+        nbytes = 0
+        for t, (lo, hi) in enumerate(self.ranges):
+            self.image_tables[t][...] = tables[t][lo:hi]
+            self.image_accs[t][...] = accs[t][lo:hi]
+            nbytes += self.image_tables[t].nbytes + self.image_accs[t].nbytes
+        if self.directory:
+            arrs = {}
+            for t in range(len(self.image_tables)):
+                arrs[f"table_{t}"] = self.image_tables[t]
+                arrs[f"acc_{t}"] = self.image_accs[t]
+            np.savez_compressed(
+                os.path.join(self.directory, f"full_e{seq}.npz"), **arrs)
+        self._record({"kind": "full", "step": step, "seq": seq,
+                      "bytes": nbytes})
+
+    def apply_rows(self, table: int, rows: np.ndarray, values: np.ndarray,
+                   acc_values: np.ndarray, step: int, seq: int):
+        """``rows`` are global ids, already routed to (and owned by) us."""
+        lo, _ = self.ranges[table]
+        local = rows - lo
+        self.image_tables[table][local] = values
+        self.image_accs[table][local] = acc_values
+        nbytes = values.nbytes + acc_values.nbytes + rows.nbytes
+        fname = None
+        if self.directory:
+            fname = f"partial_t{table}_e{seq}.npz"
+            np.savez_compressed(os.path.join(self.directory, fname),
+                                rows=rows, values=values, accs=acc_values,
+                                table=table, step=step)
+        self._record({"kind": "partial", "table": table, "step": step,
+                      "seq": seq, "bytes": nbytes, "file": fname})
+
+    def apply_trainer(self, tree, step: int, seq: int):
+        self.trainer_image = tree
+        nbytes = sum(np.asarray(a).nbytes for a in _leaves(tree))
+        fname = None
+        if self.directory:
+            fname = f"trainer_e{seq}.npz"
+            save_trainer_tree(os.path.join(self.directory, fname), tree)
+        self._record({"kind": "trainer", "step": step, "seq": seq,
+                      "bytes": nbytes, "file": fname})
+
+
+class ShardedCheckpointWriter:
+    """One checkpoint writer + directory per Emb-PS shard, one coordinator.
+
+    Drop-in for the (store, writer) pair ``CPRManager`` keeps: exposes
+    ``save_full`` / ``save_rows`` / ``fence`` / ``close`` plus the store-side
+    surface (``restore_shards``, ``restore_all``, ``bytes_written``,
+    ``save_events``, assembled ``image_tables`` / ``image_accs`` views).
+    """
+
+    def __init__(self, tables, accs, spec: EmbShardSpec, trainer_state=None,
+                 directory: Optional[str] = None, async_save: bool = True,
+                 delta_saves: bool = True, max_inflight: int = 2):
+        self.spec = spec
+        self.n_shards = spec.n_shards
+        self.directory = directory
+        self.async_save = async_save
+        self.delta_saves = delta_saves
+        host_t = [np.asarray(t) for t in tables]
+        host_a = [np.asarray(a) for a in accs]
+        self.stores = [
+            _ShardStore(j, spec, host_t, host_a,
+                        directory=(os.path.join(directory, f"shard_{j}")
+                                   if directory else None))
+            for j in range(self.n_shards)]
+        self.stores[0].trainer_image = _to_numpy(trainer_state)
+        self.appliers = [
+            (AsyncApplier(name=f"cpr-shard-ckpt-{j}",
+                          max_inflight=max_inflight)
+             if async_save else _InlineApplier())
+            for j in range(self.n_shards)]
+        self.failed: Dict[int, BaseException] = {}   # poisoned shards
+        self._seq = 0
+        self._seq_lock = threading.Lock()
+        self.cycle = 0
+        self.dropped_bytes = 0          # routed to a poisoned shard
+        self.delta_rows_skipped = 0
+        self.delta_bytes_skipped = 0
+        self._hashes = ([row_hash(t, a) for t, a in zip(host_t, host_a)]
+                        if delta_saves else None)
+        if directory:
+            os.makedirs(directory, exist_ok=True)
+            # continue an existing history (restarted run) instead of
+            # truncating the manifest the previous run's recovery needs;
+            # seq/cycle counters resume past the old maxima so filenames
+            # never collide with already-referenced files
+            prev = _read_manifest(directory, LAYOUT, spec)
+            if prev is not None:
+                self._manifest = prev
+                self._seq = max((e.get("seq", 0)
+                                 for e in prev["events"]), default=0)
+                self.cycle = max((e["cycle"] for e in prev["events"]
+                                  if e["kind"] == "cycle"), default=0)
+            else:
+                self._manifest = {"layout": LAYOUT,
+                                  "n_shards": self.n_shards,
+                                  "table_sizes": list(spec.table_sizes),
+                                  "events": []}
+
+    # --------------------------------------------------------- accounting --
+    @property
+    def bytes_written(self) -> int:
+        return sum(s.bytes_written for s in self.stores)
+
+    @property
+    def save_events(self) -> int:
+        return sum(s.save_events for s in self.stores)
+
+    @property
+    def shard_bytes(self) -> List[int]:
+        return [s.bytes_written for s in self.stores]
+
+    @property
+    def shard_events(self) -> List[int]:
+        return [s.save_events for s in self.stores]
+
+    @property
+    def image_tables(self) -> List[np.ndarray]:
+        """Assembled full-table image (copy).  Fence before reading."""
+        return self._assemble()[0]
+
+    @property
+    def image_accs(self) -> List[np.ndarray]:
+        return self._assemble()[1]
+
+    @property
+    def trainer_image(self):
+        return self.stores[0].trainer_image
+
+    def _assemble(self):
+        tabs, accs = [], []
+        for t, n in enumerate(self.spec.table_sizes):
+            tab = np.empty((n,) + self.stores[0].image_tables[t].shape[1:],
+                           self.stores[0].image_tables[t].dtype)
+            acc = np.empty((n,) + self.stores[0].image_accs[t].shape[1:],
+                           self.stores[0].image_accs[t].dtype)
+            for s in self.stores:
+                lo, hi = s.ranges[t]
+                tab[lo:hi] = s.image_tables[t]
+                acc[lo:hi] = s.image_accs[t]
+            tabs.append(tab)
+            accs.append(acc)
+        return tabs, accs
+
+    # ------------------------------------------------------------ routing --
+    def _next_seq(self) -> int:
+        with self._seq_lock:
+            self._seq += 1
+            return self._seq
+
+    def _healthy(self, j: int) -> bool:
+        """Poisoned-shard check at routing time (fail-stop isolation): a
+        latched worker error drops this shard out of the fleet; everyone
+        else keeps saving."""
+        if j in self.failed:
+            return False
+        err = self.appliers[j].error
+        if err is not None:
+            self.failed[j] = err
+            return False
+        return True
+
+    def _submit_to(self, j: int, fn, *args) -> bool:
+        """Route work to shard ``j`` unless it is — or just became —
+        poisoned.  A worker error latching between the health check and the
+        enqueue (the applier's ``submit`` re-raises it) is treated exactly
+        like one seen earlier: dropped and recorded, never a crash."""
+        if not self._healthy(j):
+            return False
+        try:
+            self.appliers[j].submit(fn, *args)
+            return True
+        except RuntimeError as e:
+            self.failed[j] = self.appliers[j].error or e
+            return False
+
+    _snap = staticmethod(snap_host)
+
+    def save_full(self, tables, accs, trainer_state=None, step: int = 0):
+        """One immutable host snapshot per table, shared by every shard's
+        worker (each slices out its own ranges off-thread); returns enqueued
+        snapshot bytes (poisoned shards' slices are dropped, not counted)."""
+        seq = self._next_seq()
+        snap_t = [self._snap(t) for t in tables]
+        snap_a = [self._snap(a) for a in accs]
+        full_h = ([row_hash(t, a) for t, a in zip(snap_t, snap_a)]
+                  if self._hashes is not None else None)
+        nbytes = 0
+        for j, store in enumerate(self.stores):
+            part = sum(snap_t[t][lo:hi].nbytes + snap_a[t][lo:hi].nbytes
+                       for t, (lo, hi) in enumerate(store.ranges))
+            if not self._submit_to(j, store.apply_full, snap_t, snap_a,
+                                   step, seq):
+                self.dropped_bytes += part
+                continue
+            nbytes += part
+            if full_h is not None:
+                for t, (lo, hi) in enumerate(store.ranges):
+                    self._hashes[t][lo:hi] = full_h[t][lo:hi]
+        if trainer_state is not None:
+            import jax
+            snap_tr = jax.tree.map(self._snap, trainer_state)
+            if self._submit_to(0, self.stores[0].apply_trainer, snap_tr,
+                               step, seq):
+                nbytes += sum(np.asarray(a).nbytes
+                              for a in _leaves(snap_tr))
+        return nbytes
+
+    def save_trainer(self, trainer_state, step: int = 0):
+        """Snapshot + enqueue a trainer-replica save to shard 0 (priority
+        modes never run ``save_full``; the manager ships the MLPs here at
+        T_save boundaries so disk recovery is complete)."""
+        if trainer_state is None:
+            return 0
+        import jax
+        snap = jax.tree.map(self._snap, trainer_state)
+        if not self._submit_to(0, self.stores[0].apply_trainer, snap, step,
+                               self._next_seq()):
+            return 0
+        return sum(np.asarray(a).nbytes for a in _leaves(snap))
+
+    def save_rows(self, table: int, rows, values, acc_values, step: int = 0):
+        """Route a partial (priority) save to the owning shards; returns
+        enqueued snapshot bytes after delta filtering."""
+        rows = np.asarray(rows)
+        valid = (rows >= 0) & (rows < self.spec.table_sizes[table])
+        rows = rows[valid]                     # fancy indexing: fresh copies
+        values = np.asarray(values)[valid]
+        acc_values = np.asarray(acc_values)[valid]
+        if rows.size and self._hashes is not None:
+            h = row_hash(values, acc_values)
+            changed = h != self._hashes[table][rows]
+            skipped = ~changed
+            self.delta_rows_skipped += int(skipped.sum())
+            self.delta_bytes_skipped += int(values[skipped].nbytes +
+                                            acc_values[skipped].nbytes +
+                                            rows[skipped].nbytes)
+            rows, values, acc_values, h = (rows[changed], values[changed],
+                                           acc_values[changed], h[changed])
+        if rows.size == 0:
+            return 0
+        seq = self._next_seq()
+        owners = self.spec.shard_of_rows(table, rows)
+        nbytes = 0
+        for j in np.unique(owners):
+            m = owners == j
+            part = values[m].nbytes + acc_values[m].nbytes + rows[m].nbytes
+            if not self._submit_to(int(j), self.stores[j].apply_rows, table,
+                                   rows[m], values[m], acc_values[m],
+                                   step, seq):
+                self.dropped_bytes += part
+                continue
+            nbytes += part
+            if self._hashes is not None:
+                # advance the delta hashes only for rows a healthy shard
+                # actually accepted — dropped rows must not be skipped as
+                # "already saved" later
+                self._hashes[table][rows[m]] = h[m]
+        return nbytes
+
+    # -------------------------------------------------- coordinator fence --
+    def fence(self, strict: bool = True):
+        """Two-phase coordinator fence.
+
+        Phase 1 drains every healthy shard's queue (so all enqueued applies
+        are in the shard images and, in disk mode, durably persisted).
+        Phase 2 flushes the shards' completed events into the coordinator
+        manifest, in global ``seq`` order, and stamps a ``cycle`` record —
+        the consistency point ``load_latest`` recovers to.  With ``strict``
+        (the default) a :class:`ShardSaveError` is then raised if any shard
+        is poisoned; the healthy shards were already drained and stamped, so
+        their saves are never lost to another writer's error.
+        """
+        for j, applier in enumerate(self.appliers):
+            if j in self.failed:
+                continue
+            try:
+                applier.fence()
+            except RuntimeError:
+                self.failed[j] = applier.error
+        drained: List[dict] = []
+        for s in self.stores:
+            drained.extend(s.applied)
+            s.applied = []
+        if self.directory is not None:
+            drained.sort(key=lambda e: (e["seq"], e["shard"]))
+            self._manifest["events"].extend(drained)
+            self.cycle += 1
+            self._manifest["events"].append({
+                "kind": "cycle", "cycle": self.cycle, "time": time.time(),
+                "shard_seq": {str(j): max((e["seq"] for e in drained
+                                           if e["shard"] == j), default=0)
+                              for j in range(self.n_shards)},
+                "failed_shards": sorted(self.failed)})
+            tmp = os.path.join(self.directory, "manifest.json.tmp")
+            with open(tmp, "w") as f:
+                json.dump(self._manifest, f)
+            os.replace(tmp, os.path.join(self.directory, "manifest.json"))
+        if strict and self.failed:
+            raise ShardSaveError(self.failed)
+
+    def close(self):
+        """Stamp a final cycle and stop the worker threads; never raises."""
+        try:
+            self.fence(strict=False)
+        except Exception:
+            pass
+        for applier in self.appliers:
+            applier.close()
+
+    # ----------------------------------------------------------- restores --
+    def restore_shards(self, tables, accs, shard_ids: Sequence[int]):
+        """Partial recovery: revert only the failed shards' row ranges from
+        their writers' images.  Fence first (the manager does)."""
+        out_t = [np.array(t) for t in tables]
+        out_a = [np.array(a) for a in accs]
+        for j in shard_ids:
+            s = self.stores[j]
+            for t, (lo, hi) in enumerate(s.ranges):
+                if hi > lo:
+                    out_t[t][lo:hi] = s.image_tables[t]
+                    out_a[t][lo:hi] = s.image_accs[t]
+        return out_t, out_a
+
+    def restore_all(self):
+        """Full recovery image (every shard + trainer replica)."""
+        tabs, accs = self._assemble()
+        return tabs, accs, self.stores[0].trainer_image
+
+    # --------------------------------------------------------------- disk --
+    @classmethod
+    def load_latest(cls, directory: str, tables, accs, spec: EmbShardSpec,
+                    trainer_state=None) -> "ShardedCheckpointWriter":
+        """Reconstruct a consistent cross-shard image from disk.
+
+        Only events logged before the last ``cycle`` stamp are replayed —
+        files persisted after the last coordinator fence may cover some
+        shards but not others and are ignored.  Each shard then replays
+        independently, strictly in manifest event order, from its last full
+        event onward; the trainer replica comes from the newest stamped
+        trainer event.  Returns a sync-mode in-memory writer holding the
+        image (use ``restore_all`` / ``restore_shards``).
+        """
+        manifest = _read_manifest(directory, LAYOUT, spec)
+        if manifest is None:
+            raise FileNotFoundError(f"no manifest.json in {directory}")
+        events = manifest["events"]
+        last_cycle = None
+        for i, e in enumerate(events):
+            if e["kind"] == "cycle":
+                last_cycle = i
+        covered = events[:last_cycle] if last_cycle is not None else []
+        out = cls(tables, accs, spec, trainer_state=None, directory=None,
+                  async_save=False, delta_saves=False)
+        for j, store in enumerate(out.stores):
+            evs = [e for e in covered if e.get("shard") == j
+                   and e["kind"] in ("full", "partial")]
+            full_idx = None
+            for i, e in enumerate(evs):
+                if e["kind"] == "full":
+                    full_idx = i
+            start = 0
+            sdir = os.path.join(directory, f"shard_{j}")
+            if full_idx is not None:
+                with np.load(os.path.join(
+                        sdir, f"full_e{evs[full_idx]['seq']}.npz")) as z:
+                    for t in range(len(store.image_tables)):
+                        store.image_tables[t][...] = z[f"table_{t}"]
+                        store.image_accs[t][...] = z[f"acc_{t}"]
+                start = full_idx + 1
+            for e in evs[start:]:
+                if e["kind"] != "partial":
+                    continue
+                with np.load(os.path.join(sdir, e["file"])) as z:
+                    t = int(z["table"])
+                    local = z["rows"] - store.ranges[t][0]
+                    store.image_tables[t][local] = z["values"]
+                    store.image_accs[t][local] = z["accs"]
+        tr_evs = [e for e in covered if e["kind"] == "trainer"]
+        if tr_evs:
+            out.stores[0].trainer_image = load_trainer_tree(
+                os.path.join(directory, "shard_0", tr_evs[-1]["file"]),
+                trainer_state)
+        return out
+
+
+def load_latest_auto(directory: str, tables, accs, spec: EmbShardSpec,
+                     trainer_state=None):
+    """Dispatch on the manifest layout: sharded fleet vs flat store.
+    Returns an object exposing ``restore_all`` / ``restore_shards``."""
+    from repro.core.checkpoint import CheckpointStore
+    with open(os.path.join(directory, "manifest.json")) as f:
+        layout = json.load(f).get("layout")
+    loader = (ShardedCheckpointWriter if layout == LAYOUT
+              else CheckpointStore)
+    return loader.load_latest(directory, tables, accs, spec,
+                              trainer_state=trainer_state)

@@ -39,7 +39,8 @@ def build_cfg(args):
 def train(cfg, steps=200, batch=8, seq=128, lr=0.005, mode="cpr-mfu",
           n_failures=2, fail_fraction=0.25, seed=0, target_pls=0.1,
           checkpoint_dir=None, log_every=20, use_flash=False,
-          async_save=False, tracker_backend="pallas"):
+          async_save=False, tracker_backend="pallas", sharded_save=False,
+          delta_saves=None, n_emb=8, resume=False):
     """Returns (final_params, history dict)."""
     assert cfg.causal and cfg.modality_frontend is None, \
         "LM driver needs a causal text model"
@@ -50,10 +51,24 @@ def train(cfg, steps=200, batch=8, seq=128, lr=0.005, mode="cpr-mfu",
                       seed=seed)
 
     # --- CPR over the Emb-PS analogue: the token-embedding rows ---
-    p = SystemParams(T_total=float(steps), T_fail=float(steps) / max(n_failures, 1))
+    p = SystemParams(T_total=float(steps),
+                     T_fail=float(steps) / max(n_failures, 1), N_emb=n_emb)
     mgr = CPRManager(mode, p, (cfg.vocab_size,), target_pls=target_pls,
                      directory=checkpoint_dir, async_save=async_save,
-                     tracker_backend=tracker_backend)
+                     tracker_backend=tracker_backend,
+                     sharded_save=sharded_save, delta_saves=delta_saves)
+    if resume and checkpoint_dir:
+        # warm start from the last consistent cycle on disk: embedding rows,
+        # their optimizer rows, and the non-embedding trainer tree
+        from repro.core import load_latest_auto
+        loaded = load_latest_auto(
+            checkpoint_dir, [np.asarray(params["embed"])],
+            [np.asarray(ostate["acc"]["embed"])], mgr.spec,
+            trainer_state={k: v for k, v in params.items() if k != "embed"})
+        r_t, r_a, trainer = loaded.restore_all()
+        params = {**params, **(trainer or {}), "embed": jnp.asarray(r_t[0])}
+        ostate = {**ostate,
+                  "acc": {**ostate["acc"], "embed": jnp.asarray(r_a[0])}}
     tracker = mgr.tracker_init([params["embed"]])
     mgr.attach_store([params["embed"]], [ostate["acc"]["embed"]],
                      {k: v for k, v in params.items() if k != "embed"})
@@ -135,6 +150,17 @@ def main():
     ap.add_argument("--checkpoint-dir", default=None)
     ap.add_argument("--async-save", action="store_true",
                     help="background double-buffered checkpoint writer")
+    ap.add_argument("--sharded-save", action="store_true",
+                    help="one writer + directory per Emb-PS shard with a "
+                         "coordinator fence (implies delta saves)")
+    ap.add_argument("--no-delta-saves", action="store_true",
+                    help="disable row-hash skip of unchanged rows in "
+                         "sharded partial saves")
+    ap.add_argument("--n-emb", type=int, default=8,
+                    help="number of Emb-PS shards (N_emb)")
+    ap.add_argument("--resume", action="store_true",
+                    help="restore the last consistent checkpoint cycle "
+                         "from --checkpoint-dir before training")
     ap.add_argument("--tracker-backend", choices=("host", "pallas"),
                     default="pallas")
     args = ap.parse_args()
@@ -144,6 +170,9 @@ def main():
                     target_pls=args.target_pls,
                     checkpoint_dir=args.checkpoint_dir,
                     async_save=args.async_save,
+                    sharded_save=args.sharded_save,
+                    delta_saves=(False if args.no_delta_saves else None),
+                    n_emb=args.n_emb, resume=args.resume,
                     tracker_backend=args.tracker_backend)
     r = hist["report"]
     o = r["overheads"]

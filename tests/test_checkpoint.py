@@ -95,6 +95,70 @@ def test_disk_roundtrip(tmp_path):
                                   dacc[0][[1, 2]] + 1.0)
 
 
+def test_two_partials_same_table_same_step_both_survive_on_disk(tmp_path):
+    """Regression: partial files were keyed by (table, step), so two
+    sub-interval saves of the same table in one training step silently
+    overwrote each other — the manifest then replayed both events from the
+    surviving file.  Files are now keyed by event sequence number."""
+    tables, accs = make_state(sizes=(10,))
+    spec = EmbShardSpec((10,), 2)
+    store = CheckpointStore(tables, accs, spec, directory=str(tmp_path))
+    a_vals = np.full((1, 8), 11.0, np.float32)
+    b_vals = np.full((1, 8), 22.0, np.float32)
+    store.save_rows(0, np.array([0]), a_vals, np.ones(1, np.float32), step=5)
+    store.save_rows(0, np.array([1]), b_vals, np.ones(1, np.float32), step=5)
+    files = [p for p in os.listdir(str(tmp_path)) if p.startswith("partial")]
+    assert len(files) == 2                    # distinct files on disk
+    loaded = CheckpointStore.load_latest(str(tmp_path), tables, accs, spec)
+    np.testing.assert_array_equal(loaded.image_tables[0][0], a_vals[0])
+    np.testing.assert_array_equal(loaded.image_tables[0][1], b_vals[0])
+
+
+def test_partial_before_full_same_step_not_replayed_over_full(tmp_path):
+    """Regression: load_latest replayed partials by ``step >= last_full``,
+    so a partial persisted *before* the full at the same step resurrected
+    stale rows over the newer full image.  Replay is now strictly by
+    manifest event order from the last full event onward."""
+    tables, accs = make_state(sizes=(10,))
+    spec = EmbShardSpec((10,), 2)
+    store = CheckpointStore(tables, accs, spec, directory=str(tmp_path))
+    stale = np.full((1, 8), -5.0, np.float32)
+    store.save_rows(0, np.array([2]), stale, np.zeros(1, np.float32), step=10)
+    newer = [t + 3.0 for t in tables]
+    store.save_full(newer, [a + 1.0 for a in accs], step=10)
+    loaded = CheckpointStore.load_latest(str(tmp_path), tables, accs, spec)
+    np.testing.assert_array_equal(loaded.image_tables[0], newer[0])
+    # a partial logged *after* the full still wins, as before
+    store.save_rows(0, np.array([3]), stale, np.zeros(1, np.float32), step=10)
+    loaded = CheckpointStore.load_latest(str(tmp_path), tables, accs, spec)
+    np.testing.assert_array_equal(loaded.image_tables[0][3], stale[0])
+
+
+def test_trainer_replica_persisted_and_restored(tmp_path):
+    """Regression: save_full wrote only shard .npz files — disk-mode full
+    recovery silently restored fresh MLPs.  The trainer tree now persists
+    alongside shard 0 and load_latest restores it."""
+    tables, accs = make_state(sizes=(10,))
+    spec = EmbShardSpec((10,), 2)
+    init_tr = {"bottom": [np.zeros((2, 3), np.float32)],
+               "top": [np.zeros(4, np.float32)]}
+    store = CheckpointStore(tables, accs, spec, trainer_state=init_tr,
+                            directory=str(tmp_path))
+    trained = {"bottom": [np.full((2, 3), 7.0, np.float32)],
+               "top": [np.full(4, 8.0, np.float32)]}
+    store.save_full([t + 1 for t in tables], [a + 1 for a in accs],
+                    trainer_state=trained, step=4)
+    loaded = CheckpointStore.load_latest(str(tmp_path), tables, accs, spec,
+                                         trainer_state=init_tr)
+    assert loaded.trainer_image is not None   # pre-fix: left at init (None)
+    np.testing.assert_array_equal(loaded.trainer_image["bottom"][0],
+                                  trained["bottom"][0])
+    np.testing.assert_array_equal(loaded.trainer_image["top"][0],
+                                  trained["top"][0])
+    _, _, tr = loaded.restore_all()
+    np.testing.assert_array_equal(tr["top"][0], trained["top"][0])
+
+
 # --------------------------------------------------------------- trackers --
 def test_mfu_counts_and_topk():
     c = trk.mfu_init(10)

@@ -1,0 +1,510 @@
+"""Per-shard writer fleet + coordinator fence tests.
+
+Covers the PR's acceptance contract: byte-identical images to the flat sync
+store after arbitrary save interleavings for N_emb ∈ {1, 2, 4}; per-shard
+fail-stop isolating a poisoned shard; coordinator-fence disk consistency
+(load_latest recovers to the last stamped cycle only); delta row-hash skip;
+trainer replica round-trip incl. degenerate empty shards; and the manager/
+emulator wiring.
+"""
+import os
+import tempfile
+import time
+
+import numpy as np
+import pytest
+from hypothesis_compat import given, settings, st
+
+from repro.core import (CheckpointStore, CPRManager, EmbShardSpec,
+                        FailureEvent, ShardedCheckpointWriter, ShardSaveError,
+                        SystemParams, load_latest_auto)
+from repro.core.sharded_checkpoint import row_hash
+
+SIZES = (40, 17, 3)
+
+
+def make_state(sizes=SIZES, d=8, seed=0):
+    rng = np.random.default_rng(seed)
+    tables = [rng.normal(size=(n, d)).astype(np.float32) for n in sizes]
+    accs = [np.zeros(n, np.float32) for n in sizes]
+    return tables, accs
+
+
+def trainer_tree(v=0.0):
+    return {"bottom": [np.full((3, 2), v, np.float32)],
+            "top": [np.full(4, v + 1, np.float32)]}
+
+
+def drive(saver, sizes, seed, n_ops=12, with_trainer=False):
+    """Apply a deterministic pseudo-random interleaving of full/partial
+    saves (same sequence for any saver sharing the seed)."""
+    rng = np.random.default_rng(seed)
+    tables, accs = make_state(sizes, seed=seed + 1)
+    for k in range(n_ops):
+        if rng.random() < 0.3:
+            d_t = [t + rng.normal() for t in tables]
+            d_a = [a + abs(rng.normal()) for a in accs]
+            tr = trainer_tree(float(k)) if with_trainer else None
+            saver.save_full(d_t, d_a, tr, step=k)
+        else:
+            t = int(rng.integers(len(sizes)))
+            rows = rng.choice(sizes[t],
+                              size=int(rng.integers(1, sizes[t] + 1)),
+                              replace=False)
+            vals = rng.normal(size=(rows.size, 8)).astype(np.float32)
+            avs = rng.random(rows.size).astype(np.float32)
+            saver.save_rows(t, rows, vals, avs, step=k)
+
+
+# ------------------------------------------------------- image consistency --
+@pytest.mark.parametrize("n_shards", [1, 2, 4])
+@pytest.mark.parametrize("delta", [False, True])
+def test_fenced_image_matches_sync_store(n_shards, delta):
+    """Acceptance: after arbitrary interleavings, the coordinator fence
+    yields an image byte-identical to the flat synchronous store (with
+    delta off, bytes/events match too)."""
+    tables, accs = make_state()
+    spec = EmbShardSpec(SIZES, n_shards)
+    sync = CheckpointStore([t.copy() for t in tables],
+                           [a.copy() for a in accs], spec)
+    fleet = ShardedCheckpointWriter([t.copy() for t in tables],
+                                    [a.copy() for a in accs], spec,
+                                    async_save=True, delta_saves=delta)
+    for seed in (7, 8):
+        drive(sync, SIZES, seed)
+        drive(fleet, SIZES, seed)
+    fleet.fence()
+    for t in range(len(SIZES)):
+        np.testing.assert_array_equal(fleet.image_tables[t],
+                                      sync.image_tables[t])
+        np.testing.assert_array_equal(fleet.image_accs[t],
+                                      sync.image_accs[t])
+    if not delta:
+        assert fleet.bytes_written == sync.bytes_written
+        assert sum(fleet.shard_bytes) == fleet.bytes_written
+    fleet.close()
+
+
+def test_save_rows_routes_to_owning_shards():
+    tables, accs = make_state()
+    spec = EmbShardSpec(SIZES, 4)
+    fleet = ShardedCheckpointWriter(tables, accs, spec, async_save=True,
+                                    delta_saves=False)
+    rows = np.array([0, 15, 39, 99])           # 99 out of range -> dropped
+    vals = np.full((4, 8), 5.0, np.float32)
+    fleet.save_rows(0, rows, vals, np.full(4, 5.0, np.float32), step=1)
+    fleet.fence()
+    owners = spec.shard_of_rows(0, rows[:3])
+    for r, j in zip(rows[:3], owners):
+        lo, _ = spec.shard_range(0, int(j))
+        np.testing.assert_array_equal(
+            fleet.stores[int(j)].image_tables[0][r - lo], vals[0])
+    # only the owning shards logged events
+    assert [e > 0 for e in fleet.shard_events] == \
+        [j in set(owners.tolist()) for j in range(4)]
+    fleet.close()
+
+
+# ---------------------------------------------------------- fail-stop ------
+def test_per_shard_fail_stop_isolates_poisoned_shard():
+    """A worker error poisons only its shard: later saves keep landing on
+    the other shards, fence raises ShardSaveError naming the shard, and the
+    poisoned shard's image stays frozen at its last successful apply."""
+    tables = [np.zeros((40, 4), np.float32)]
+    accs = [np.zeros(40, np.float32)]
+    spec = EmbShardSpec((40,), 4)
+    fleet = ShardedCheckpointWriter(tables, accs, spec, async_save=True,
+                                    delta_saves=False)
+
+    def boom():
+        raise ValueError("disk gone")
+
+    fleet.appliers[1].submit(boom)
+    deadline = time.time() + 5.0
+    while fleet.appliers[1].error is None and time.time() < deadline:
+        time.sleep(0.005)                      # let the worker latch it
+    fleet.save_full([tables[0] + 5], [accs[0] + 5], step=1)
+    with pytest.raises(ShardSaveError) as ei:
+        fleet.fence()
+    assert sorted(ei.value.shard_errors) == [1]
+    lo, hi = spec.shard_range(0, 1)
+    mask = np.ones(40, bool)
+    mask[lo:hi] = False
+    img = fleet.image_tables[0]
+    assert (img[mask] == 5).all()              # healthy shards saved
+    assert (img[lo:hi] == 0).all()             # poisoned shard frozen
+    # restores of healthy shards still serve their saved image
+    out_t, _ = fleet.restore_shards([tables[0] + 9], [accs[0] + 9],
+                                    [0, 2, 3])
+    assert (out_t[0][mask] == 5).all()
+    # the poison is sticky but later saves to healthy shards are not lost
+    fleet.save_full([tables[0] + 6], [accs[0] + 6], step=2)
+    with pytest.raises(ShardSaveError):
+        fleet.fence()
+    assert (fleet.image_tables[0][mask] == 6).all()
+    assert fleet.dropped_bytes > 0
+    fleet.close()
+
+
+def test_manager_records_shard_failure_and_keeps_training():
+    """CPRManager turns a poisoned shard into a report entry, not a crash;
+    partial recovery keeps working from the healthy shards' images."""
+    p = SystemParams(N_emb=4)
+    mgr = CPRManager("cpr", p, SIZES, sharded_save=True, async_save=True)
+    tables, accs = make_state()
+    mgr.attach_store(tables, accs)
+    mgr.set_total_samples(1000)
+
+    def boom():
+        raise ValueError("shard 2 disk gone")
+
+    mgr.store.appliers[2].submit(boom)
+    deadline = time.time() + 5.0
+    while mgr.store.appliers[2].error is None and time.time() < deadline:
+        time.sleep(0.005)
+    mgr.run_save(mgr.save_interval, [t + 1 for t in tables],
+                 [a + 1 for a in accs], {}, step=1)
+    out_t, out_a, info = mgr.on_failure(
+        FailureEvent(mgr.save_interval + 0.01, (0,), 0.5),
+        [t + 2 for t in tables], [a + 2 for a in accs])
+    lo, hi = mgr.spec.shard_range(0, 0)
+    np.testing.assert_array_equal(out_t[0][lo:hi],
+                                  (tables[0] + 1)[lo:hi])   # healthy restore
+    rep = mgr.report()
+    assert rep["shard_failures"] == [2]
+    assert rep["sharded_save"] is True
+    assert len(rep["shard_bytes"]) == 4
+    mgr.close()
+
+
+# ------------------------------------------------------ disk + coordinator --
+def test_load_latest_recovers_to_last_stamped_cycle():
+    """Events persisted after the last coordinator fence may cover some
+    shards but not others: load_latest must ignore them and reconstruct the
+    image exactly as of the last cycle stamp."""
+    tables, accs = make_state()
+    spec = EmbShardSpec(SIZES, 4)
+    with tempfile.TemporaryDirectory() as tmp:
+        fleet = ShardedCheckpointWriter(tables, accs, spec, directory=tmp,
+                                        async_save=True, delta_saves=False,
+                                        trainer_state=trainer_tree(0.0))
+        fleet.save_full([t + 1 for t in tables], [a + 1 for a in accs],
+                        trainer_tree(1.0), step=1)
+        fleet.save_rows(0, np.arange(10), np.full((10, 8), 2.0, np.float32),
+                        np.full(10, 2.0, np.float32), step=2)
+        fleet.fence()                          # <- consistency point
+        # post-fence saves: durable on disk but never stamped
+        fleet.save_full([t + 9 for t in tables], [a + 9 for a in accs],
+                        trainer_tree(9.0), step=3)
+        for ap in fleet.appliers:              # drain WITHOUT stamping, so
+            ap._q.join()                       # the files exist on disk but
+        assert fleet.save_events == 11         # were never fenced
+        loaded = ShardedCheckpointWriter.load_latest(
+            tmp, tables, accs, spec, trainer_state=trainer_tree())
+        lt, la, tr = loaded.restore_all()
+        np.testing.assert_array_equal(lt[1], tables[1] + 1)
+        np.testing.assert_array_equal(lt[0][:10],
+                                      np.full((10, 8), 2.0, np.float32))
+        np.testing.assert_array_equal(la[0][:10], np.full(10, 2.0))
+        np.testing.assert_array_equal(tr["bottom"][0],
+                                      trainer_tree(1.0)["bottom"][0])
+        fleet.close()
+
+
+def test_load_latest_auto_dispatches_on_layout():
+    tables, accs = make_state()
+    spec = EmbShardSpec(SIZES, 2)
+    with tempfile.TemporaryDirectory() as tmp:
+        flat = os.path.join(tmp, "flat")
+        sharded = os.path.join(tmp, "sharded")
+        store = CheckpointStore(tables, accs, spec, directory=flat)
+        store.save_full([t + 3 for t in tables], [a + 3 for a in accs],
+                        step=1)
+        fleet = ShardedCheckpointWriter(tables, accs, spec,
+                                        directory=sharded, async_save=False,
+                                        delta_saves=False)
+        fleet.save_full([t + 4 for t in tables], [a + 4 for a in accs],
+                        step=1)
+        fleet.fence()
+        for d, off in ((flat, 3), (sharded, 4)):
+            lt, _, _ = load_latest_auto(d, tables, accs, spec).restore_all()
+            np.testing.assert_array_equal(lt[0], tables[0] + off)
+        fleet.close()
+
+
+def test_restart_continues_manifest_instead_of_truncating():
+    """A restarted run reusing the checkpoint directory must append to the
+    existing history (seq/cycle continue past the old maxima) — truncating
+    the manifest would orphan the prior run's files and lose recovery."""
+    tables, accs = make_state()
+    spec = EmbShardSpec(SIZES, 2)
+    with tempfile.TemporaryDirectory() as tmp:
+        first = ShardedCheckpointWriter(tables, accs, spec, directory=tmp,
+                                        async_save=False, delta_saves=False)
+        first.save_full([t + 1 for t in tables], [a + 1 for a in accs],
+                        step=1)
+        first.fence()
+        first.close()
+        second = ShardedCheckpointWriter(tables, accs, spec, directory=tmp,
+                                         async_save=False, delta_saves=False)
+        assert second._seq >= 1 and second.cycle >= 1
+        second.save_rows(0, np.array([4]), np.full((1, 8), 8.0, np.float32),
+                         np.full(1, 8.0, np.float32), step=2)
+        second.fence()
+        second.close()
+        lt, _, _ = ShardedCheckpointWriter.load_latest(
+            tmp, tables, accs, spec).restore_all()
+        np.testing.assert_array_equal(lt[1], tables[1] + 1)   # run-1 full
+        np.testing.assert_array_equal(lt[0][4],
+                                      np.full(8, 8.0))        # run-2 partial
+
+
+def test_load_latest_rejects_mismatched_shard_layout():
+    tables, accs = make_state()
+    with tempfile.TemporaryDirectory() as tmp:
+        fleet = ShardedCheckpointWriter(tables, accs, EmbShardSpec(SIZES, 4),
+                                        directory=tmp, async_save=False)
+        fleet.save_full(tables, accs, step=1)
+        fleet.fence()
+        fleet.close()
+        with pytest.raises(ValueError, match="n_shards"):
+            ShardedCheckpointWriter.load_latest(tmp, tables, accs,
+                                                EmbShardSpec(SIZES, 2))
+
+
+def test_sync_mode_apply_failure_is_counted_not_saved():
+    """Regression: the inline applier must not report a failing apply as a
+    successful save — bytes go to dropped_bytes and the shard poisons."""
+    tables, accs = make_state()
+    spec = EmbShardSpec(SIZES, 2)
+    fleet = ShardedCheckpointWriter(tables, accs, spec, async_save=False,
+                                    delta_saves=True)
+
+    def broken_apply(*a, **k):
+        raise OSError("no space left on device")
+
+    fleet.stores[0].apply_rows = broken_apply
+    rows = np.array([0, 1])
+    nb = fleet.save_rows(0, rows, np.full((2, 8), 3.0, np.float32),
+                         np.full(2, 3.0, np.float32), step=1)
+    assert nb == 0                     # nothing counted as saved
+    assert fleet.dropped_bytes > 0
+    assert 0 in fleet.failed
+    # delta hashes were not advanced: still the init-content hashes
+    np.testing.assert_array_equal(fleet._hashes[0][rows],
+                                  row_hash(tables[0][rows], accs[0][rows]))
+    nb2 = fleet.save_rows(0, np.array([30]),                # shard 1 row
+                          np.full((1, 8), 3.0, np.float32),
+                          np.full(1, 3.0, np.float32), step=1)
+    assert nb2 > 0                     # the healthy shard keeps saving
+    with pytest.raises(ShardSaveError):
+        fleet.fence()
+    fleet.close()
+
+
+# ------------------------------------------------------------- delta saves --
+def test_delta_skips_unchanged_rows_and_is_collision_safe_on_change():
+    tables, accs = make_state()
+    spec = EmbShardSpec(SIZES, 2)
+    fleet = ShardedCheckpointWriter(tables, accs, spec, async_save=True,
+                                    delta_saves=True)
+    rows = np.arange(20)
+    vals = np.asarray(tables[0][rows]) + 1.0
+    avs = np.asarray(accs[0][rows]) + 1.0
+    nb1 = fleet.save_rows(0, rows, vals, avs, step=1)
+    assert nb1 == vals.nbytes + avs.nbytes + rows.nbytes
+    nb2 = fleet.save_rows(0, rows, vals, avs, step=2)   # unchanged
+    assert nb2 == 0
+    assert fleet.delta_rows_skipped == 20
+    assert fleet.delta_bytes_skipped == nb1
+    vals2 = vals.copy()
+    vals2[3] += 0.5                                     # one row drifts
+    nb3 = fleet.save_rows(0, rows, vals2, avs, step=3)
+    assert nb3 == vals2[3:4].nbytes + avs[3:4].nbytes + rows[3:4].nbytes
+    fleet.fence()
+    np.testing.assert_array_equal(fleet.image_tables[0][3], vals2[3])
+    np.testing.assert_array_equal(fleet.image_tables[0][rows[rows != 3]],
+                                  vals[rows != 3])
+    fleet.close()
+
+
+def test_unsaved_rows_unchanged_since_init_are_skipped():
+    """base = init: re-shipping a row that still holds its initial value is
+    a no-op for the image, so delta mode skips it from the first save."""
+    tables, accs = make_state()
+    spec = EmbShardSpec(SIZES, 2)
+    fleet = ShardedCheckpointWriter(tables, accs, spec, delta_saves=True,
+                                    async_save=False)
+    rows = np.arange(5)
+    nb = fleet.save_rows(0, rows, np.asarray(tables[0][rows]),
+                         np.asarray(accs[0][rows]), step=0)
+    assert nb == 0 and fleet.delta_rows_skipped == 5
+    fleet.close()
+
+
+def test_row_hash_distinguishes_rows_and_matches_itself():
+    v = np.random.default_rng(0).normal(size=(64, 8)).astype(np.float32)
+    a = np.random.default_rng(1).random(64).astype(np.float32)
+    h1, h2 = row_hash(v, a), row_hash(v.copy(), a.copy())
+    np.testing.assert_array_equal(h1, h2)       # content-deterministic
+    assert len(set(h1.tolist())) == 64          # no collisions in sample
+    v2 = v.copy()
+    v2[7, 0] = np.nextafter(v2[7, 0], np.inf)   # 1-ulp change must register
+    assert row_hash(v2, a)[7] != h1[7]
+
+
+# ------------------------------------------------ degenerate + trainer ------
+def test_empty_shards_and_trainer_roundtrip():
+    """Tables smaller than the shard count leave some shards empty; saves,
+    fences, restores and disk round-trips must all handle zero-row ranges."""
+    sizes = (3, 1)
+    tables, accs = make_state(sizes)
+    spec = EmbShardSpec(sizes, 4)                # shards with 0 rows exist
+    with tempfile.TemporaryDirectory() as tmp:
+        fleet = ShardedCheckpointWriter(tables, accs, spec, directory=tmp,
+                                        async_save=True,
+                                        trainer_state=trainer_tree(0.0))
+        fleet.save_full([t + 2 for t in tables], [a + 2 for a in accs],
+                        trainer_tree(5.0), step=1)
+        fleet.save_rows(1, np.array([0]), np.full((1, 8), 7.0, np.float32),
+                        np.full(1, 7.0, np.float32), step=2)
+        fleet.fence()
+        lt, la, tr = ShardedCheckpointWriter.load_latest(
+            tmp, tables, accs, spec,
+            trainer_state=trainer_tree()).restore_all()
+        np.testing.assert_array_equal(lt[0], tables[0] + 2)
+        np.testing.assert_array_equal(lt[1], np.full((1, 8), 7.0))
+        np.testing.assert_array_equal(tr["top"][0],
+                                      trainer_tree(5.0)["top"][0])
+        fleet.close()
+
+
+# -------------------------------------------------------- property test -----
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 10_000), st.integers(2, 5), st.integers(3, 10))
+def test_sharded_disk_roundtrip_matches_fenced_memory_store(seed, n_shards,
+                                                            n_ops):
+    """N_emb > 1 disk round-trip property: for random interleavings of
+    full/partial saves across shards, load_latest must reconstruct exactly
+    the fenced in-memory image — trainer state and degenerate empty shards
+    included."""
+    sizes = (13, 7, 1)                  # 1-row table -> empty shards
+    tables, accs = make_state(sizes)
+    spec = EmbShardSpec(sizes, n_shards)
+    with tempfile.TemporaryDirectory() as tmp:
+        fleet = ShardedCheckpointWriter(
+            [t.copy() for t in tables], [a.copy() for a in accs], spec,
+            directory=tmp, async_save=True, delta_saves=True,
+            trainer_state=trainer_tree(0.0))
+        sync = CheckpointStore([t.copy() for t in tables],
+                               [a.copy() for a in accs], spec)
+        drive(fleet, sizes, seed, n_ops=n_ops, with_trainer=True)
+        drive(sync, sizes, seed, n_ops=n_ops, with_trainer=True)
+        fleet.fence()
+        loaded = ShardedCheckpointWriter.load_latest(
+            tmp, tables, accs, spec, trainer_state=trainer_tree())
+        lt, la, tr = loaded.restore_all()
+        for t in range(len(sizes)):
+            np.testing.assert_array_equal(lt[t], sync.image_tables[t])
+            np.testing.assert_array_equal(la[t], sync.image_accs[t])
+        if sync.trainer_image is not None:
+            for k in ("bottom", "top"):
+                np.testing.assert_array_equal(tr[k][0],
+                                              sync.trainer_image[k][0])
+        fleet.close()
+
+
+# ------------------------------------------------------- manager/emulator ---
+@pytest.mark.parametrize("mode", ["cpr", "cpr-mfu"])
+def test_sharded_manager_image_matches_flat_manager(mode):
+    """Driving identical save/failure sequences through a flat-store manager
+    and a sharded-fleet manager yields identical images and restores."""
+    p = SystemParams(N_emb=4)
+    mgrs = []
+    for sharded in (False, True):
+        mgr = CPRManager(mode, p, SIZES, target_pls=0.1, async_save=True,
+                         sharded_save=sharded, delta_saves=False)
+        tables, accs = make_state()
+        mgr.attach_store(tables, accs)
+        mgr.set_total_samples(10_000)
+        mgrs.append((mgr, tables, accs))
+    rng = np.random.default_rng(5)
+    for step in range(6):
+        drift_t = [t + rng.normal() for t in mgrs[0][1]]
+        drift_a = [a + abs(rng.normal()) for a in mgrs[0][2]]
+        results = []
+        for mgr, tables, accs in mgrs:
+            tracker = (mgr.tracker_init(drift_t) if step == 0 and
+                       mgr.is_priority else getattr(mgr, "_tt", {}))
+            tracker = mgr.run_save(mgr.save_interval * (step + 1),
+                                   drift_t, drift_a, tracker, step=step)
+            mgr._tt = tracker
+            if step == 3:
+                results.append(mgr.on_failure(
+                    FailureEvent(mgr.save_interval * (step + 1) + 0.01,
+                                 (1, 2), 0.5), drift_t, drift_a))
+        if results:
+            np.testing.assert_array_equal(results[0][0][0], results[1][0][0])
+    flat, fleet = mgrs[0][0], mgrs[1][0]
+    fleet.fence()
+    for t in range(len(SIZES)):
+        np.testing.assert_array_equal(flat.store.image_tables[t],
+                                      fleet.store.image_tables[t])
+    assert flat.store.bytes_written == fleet.store.bytes_written
+    assert fleet.report()["shard_failures"] == []
+    flat.close()
+    fleet.close()
+
+
+@pytest.mark.parametrize("sharded", [False, True])
+def test_priority_mode_persists_trainer_at_boundary(tmp_path, sharded):
+    """Priority modes never call save_full; the trainer replica must still
+    reach disk (at T_save boundaries) or full recovery restores fresh MLPs."""
+    p = SystemParams(N_emb=4)
+    d = str(tmp_path / ("s" if sharded else "f"))
+    mgr = CPRManager("cpr-mfu", p, SIZES, directory=d, async_save=True,
+                     sharded_save=sharded, tracker_backend="host")
+    tables, accs = make_state()
+    tr = trainer_tree(3.0)
+    mgr.attach_store(tables, accs, trainer_tree(0.0))
+    mgr.set_total_samples(1000)
+    tracker = mgr.tracker_init(tables)
+    for s in range(mgr.n_subcycles):           # one full priority cycle
+        tracker = mgr.run_save(mgr.save_interval * (s + 1), tables, accs,
+                               tracker, trainer_state=tr, step=s)
+    mgr.fence()
+    mgr.close()
+    loaded = load_latest_auto(d, tables, accs, mgr.spec,
+                              trainer_state=trainer_tree())
+    _, _, got = loaded.restore_all()
+    assert got is not None
+    np.testing.assert_array_equal(got["bottom"][0], tr["bottom"][0])
+    np.testing.assert_array_equal(got["top"][0], tr["top"][0])
+
+
+def test_emulator_sharded_run_and_disk_resume(tmp_path):
+    """End-to-end: sharded N_emb=4 emulation with failures writes a
+    consistent fleet checkpoint; a fresh emulator resumed from it starts
+    from the stamped image (trainer included) and trains."""
+    from repro.configs.dlrm import DLRM_KAGGLE, scaled
+    from repro.core import Emulator, FailureInjector
+    from repro.data.synthetic import ClickLogDataset
+
+    cfg = scaled(DLRM_KAGGLE, max_rows=500)
+    ds = ClickLogDataset(cfg.table_sizes, num_samples=4000, seed=3)
+    p = SystemParams(N_emb=4)
+    mgr = CPRManager("cpr", p, cfg.table_sizes, directory=str(tmp_path),
+                     async_save=True, sharded_save=True)
+    inj = FailureInjector(2, 0.25, p.N_emb, p.T_total, seed=11)
+    r = Emulator(cfg, ds, mgr, inj, batch_size=256).run(max_steps=12)
+    assert r.report["sharded_save"] is True
+    assert r.report["bytes_written"] > 0
+    assert r.report["shard_failures"] == []
+    assert os.path.exists(os.path.join(str(tmp_path), "manifest.json"))
+
+    mgr2 = CPRManager("cpr", p, cfg.table_sizes, async_save=False,
+                      sharded_save=True)
+    inj2 = FailureInjector(0, 0.25, p.N_emb, p.T_total, seed=12)
+    r2 = Emulator(cfg, ds, mgr2, inj2, batch_size=256).run(
+        max_steps=4, resume_from=str(tmp_path))
+    assert np.isfinite(r2.final_loss)
