@@ -14,6 +14,13 @@ store's.
 Also measures delta saves (ROADMAP item): a partial re-save of rows whose
 content did not change must ship ~0 bytes (row-hash skip), and a save where
 only a fraction of rows changed must ship only that fraction.
+
+Process-fleet additions (writer_rpc): the same save-event critical path
+through the process-isolated backend — whose caller-side cost is one
+uncompressed spool write + n_shards pipe sends, so it must also stay flat
+vs shard count — with a fence-consistency audit against the sync store,
+and the cost of a poisoned-shard **re-admission** (kill one writer, then
+``readmit`` + fence: respawn, reseed, fresh full, stamp).
 """
 from __future__ import annotations
 
@@ -78,6 +85,54 @@ def _bench_shards(sizes, d, n_shards, events, directory):
     return sync_ms, sharded_ms, delta_ms, image_matches
 
 
+def _bench_process(sizes, d, n_shards, events, directory):
+    """Process-fleet save_full critical path (spool + pipe sends) and a
+    post-fence image parity audit vs the flat sync store."""
+    tables, accs = _state(sizes, d)
+    spec = EmbShardSpec(sizes, n_shards)
+    sync = CheckpointStore([t.copy() for t in tables],
+                           [a.copy() for a in accs], spec)
+    writer = ShardedCheckpointWriter(
+        [t.copy() for t in tables], [a.copy() for a in accs], spec,
+        directory=directory, backend="process", delta_saves=False)
+    proc_ms = _time_events(
+        lambda: writer.save_full(tables, accs, step=0), events,
+        after=lambda: writer.fence())
+    sync.save_full(tables, accs, step=0)
+    wt, wa, _ = writer.restore_all()       # one per-shard image fetch
+    image_matches = all(
+        np.array_equal(a, b) for a, b in
+        list(zip(wt, sync.image_tables)) + list(zip(wa, sync.image_accs)))
+    writer.close()
+    return proc_ms, image_matches
+
+
+def _bench_readmit(sizes, d, n_shards, directory):
+    """Cost of re-admitting a killed writer: respawn + reseed + fresh full
+    of the shard's rows + the stamping fence."""
+    tables, accs = _state(sizes, d)
+    spec = EmbShardSpec(sizes, n_shards)
+    writer = ShardedCheckpointWriter(
+        [t.copy() for t in tables], [a.copy() for a in accs], spec,
+        directory=directory, backend="process", delta_saves=False)
+    writer.save_full(tables, accs, step=0)
+    writer.fence()
+    writer.kill_shard(0)
+    writer.save_full([t + 1 for t in tables], [a + 1 for a in accs], step=1)
+    try:
+        writer.fence()
+    except Exception:
+        pass                                   # expected: shard 0 poisoned
+    t0 = time.perf_counter()
+    readmitted = writer.readmit([t + 1 for t in tables],
+                                [a + 1 for a in accs], step=2)
+    writer.fence()
+    readmit_ms = (time.perf_counter() - t0) * 1e3
+    ok = bool(readmitted) and not writer.failed
+    writer.close()
+    return readmit_ms, ok
+
+
 def _bench_delta(sizes, d, n_shards, r, changed_frac):
     tables, accs = _state(sizes, d)
     spec = EmbShardSpec(sizes, n_shards)
@@ -133,4 +188,24 @@ def run(max_rows=20_000, n_shards=(1, 2, 4, 8), events=4, r=0.125,
             "changed_rows": k, "partial_resave_bytes": partial,
             "skip_ratio": round(1.0 - resave / max(first, 1), 4),
         })
+
+    # process-isolated fleet: critical path vs shard count + parity audit
+    for n in n_shards:
+        with tempfile.TemporaryDirectory() as tmp:
+            proc_ms, ok = _bench_process(sizes, d, n, events, tmp + "/ck")
+        rows.append({
+            "figure": "fig15", "kind": "process_save_event", "backend": "disk",
+            "n_shards": n, "total_rows": total,
+            "process_crit_ms": round(proc_ms, 3),
+            "image_matches_sync": bool(ok),
+        })
+
+    # re-admission cost at the largest fleet size benchmarked
+    n = max(n_shards)
+    with tempfile.TemporaryDirectory() as tmp:
+        readmit_ms, ok = _bench_readmit(sizes, d, n, tmp + "/ck")
+    rows.append({
+        "figure": "fig15", "kind": "readmission", "n_shards": n,
+        "readmit_fence_ms": round(readmit_ms, 3), "readmit_ok": bool(ok),
+    })
     return rows

@@ -7,6 +7,8 @@ Public API:
   AsyncCheckpointWriter                        — background incremental saves
   ShardedCheckpointWriter, ShardSaveError      — per-shard writer fleet with
                                                  a coordinator fence
+  WriterProcError                              — process-isolated writer died
+  resolve_run_dir                              — run-versioned CURRENT pointer
   GammaFailureModel, FailureInjector           — failure modeling (§3)
   Emulator                                     — the evaluation framework (§5.1)
   trackers                                     — MFU / SSU / SCAR (§4.2)
@@ -16,9 +18,11 @@ from repro.core.overhead import (SystemParams, choose_strategy, expected_pls,
                                  partial_recovery_overhead, scalability_curve,
                                  t_save_full_optimal, t_save_partial)
 from repro.core.checkpoint import (AsyncApplier, AsyncCheckpointWriter,
-                                   CheckpointStore, EmbShardSpec)
+                                   CheckpointStore, EmbShardSpec,
+                                   resolve_run_dir)
 from repro.core.sharded_checkpoint import (ShardedCheckpointWriter,
                                            ShardSaveError, load_latest_auto)
+from repro.core.writer_rpc import WriterProcError
 from repro.core.failure import FailureEvent, FailureInjector, GammaFailureModel
 from repro.core.manager import ALL_MODES, CPRManager
 from repro.core.emulator import EmulationResult, Emulator

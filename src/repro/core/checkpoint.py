@@ -23,7 +23,13 @@ Disk-format invariants (each fixes a durability bug):
     full event onward — a partial persisted *before* a full at the same
     step must not be re-applied over the newer full image;
   * full checkpoints persist the trainer replica tree (bottom/top MLPs)
-    alongside shard 0, and ``load_latest`` restores it.
+    alongside shard 0, and ``load_latest`` restores it;
+  * directories are **run-versioned**: every run writes only under its own
+    ``run-<n>/`` subdirectory (manifest rewrites are atomic temp+rename)
+    and the root's atomic ``CURRENT`` pointer advances at the run's first
+    durable event — a new run that crashes early can never corrupt the
+    previous run's manifest, and recovery chains back through the
+    manifests' ``parent`` links (see docs/recovery.md).
 
 ``repro.core.sharded_checkpoint`` builds the per-shard writer fleet
 (one writer + directory per Emb-PS shard, coordinator fence) on top of
@@ -74,6 +80,14 @@ class EmbShardSpec:
 # "sharded-v1" tag — see repro.core.sharded_checkpoint)
 STORE_LAYOUT = "store-v2"
 
+# run-versioned directory layout: every run writes under its own
+# ``run-<n>/`` subdirectory and the root holds one atomic ``CURRENT``
+# pointer naming the newest run that reached a durable point.  A new run
+# therefore never rewrites the previous run's manifest or files in place —
+# a crash before the new run's first durable event/fence leaves CURRENT
+# (and everything it references) exactly as the previous run stamped it.
+CURRENT_PTR = "CURRENT"
+
 
 def snap_host(a):
     """Host snapshot that the caller cannot mutate afterwards.  Device
@@ -108,6 +122,93 @@ def _read_manifest(directory: str, layout: str, spec: "EmbShardSpec"):
     return manifest
 
 
+def atomic_write_text(path: str, text: str) -> None:
+    """Durable atomic file replace: write a temp file, flush + fsync its
+    data, rename over ``path``, then fsync the directory so the rename
+    itself survives power loss.  Readers always observe either the old
+    file or the complete new one, never a torn write."""
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        f.write(text)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, path)
+    dfd = os.open(os.path.dirname(path) or ".", os.O_RDONLY)
+    try:
+        os.fsync(dfd)
+    finally:
+        os.close(dfd)
+
+
+def atomic_json_dump(path: str, obj) -> None:
+    atomic_write_text(path, json.dumps(obj))
+
+
+def resolve_run_dir(directory: str) -> Optional[str]:
+    """The run directory the atomic ``CURRENT`` pointer designates.
+
+    Falls back to ``directory`` itself when it holds a legacy top-level
+    ``manifest.json`` (pre-run-versioned layout); returns None when the
+    directory holds no loadable run at all — e.g. a brand-new directory, or
+    one where a run crashed before its first durable point ever advanced
+    CURRENT."""
+    cur = os.path.join(directory, CURRENT_PTR)
+    if os.path.exists(cur):
+        with open(cur) as f:
+            name = f.read().strip()
+        return os.path.join(directory, name)
+    if os.path.exists(os.path.join(directory, "manifest.json")):
+        return directory
+    return None
+
+
+def _write_current(directory: str, run_name: str):
+    """Atomically advance the CURRENT pointer: readers always observe
+    either the old run or the new one, never a torn write."""
+    atomic_write_text(os.path.join(directory, CURRENT_PTR), run_name)
+
+
+def _new_run_dir(directory: str):
+    """Allocate the next ``run-<n>/`` under ``directory``.
+
+    Returns ``(path, name, parent)`` where ``parent`` is the run CURRENT
+    designated at allocation time (``"run-<m>"``, ``"."`` for a legacy
+    top-level manifest, or None for a fresh directory) — recorded in the
+    new run's manifest so recovery can chain back through prior runs."""
+    os.makedirs(directory, exist_ok=True)
+    ns = []
+    for d in os.listdir(directory):
+        tail = d.split("-", 1)
+        if d.startswith("run-") and len(tail) == 2 and tail[1].isdigit():
+            ns.append(int(tail[1]))
+    name = f"run-{max(ns, default=0) + 1}"
+    parent_dir = resolve_run_dir(directory)
+    parent = (os.path.relpath(parent_dir, directory)
+              if parent_dir is not None else None)
+    path = os.path.join(directory, name)
+    os.makedirs(path, exist_ok=True)
+    return path, name, parent
+
+
+def manifest_chain(directory: str, layout: str, spec: "EmbShardSpec"):
+    """``[(run_dir, manifest), ...]`` from the root-most ancestor run to the
+    run CURRENT points at (oldest first).  Empty when the directory holds no
+    loadable run."""
+    run_dir = resolve_run_dir(directory)
+    chain, seen = [], set()
+    while run_dir is not None and os.path.normpath(run_dir) not in seen:
+        seen.add(os.path.normpath(run_dir))
+        m = _read_manifest(run_dir, layout, spec)
+        if m is None:
+            break
+        chain.append((run_dir, m))
+        parent = m.get("parent")
+        run_dir = (os.path.normpath(os.path.join(directory, parent))
+                   if parent else None)
+    chain.reverse()
+    return chain
+
+
 class CheckpointStore:
     def __init__(self, tables: List[np.ndarray], accs: List[np.ndarray],
                  spec: EmbShardSpec, trainer_state=None,
@@ -119,25 +220,29 @@ class CheckpointStore:
         self.image_tables = [np.array(t) for t in tables]
         self.image_accs = [np.array(a) for a in accs]
         self.trainer_image = _to_numpy(trainer_state)
+        self.root_dir = directory
         self.directory = directory
         self.bytes_written = 0
         self.save_events = 0
         self.last_full_save_step = -1
         self._seq = 0   # monotonically increasing event sequence number
         if directory:
-            os.makedirs(directory, exist_ok=True)
-            # continue an existing checkpoint history rather than truncating
-            # it: a restarted run must not clobber the manifest (and reuse
-            # seq-keyed filenames) the previous run's recovery depends on
-            prev = _read_manifest(directory, STORE_LAYOUT, spec)
-            if prev is not None:
-                self._manifest = prev
-                self._seq = max((e.get("seq", 0)
-                                 for e in prev["events"]), default=0)
-            else:
-                self._manifest = {"layout": STORE_LAYOUT, "events": [],
-                                  "n_shards": spec.n_shards,
-                                  "table_sizes": list(spec.table_sizes)}
+            # run-versioned layout: this run writes only under its own
+            # run-<n>/ and chains to the prior run via the manifest's
+            # ``parent`` field instead of rewriting anything in place.  The
+            # CURRENT pointer advances at our first durably logged event, so
+            # a crash before then leaves the previous run fully loadable.
+            chain = manifest_chain(directory, STORE_LAYOUT, spec)
+            self._seq = max((e.get("seq", 0) for _, m in chain
+                             for e in m["events"]), default=0)
+            run_dir, run_name, parent = _new_run_dir(directory)
+            self.directory = run_dir
+            self.run_name = run_name
+            self._current_advanced = False
+            self._manifest = {"layout": STORE_LAYOUT, "run": run_name,
+                              "parent": parent, "events": [],
+                              "n_shards": spec.n_shards,
+                              "table_sizes": list(spec.table_sizes)}
 
     def _next_seq(self) -> int:
         self._seq += 1
@@ -263,8 +368,16 @@ class CheckpointStore:
     def _log_event(self, ev):
         ev["time"] = time.time()
         self._manifest["events"].append(ev)
-        with open(os.path.join(self.directory, "manifest.json"), "w") as f:
-            json.dump(self._manifest, f)
+        # atomic durable rewrite: a crash — or power loss — mid-write must
+        # never leave a torn manifest.json (the pre-run-versioned in-place
+        # rewrite bug)
+        atomic_json_dump(os.path.join(self.directory, "manifest.json"),
+                         self._manifest)
+        if not self._current_advanced:
+            # first durable event of this run: only now may recovery prefer
+            # this run over its parent
+            _write_current(self.root_dir, self.run_name)
+            self._current_advanced = True
 
     @classmethod
     def load_latest(cls, directory: str, tables, accs, spec: EmbShardSpec,
@@ -275,24 +388,30 @@ class CheckpointStore:
         the base image, and only partial events logged *after* it are
         re-applied — a partial persisted before the full at the same step is
         already folded into (or superseded by) the full image and must not
-        resurface over it.  ``trainer_state`` supplies the tree structure the
-        persisted trainer leaves are unflattened into (when omitted, the raw
-        leaf list is kept).
+        resurface over it.  With the run-versioned layout the event log is
+        the concatenation of every ancestor run's manifest (oldest first)
+        followed by the run CURRENT points at; each event's files are read
+        from its own run directory.  ``trainer_state`` supplies the tree
+        structure the persisted trainer leaves are unflattened into (when
+        omitted, the raw leaf list is kept).
         """
         store = cls(tables, accs, spec, directory=None)
-        manifest = _read_manifest(directory, STORE_LAYOUT, spec)
-        if manifest is None:
-            raise FileNotFoundError(f"no manifest.json in {directory}")
-        events = manifest["events"]
+        chain = manifest_chain(directory, STORE_LAYOUT, spec)
+        if not chain:
+            raise FileNotFoundError(
+                f"no loadable checkpoint run in {directory} "
+                f"(no CURRENT pointer or manifest.json)")
+        events = [(run_dir, e) for run_dir, m in chain
+                  for e in m["events"]]
         full_idx = None
-        for i, e in enumerate(events):
+        for i, (_, e) in enumerate(events):
             if e["kind"] == "full":
                 full_idx = i
         start = 0
         if full_idx is not None:
-            e = events[full_idx]
+            run_dir, e = events[full_idx]
             for j in range(spec.n_shards):
-                path = os.path.join(directory, f"shard_{j}",
+                path = os.path.join(run_dir, f"shard_{j}",
                                     f"full_e{e['seq']}.npz")
                 with np.load(path) as z:
                     for t in range(len(tables)):
@@ -300,21 +419,21 @@ class CheckpointStore:
                         store.image_tables[t][lo:hi] = z[f"table_{t}"]
                         store.image_accs[t][lo:hi] = z[f"acc_{t}"]
             start = full_idx + 1
-        for e in events[start:]:
+        for run_dir, e in events[start:]:
             if e["kind"] == "partial":
-                with np.load(os.path.join(directory, e["file"])) as z:
+                with np.load(os.path.join(run_dir, e["file"])) as z:
                     t = int(z["table"])
                     store.image_tables[t][z["rows"]] = z["values"]
                     store.image_accs[t][z["rows"]] = z["accs"]
         # trainer replica: every trainer-bearing event (full or standalone)
         # carries the complete tree, so the last one logged wins
         tr_ev = None
-        for e in events:
+        for run_dir, e in events:
             if e.get("trainer_file"):
-                tr_ev = e
+                tr_ev = (run_dir, e)
         if tr_ev is not None:
             store.trainer_image = load_trainer_tree(
-                os.path.join(directory, "shard_0", tr_ev["trainer_file"]),
+                os.path.join(tr_ev[0], "shard_0", tr_ev[1]["trainer_file"]),
                 trainer_state)
         return store
 

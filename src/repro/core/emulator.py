@@ -104,7 +104,10 @@ class Emulator:
             # disk-mode full recovery: embedding shards + optimizer rows +
             # the trainer replica (bottom/top MLPs) all come back from the
             # last consistent checkpoint cycle, whichever store layout
-            # (flat or per-shard fleet) wrote it
+            # (flat or per-shard fleet) wrote it.  load_latest_auto resolves
+            # the run-versioned CURRENT pointer first, so a prior run that
+            # crashed before its first fence is transparently skipped in
+            # favor of the newest *stamped* run
             loaded = load_latest_auto(
                 resume_from, [np.asarray(t) for t in params["tables"]],
                 [np.asarray(a) for a in ostate["acc"]["tables"]], mgr.spec,

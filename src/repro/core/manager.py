@@ -74,7 +74,8 @@ class CPRManager:
                  directory: Optional[str] = None, async_save: bool = False,
                  tracker_backend: str = "host", seg_size: int = 512,
                  sharded_save: bool = False,
-                 delta_saves: Optional[bool] = None):
+                 delta_saves: Optional[bool] = None,
+                 writer_procs: bool = False, readmit: bool = False):
         assert mode in ALL_MODES, mode
         assert tracker_backend in ("host", "pallas"), tracker_backend
         self.mode = mode
@@ -88,9 +89,20 @@ class CPRManager:
         self.async_save = async_save
         # sharded_save: one writer + directory per Emb-PS shard behind a
         # coordinator fence (Check-N-Run's decoupled architecture); delta
-        # saves (row-hash skip of unchanged rows) default on with it
-        self.sharded_save = sharded_save
-        self.delta_saves = sharded_save if delta_saves is None else delta_saves
+        # saves (row-hash skip of unchanged rows) default on with it.
+        # writer_procs moves each shard's writer behind an OS process
+        # boundary (repro.core.writer_rpc) — a writer crash poisons one
+        # shard, never the trainer — and implies sharded_save; readmit
+        # respawns poisoned writers at the next cycle boundary with a
+        # fresh-full reseed instead of leaving fail-stop sticky.
+        self.writer_procs = writer_procs
+        self.sharded_save = sharded_save or writer_procs
+        # a process-backed fleet is asynchronous by construction (saves
+        # hand off over a pipe; fence() is the durability point)
+        self.async_save = async_save or writer_procs
+        self.readmit = readmit
+        self.delta_saves = (self.sharded_save if delta_saves is None
+                            else delta_saves)
         self.tracker_backend = tracker_backend
         self.seg_size = seg_size
         # sim-hours per wall-second of blocked save time; the emulator sets
@@ -179,7 +191,8 @@ class CPRManager:
             self.store = ShardedCheckpointWriter(
                 tables, accs, self.spec, trainer_state,
                 directory=self.directory, async_save=self.async_save,
-                delta_saves=self.delta_saves)
+                delta_saves=self.delta_saves,
+                backend=("process" if self.writer_procs else "thread"))
             self.writer = self.store
         else:
             self.store = CheckpointStore(tables, accs, self.spec,
@@ -306,25 +319,45 @@ class CPRManager:
             # point is the coordinator's cycle stamp, which only a fence
             # writes — without it a crash would lose the whole run's saves.
             self.fence()
-        # bandwidth-proportional modeled save cost
-        frac = nbytes / max(self._total_bytes, 1)
-        self.ledger.save += self.p.O_save * frac
-        # measured overlap-aware critical-path cost
-        blocked = time.perf_counter() - t_wall0
-        self.ledger.save_blocked_s += blocked
-        self.ledger.save_measured += blocked * self.wall_time_scale
         if is_boundary:
             # a poisoned shard's saves were dropped, so its recovery point
             # (and hence its PLS/lost-time accounting) must stay at the last
-            # cycle that actually reached its writer
+            # cycle that actually reached its writer.  Only *currently*
+            # poisoned shards hold back — a re-admitted shard resumes
+            # advancing once its reseed full is stamped.
             ok = np.ones(self.p.N_emb, dtype=bool)
-            bad = set(self.shard_failures)
             if self.sharded_save and self.store is not None:
-                bad |= set(self.store.failed)
+                bad = set(self.store.failed)
+            else:
+                bad = set(self.shard_failures)
             for j in bad:
                 ok[j] = False
             self.last_cycle_time[ok] = t_event
             self.samples_at_cycle[ok] = self.samples_seen
+            if self.readmit and self.sharded_save and self.store.failed:
+                # cycle boundary: respawn poisoned writers, reseed from
+                # last-good, ship a fresh full of their current rows — the
+                # next boundary's fence stamps it and the shard's recovery
+                # point catches up then
+                readmitted = self.store.readmit(tables, accs, trainer_state,
+                                                step=step)
+                if readmitted:
+                    # the reseed fulls are real save traffic: charge the
+                    # re-admitted shards' slice of the total bytes (shard
+                    # ranges are equal-sized by construction)
+                    nbytes += int(self._total_bytes * len(readmitted) /
+                                  self.p.N_emb)
+                    self.history.append({"t": t_event, "event": "readmit",
+                                         "shards": readmitted})
+        # bandwidth-proportional modeled save cost (incl. reseed fulls)
+        frac = nbytes / max(self._total_bytes, 1)
+        self.ledger.save += self.p.O_save * frac
+        # measured overlap-aware critical-path cost — everything the
+        # training thread blocked on in this event, re-admission
+        # respawn/reseed work included
+        blocked = time.perf_counter() - t_wall0
+        self.ledger.save_blocked_s += blocked
+        self.ledger.save_measured += blocked * self.wall_time_scale
         self.history.append({"t": t_event, "event": "save",
                              "boundary": bool(is_boundary)})
         return tracker_state
@@ -377,6 +410,7 @@ class CPRManager:
             "effective_mode": self.effective_mode,
             "async_save": self.async_save,
             "sharded_save": self.sharded_save,
+            "writer_backend": ("process" if self.writer_procs else "thread"),
             "tracker_backend": self.tracker_backend,
             "T_save": self.T_save,
             "save_interval": self.save_interval,
@@ -396,5 +430,9 @@ class CPRManager:
             out["delta_rows_skipped"] = self.store.delta_rows_skipped
             out["delta_bytes_skipped"] = self.store.delta_bytes_skipped
             out["dropped_bytes"] = self.store.dropped_bytes
+            # shard_failures is the historical record; poisoned_shards the
+            # shards still out of the fleet (empty again after re-admission)
             out["shard_failures"] = sorted(self.shard_failures)
+            out["poisoned_shards"] = sorted(self.store.failed)
+            out["shard_readmissions"] = self.store.shard_readmissions
         return out

@@ -6,44 +6,61 @@ embedding table and persists it independently, so a slow or failed shard
 never blocks — or loses — the others' saves.  This module is that
 architecture on one host:
 
-  * :class:`ShardedCheckpointWriter` owns one :class:`_ShardStore` (image +
-    disk persistence for the shard's row ranges) and one applier — an
-    :class:`AsyncApplier` worker thread, or an inline applier in sync mode —
-    per shard.  ``save_rows`` routes each row to its owning shard via
+  * :class:`ShardedCheckpointWriter` owns one applier per shard, behind one
+    of two backends.  ``backend="thread"`` (the default — CI and laptops)
+    runs a :class:`_ShardStore` (image + disk persistence for the shard's
+    row ranges) under an :class:`AsyncApplier` worker thread, or inline in
+    sync mode.  ``backend="process"`` moves each shard's apply loop into a
+    real OS process (``repro.core.writer_rpc``): a writer crash — segfault,
+    OOM-kill, operator SIGKILL — poisons one shard and never the trainer.
+    ``save_rows`` routes each row to its owning shard via
     ``EmbShardSpec.shard_of_rows``; ``save_full`` takes ONE immutable host
-    snapshot per table and hands it to every writer, whose worker slices
-    out its own row ranges — so the save-event critical path (snapshot +
-    n_shards enqueues) does not grow with shard count.
+    snapshot per table shared by every worker (thread backend) or spooled
+    once as an uncompressed .npz that every worker slices locally (process
+    backend) — either way the save-event critical path does not grow with
+    shard count.
 
-  * **Coordinator fence** (two-phase): phase 1 drains every shard's queue so
-    all enqueued applies are durably in that shard's image/directory; phase
-    2 flushes the completed per-shard events into the single coordinator
-    manifest and stamps a global ``cycle`` record.  ``load_latest`` only
-    replays events logged *before* the last cycle stamp, so it reconstructs
-    a consistent cross-shard image even when shards persisted at different
-    rates (events persisted after the last fence may exist on disk for some
-    shards but not others — they are ignored).
+  * **Coordinator fence** (two-phase DRAIN/STAMP barrier): phase 1
+    broadcasts DRAIN to every healthy shard and collects each shard's
+    durable seq watermark (thread backend: queue join; process backend: the
+    worker's ``drained`` ack, which confirms apply **and** persist).  Phase
+    2 flushes the acked per-shard events into the coordinator manifest, in
+    global ``seq`` order, and stamps a ``cycle`` record carrying the
+    watermarks — only once every healthy shard has acked.  ``load_latest``
+    only replays events logged *before* the last cycle stamp, so it
+    reconstructs a consistent cross-shard image even when shards persisted
+    at different rates.
 
-  * **Per-shard fail-stop**: a worker error poisons only its own shard.
-    Later work routed to a poisoned shard is dropped (and counted), other
-    shards keep saving; ``fence`` still drains and stamps the healthy shards
-    before raising :class:`ShardSaveError`, so one writer's error never
-    loses the others' saves.  A poisoned shard's image stays frozen at its
-    last successful apply — exactly the fail-stop image partial recovery
-    restores from.
+  * **Per-shard fail-stop + re-admission**: a worker error (or dead writer
+    process) poisons only its own shard.  Later work routed to a poisoned
+    shard is dropped (and counted), other shards keep saving; ``fence``
+    still drains and stamps the healthy shards before raising
+    :class:`ShardSaveError`.  ``readmit`` reverses the poisoning at a cycle
+    boundary: the writer is respawned, reseeded from its last-good image
+    (disk replay of stamped events when a directory exists), and shipped a
+    fresh full of the shard's current rows — covering everything it missed
+    — which the next fence stamps.  ``shard_readmissions`` counts rejoins.
+
+  * **Run-versioned directories**: each run writes under its own
+    ``run-<n>/`` (manifest + shard dirs + spool) and the root's atomic
+    ``CURRENT`` pointer only advances at the run's *first stamped cycle* —
+    a crash before the first fence can never corrupt the previous run's
+    manifest.  Recovery chains through the manifests' ``parent`` links.
 
   * **Delta saves**: with ``delta_saves`` the writer keeps a 64-bit FNV-1a
     content hash per row of the last value it shipped; ``save_rows`` skips
-    rows whose (value, accumulator) hash is unchanged, cutting partial-save
-    bytes for rows the tracker selected but training did not touch.  Hashes
-    are only advanced for rows actually routed to a healthy shard.
+    rows whose (value, accumulator) hash is unchanged.  Hashes are only
+    advanced for rows actually accepted by a healthy shard.
 
 Disk layout (all under the coordinator ``directory``)::
 
-    manifest.json               coordinator event log + cycle stamps
-    shard_<j>/full_e<seq>.npz   shard j's slice of every table at seq
-    shard_<j>/partial_t<t>_e<seq>.npz
-    shard_0/trainer_e<seq>.npz  trainer replica tree (full saves only)
+    CURRENT                           atomic pointer: newest stamped run
+    run-<n>/manifest.json             that run's event log + cycle stamps
+    run-<n>/shard_<j>/full_e<seq>.npz shard j's slice of every table at seq
+    run-<n>/shard_<j>/partial_t<t>_e<seq>.npz
+    run-<n>/shard_0/trainer_e<seq>.npz
+    run-<n>/spool/spool_e<seq>.npz    process backend: full-snapshot spool
+                                      (deleted at the next fence)
 
 Every event carries the global, monotonically increasing ``seq`` assigned at
 submit time; filenames are keyed by it, never by (table, step).
@@ -52,16 +69,19 @@ from __future__ import annotations
 
 import json
 import os
+import shutil
+import tempfile
 import threading
 import time
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.core.checkpoint import (AsyncApplier, EmbShardSpec, _leaves,
-                                   _read_manifest, _to_numpy,
-                                   load_trainer_tree, save_trainer_tree,
-                                   snap_host)
+                                   _new_run_dir, _read_manifest, _to_numpy,
+                                   _write_current, atomic_json_dump,
+                                   load_trainer_tree, manifest_chain,
+                                   save_trainer_tree, snap_host)
 
 LAYOUT = "sharded-v1"
 
@@ -74,6 +94,8 @@ def row_hash(values: np.ndarray, acc_values: np.ndarray) -> np.ndarray:
     folded in zero-padded 64-bit words (8x fewer passes than per-byte)."""
     n = np.asarray(values).shape[0]
     h = np.full(n, _FNV_OFFSET, np.uint64)
+    if n == 0:                  # empty shard ranges hash to an empty array
+        return h
     for part in (values, acc_values):
         b = np.ascontiguousarray(part).reshape(n, -1).view(np.uint8)
         pad = -b.shape[1] % 8
@@ -135,21 +157,28 @@ class _InlineApplier:
 class _ShardStore:
     """Image + disk persistence for one shard's row ranges.
 
-    ``apply_*`` methods run on the shard's (single) applier thread; the
+    ``apply_*`` methods run on the shard's (single) applier thread — or
+    inside the shard's writer process for the process backend; the
     completed-event list is only read by the coordinator after that queue
     has been drained, so no locking is needed.
     """
 
     def __init__(self, shard: int, spec: EmbShardSpec, tables, accs,
-                 directory: Optional[str] = None):
+                 directory: Optional[str] = None, sliced: bool = False):
         self.shard = shard
         self.spec = spec
         self.ranges = [spec.shard_range(t, shard)
                        for t in range(len(spec.table_sizes))]
-        self.image_tables = [np.array(np.asarray(t)[lo:hi])
-                             for t, (lo, hi) in zip(tables, self.ranges)]
-        self.image_accs = [np.array(np.asarray(a)[lo:hi])
-                           for a, (lo, hi) in zip(accs, self.ranges)]
+        if sliced:
+            # ``tables``/``accs`` are already this shard's row slices (the
+            # writer-process worker is seeded with only its own rows)
+            self.image_tables = [np.array(np.asarray(t)) for t in tables]
+            self.image_accs = [np.array(np.asarray(a)) for a in accs]
+        else:
+            self.image_tables = [np.array(np.asarray(t)[lo:hi])
+                                 for t, (lo, hi) in zip(tables, self.ranges)]
+            self.image_accs = [np.array(np.asarray(a)[lo:hi])
+                               for a, (lo, hi) in zip(accs, self.ranges)]
         self.trainer_image = None              # populated on shard 0 only
         self.directory = directory
         self.bytes_written = 0
@@ -211,6 +240,54 @@ class _ShardStore:
                       "bytes": nbytes, "file": fname})
 
 
+def _stamped_events(chain) -> List[Tuple[str, dict]]:
+    """Merged ``(run_dir, event)`` list across a manifest chain, each run
+    cut at its *last* cycle stamp — events a fence never stamped are not
+    recovery-eligible, whichever run logged them."""
+    out: List[Tuple[str, dict]] = []
+    for run_dir, m in chain:
+        evs = m["events"]
+        last = None
+        for i, e in enumerate(evs):
+            if e["kind"] == "cycle":
+                last = i
+        for e in (evs[:last] if last is not None else []):
+            out.append((run_dir, e))
+    return out
+
+
+def _replay_shard(store: _ShardStore, j: int,
+                  events: Sequence[Tuple[str, dict]]):
+    """Replay shard ``j``'s stamped events into ``store``'s image slices,
+    strictly in manifest order from its last full event onward."""
+    evs = [(d, e) for d, e in events
+           if e.get("shard") == j and e["kind"] in ("full", "partial")]
+    full_idx = None
+    for i, (_, e) in enumerate(evs):
+        if e["kind"] == "full":
+            full_idx = i
+    start = 0
+    if full_idx is not None:
+        run_dir, e = evs[full_idx]
+        path = os.path.join(run_dir, f"shard_{j}", f"full_e{e['seq']}.npz")
+        with np.load(path) as z:
+            for t in range(len(store.image_tables)):
+                store.image_tables[t][...] = z[f"table_{t}"]
+                store.image_accs[t][...] = z[f"acc_{t}"]
+        start = full_idx + 1
+    for run_dir, e in evs[start:]:
+        if e["kind"] != "partial":
+            continue
+        with np.load(os.path.join(run_dir, f"shard_{j}", e["file"])) as z:
+            t = int(z["table"])
+            local = z["rows"] - store.ranges[t][0]
+            store.image_tables[t][local] = z["values"]
+            store.image_accs[t][local] = z["accs"]
+
+
+BACKENDS = ("thread", "process")
+
+
 class ShardedCheckpointWriter:
     """One checkpoint writer + directory per Emb-PS shard, one coordinator.
 
@@ -218,72 +295,139 @@ class ShardedCheckpointWriter:
     ``save_full`` / ``save_rows`` / ``fence`` / ``close`` plus the store-side
     surface (``restore_shards``, ``restore_all``, ``bytes_written``,
     ``save_events``, assembled ``image_tables`` / ``image_accs`` views).
+
+    ``backend="thread"`` (default) keeps every shard's applier in-process;
+    ``backend="process"`` isolates each behind an OS process boundary (see
+    ``repro.core.writer_rpc``) so writer crashes are survivable — the
+    crash-injection suite SIGKILLs workers mid-save and recovery must still
+    land exactly on the last stamped cycle.
     """
 
     def __init__(self, tables, accs, spec: EmbShardSpec, trainer_state=None,
                  directory: Optional[str] = None, async_save: bool = True,
-                 delta_saves: bool = True, max_inflight: int = 2):
+                 delta_saves: bool = True, max_inflight: int = 2,
+                 backend: str = "thread",
+                 drain_timeout: Optional[float] = None):
+        assert backend in BACKENDS, backend
         self.spec = spec
         self.n_shards = spec.n_shards
-        self.directory = directory
-        self.async_save = async_save
+        self.backend = backend
+        # the process backend is inherently asynchronous (saves return
+        # after the pipe send; durability comes from fence()) — normalize
+        # the flag so callers and report() see the true semantics
+        self.async_save = True if backend == "process" else async_save
         self.delta_saves = delta_saves
         host_t = [np.asarray(t) for t in tables]
         host_a = [np.asarray(a) for a in accs]
-        self.stores = [
-            _ShardStore(j, spec, host_t, host_a,
-                        directory=(os.path.join(directory, f"shard_{j}")
-                                   if directory else None))
-            for j in range(self.n_shards)]
-        self.stores[0].trainer_image = _to_numpy(trainer_state)
-        self.appliers = [
-            (AsyncApplier(name=f"cpr-shard-ckpt-{j}",
-                          max_inflight=max_inflight)
-             if async_save else _InlineApplier())
-            for j in range(self.n_shards)]
+        self.ranges = [[spec.shard_range(t, j)
+                        for t in range(len(spec.table_sizes))]
+                       for j in range(self.n_shards)]
         self.failed: Dict[int, BaseException] = {}   # poisoned shards
+        self.shard_readmissions = 0
+        self._closed = False
         self._seq = 0
         self._seq_lock = threading.Lock()
         self.cycle = 0
+        self._drain_token = 0
         self.dropped_bytes = 0          # routed to a poisoned shard
         self.delta_rows_skipped = 0
         self.delta_bytes_skipped = 0
         self._hashes = ([row_hash(t, a) for t, a in zip(host_t, host_a)]
                         if delta_saves else None)
+        self._watermarks = [0] * self.n_shards   # durable seq per shard
+
+        # ---- run-versioned directory layout ----
+        self.root_dir = directory
+        self.run_dir: Optional[str] = None
+        self._current_advanced = False
         if directory:
-            os.makedirs(directory, exist_ok=True)
-            # continue an existing history (restarted run) instead of
-            # truncating the manifest the previous run's recovery needs;
-            # seq/cycle counters resume past the old maxima so filenames
-            # never collide with already-referenced files
-            prev = _read_manifest(directory, LAYOUT, spec)
-            if prev is not None:
-                self._manifest = prev
-                self._seq = max((e.get("seq", 0)
-                                 for e in prev["events"]), default=0)
-                self.cycle = max((e["cycle"] for e in prev["events"]
-                                  if e["kind"] == "cycle"), default=0)
-            else:
-                self._manifest = {"layout": LAYOUT,
-                                  "n_shards": self.n_shards,
-                                  "table_sizes": list(spec.table_sizes),
-                                  "events": []}
+            chain = manifest_chain(directory, LAYOUT, spec)
+            self._seq = max((e.get("seq", 0) for _, m in chain
+                             for e in m["events"]), default=0)
+            self.cycle = max((e["cycle"] for _, m in chain
+                              for e in m["events"]
+                              if e["kind"] == "cycle"), default=0)
+            self.run_dir, run_name, parent = _new_run_dir(directory)
+            self._manifest = {"layout": LAYOUT, "run": run_name,
+                              "parent": parent,
+                              "n_shards": self.n_shards,
+                              "table_sizes": list(spec.table_sizes),
+                              "events": []}
+        self.directory = self.run_dir   # this run's files live here
+
+        # ---- per-shard writers ----
+        shard_dirs = [os.path.join(self.run_dir, f"shard_{j}")
+                      if self.run_dir else None
+                      for j in range(self.n_shards)]
+        trainer_np = _to_numpy(trainer_state)
+        if backend == "process":
+            from repro.core.writer_rpc import (DRAIN_TIMEOUT_S,
+                                               ProcessShardWriter)
+            self._drain_timeout = drain_timeout or DRAIN_TIMEOUT_S
+            self._spool_dir = (os.path.join(self.run_dir, "spool")
+                               if self.run_dir
+                               else tempfile.mkdtemp(prefix="cpr-spool-"))
+            self._spool_owned = self.run_dir is None
+            self._spool_files: List[str] = []
+            # pristine initial slices per shard: the disk-replay base (a
+            # row never covered by a stamped event restores to its initial
+            # value) and the spawn seed.  Never mutated.
+            self._init_slices = [
+                ([np.array(host_t[t][lo:hi])
+                  for t, (lo, hi) in enumerate(self.ranges[j])],
+                 [np.array(host_a[t][lo:hi])
+                  for t, (lo, hi) in enumerate(self.ranges[j])],
+                 trainer_np if j == 0 else None)
+                for j in range(self.n_shards)]
+            # last-known image per shard: the restore fallback when a
+            # worker is dead and there is no disk to replay; starts as the
+            # (shared, read-only) init slices, replaced wholesale by every
+            # successful fetch
+            self._img_cache = list(self._init_slices)
+            self.stores = None
+            self.appliers = None
+            self.procs = [
+                ProcessShardWriter(j, spec, self._img_cache[j][0],
+                                   self._img_cache[j][1],
+                                   trainer_image=(trainer_np if j == 0
+                                                  else None),
+                                   directory=shard_dirs[j])
+                for j in range(self.n_shards)]
+        else:
+            self._drain_timeout = drain_timeout
+            self.procs = None
+            self.stores = [
+                _ShardStore(j, spec, host_t, host_a, directory=shard_dirs[j])
+                for j in range(self.n_shards)]
+            self.stores[0].trainer_image = trainer_np
+            self._max_inflight = max_inflight
+            self.appliers = [self._new_applier(j)
+                             for j in range(self.n_shards)]
+
+    def _new_applier(self, j: int):
+        return (AsyncApplier(name=f"cpr-shard-ckpt-{j}",
+                             max_inflight=self._max_inflight)
+                if self.async_save else _InlineApplier())
 
     # --------------------------------------------------------- accounting --
     @property
     def bytes_written(self) -> int:
-        return sum(s.bytes_written for s in self.stores)
+        return sum(self.shard_bytes)
 
     @property
     def save_events(self) -> int:
-        return sum(s.save_events for s in self.stores)
+        return sum(self.shard_events)
 
     @property
     def shard_bytes(self) -> List[int]:
+        if self.backend == "process":
+            return [p.bytes_written for p in self.procs]
         return [s.bytes_written for s in self.stores]
 
     @property
     def shard_events(self) -> List[int]:
+        if self.backend == "process":
+            return [p.save_events for p in self.procs]
         return [s.save_events for s in self.stores]
 
     @property
@@ -297,19 +441,75 @@ class ShardedCheckpointWriter:
 
     @property
     def trainer_image(self):
+        if self.backend == "process":
+            return self._shard_images(0)[2]
         return self.stores[0].trainer_image
 
-    def _assemble(self):
+    # ------------------------------------------------------- image access --
+    def _shard_images(self, j: int):
+        """(table_slices, acc_slices, trainer_image) for shard ``j``'s
+        current image.  Process backend: fetched from the live worker; for
+        a dead/poisoned worker the last-good image is replayed from the
+        stamped events on disk, falling back to the last fetched image."""
+        if self.backend != "process":
+            s = self.stores[j]
+            return s.image_tables, s.image_accs, s.trainer_image
+        if j not in self.failed and self.procs[j].error is None:
+            got = self.procs[j].fetch_image(self._drain_timeout)
+            if got is not None:
+                self._img_cache[j] = got
+                return got
+            self.failed[j] = self.procs[j].error
+        if self.root_dir is not None:
+            disk = self._replay_shard_from_disk(j)
+            if disk is not None:
+                return disk
+        return self._img_cache[j]
+
+    def _replay_shard_from_disk(self, j: int):
+        """Shard ``j``'s last-good image per the stamped on-disk history.
+        Events only reach a manifest together with their cycle stamp (one
+        atomic write per fence), and the first stamp advances CURRENT to
+        this run — so the CURRENT-rooted chain always covers everything
+        this writer has stamped.  None when nothing stamped covers the
+        shard yet."""
+        chain = manifest_chain(self.root_dir, LAYOUT, self.spec)
+        events = _stamped_events(chain)
+        if not any(e.get("shard") == j and e["kind"] in ("full", "partial")
+                   for _, e in events):
+            return None
+        # replay over the PRISTINE init slices — the live-image cache may
+        # hold post-stamp state (a fetch after unstamped applies), and a
+        # poisoned shard must restore exactly its last stamped image
+        store = _ShardStore(j, self.spec, self._init_slices[j][0],
+                            self._init_slices[j][1], sliced=True)
+        _replay_shard(store, j, events)
+        trainer = self._init_slices[j][2]
+        if j == 0:
+            tr_evs = [(d, e) for d, e in events if e["kind"] == "trainer"]
+            if tr_evs:
+                d, e = tr_evs[-1]
+                trainer = load_trainer_tree(
+                    os.path.join(d, "shard_0", e["file"]), None)
+        return store.image_tables, store.image_accs, trainer
+
+    def _assemble(self, images=None):
+        """Assemble full tables from per-shard image slices.  ``images``
+        lets a caller that also needs the trainer replica pay for one
+        per-shard fetch instead of several (process backend: each fetch
+        ships the shard's whole image over the pipe)."""
         tabs, accs = [], []
+        if images is None:
+            images = [self._shard_images(j) for j in range(self.n_shards)]
         for t, n in enumerate(self.spec.table_sizes):
-            tab = np.empty((n,) + self.stores[0].image_tables[t].shape[1:],
-                           self.stores[0].image_tables[t].dtype)
-            acc = np.empty((n,) + self.stores[0].image_accs[t].shape[1:],
-                           self.stores[0].image_accs[t].dtype)
-            for s in self.stores:
-                lo, hi = s.ranges[t]
-                tab[lo:hi] = s.image_tables[t]
-                acc[lo:hi] = s.image_accs[t]
+            tab = np.empty((n,) + images[0][0][t].shape[1:],
+                           images[0][0][t].dtype)
+            acc = np.empty((n,) + images[0][1][t].shape[1:],
+                           images[0][1][t].dtype)
+            for j in range(self.n_shards):
+                lo, hi = self.ranges[j][t]
+                tab[lo:hi] = images[j][0][t]
+                acc[lo:hi] = images[j][1][t]
             tabs.append(tab)
             accs.append(acc)
         return tabs, accs
@@ -320,60 +520,87 @@ class ShardedCheckpointWriter:
             self._seq += 1
             return self._seq
 
+    def _applier_error(self, j: int) -> Optional[BaseException]:
+        return (self.procs[j].error if self.backend == "process"
+                else self.appliers[j].error)
+
     def _healthy(self, j: int) -> bool:
         """Poisoned-shard check at routing time (fail-stop isolation): a
-        latched worker error drops this shard out of the fleet; everyone
-        else keeps saving."""
+        latched worker error — or a dead writer process — drops this shard
+        out of the fleet; everyone else keeps saving."""
         if j in self.failed:
             return False
-        err = self.appliers[j].error
+        err = self._applier_error(j)
         if err is not None:
             self.failed[j] = err
             return False
         return True
 
-    def _submit_to(self, j: int, fn, *args) -> bool:
-        """Route work to shard ``j`` unless it is — or just became —
+    def _dispatch(self, j: int, kind: str, payload) -> bool:
+        """Route one command to shard ``j`` unless it is — or just became —
         poisoned.  A worker error latching between the health check and the
-        enqueue (the applier's ``submit`` re-raises it) is treated exactly
-        like one seen earlier: dropped and recorded, never a crash."""
+        enqueue is treated exactly like one seen earlier: dropped and
+        recorded, never a crash."""
         if not self._healthy(j):
             return False
         try:
-            self.appliers[j].submit(fn, *args)
+            if self.backend == "process":
+                p = self.procs[j]
+                {"full": p.submit_full, "rows": p.submit_rows,
+                 "trainer": p.submit_trainer}[kind](*payload)
+            else:
+                s = self.stores[j]
+                fn = {"full": s.apply_full, "rows": s.apply_rows,
+                      "trainer": s.apply_trainer}[kind]
+                self.appliers[j].submit(fn, *payload)
             return True
         except RuntimeError as e:
-            self.failed[j] = self.appliers[j].error or e
+            self.failed[j] = self._applier_error(j) or e
             return False
 
     _snap = staticmethod(snap_host)
 
+    def _full_payload(self, j: int, snap_t, snap_a, step: int, seq: int,
+                      spool: Optional[str]):
+        if self.backend == "process":
+            return (spool, step, seq)
+        return (snap_t, snap_a, step, seq)
+
+    def _spool(self, seq: int, snap_t, snap_a) -> Optional[str]:
+        if self.backend != "process":
+            return None
+        from repro.core.writer_rpc import spool_full_snapshot
+        path = spool_full_snapshot(self._spool_dir, seq, snap_t, snap_a)
+        self._spool_files.append(path)
+        return path
+
     def save_full(self, tables, accs, trainer_state=None, step: int = 0):
         """One immutable host snapshot per table, shared by every shard's
-        worker (each slices out its own ranges off-thread); returns enqueued
-        snapshot bytes (poisoned shards' slices are dropped, not counted)."""
+        worker (each slices out its own ranges off the critical path);
+        returns enqueued snapshot bytes (poisoned shards' slices are
+        dropped, not counted)."""
         seq = self._next_seq()
         snap_t = [self._snap(t) for t in tables]
         snap_a = [self._snap(a) for a in accs]
         full_h = ([row_hash(t, a) for t, a in zip(snap_t, snap_a)]
                   if self._hashes is not None else None)
+        spool = self._spool(seq, snap_t, snap_a)
         nbytes = 0
-        for j, store in enumerate(self.stores):
+        for j in range(self.n_shards):
             part = sum(snap_t[t][lo:hi].nbytes + snap_a[t][lo:hi].nbytes
-                       for t, (lo, hi) in enumerate(store.ranges))
-            if not self._submit_to(j, store.apply_full, snap_t, snap_a,
-                                   step, seq):
+                       for t, (lo, hi) in enumerate(self.ranges[j]))
+            if not self._dispatch(j, "full", self._full_payload(
+                    j, snap_t, snap_a, step, seq, spool)):
                 self.dropped_bytes += part
                 continue
             nbytes += part
             if full_h is not None:
-                for t, (lo, hi) in enumerate(store.ranges):
+                for t, (lo, hi) in enumerate(self.ranges[j]):
                     self._hashes[t][lo:hi] = full_h[t][lo:hi]
         if trainer_state is not None:
             import jax
-            snap_tr = jax.tree.map(self._snap, trainer_state)
-            if self._submit_to(0, self.stores[0].apply_trainer, snap_tr,
-                               step, seq):
+            snap_tr = _to_numpy(jax.tree.map(self._snap, trainer_state))
+            if self._dispatch(0, "trainer", (snap_tr, step, seq)):
                 nbytes += sum(np.asarray(a).nbytes
                               for a in _leaves(snap_tr))
         return nbytes
@@ -385,9 +612,8 @@ class ShardedCheckpointWriter:
         if trainer_state is None:
             return 0
         import jax
-        snap = jax.tree.map(self._snap, trainer_state)
-        if not self._submit_to(0, self.stores[0].apply_trainer, snap, step,
-                               self._next_seq()):
+        snap = _to_numpy(jax.tree.map(self._snap, trainer_state))
+        if not self._dispatch(0, "trainer", (snap, step, self._next_seq())):
             return 0
         return sum(np.asarray(a).nbytes for a in _leaves(snap))
 
@@ -417,9 +643,8 @@ class ShardedCheckpointWriter:
         for j in np.unique(owners):
             m = owners == j
             part = values[m].nbytes + acc_values[m].nbytes + rows[m].nbytes
-            if not self._submit_to(int(j), self.stores[j].apply_rows, table,
-                                   rows[m], values[m], acc_values[m],
-                                   step, seq):
+            if not self._dispatch(int(j), "rows", (table, rows[m], values[m],
+                                                   acc_values[m], step, seq)):
                 self.dropped_bytes += part
                 continue
             nbytes += part
@@ -431,18 +656,45 @@ class ShardedCheckpointWriter:
         return nbytes
 
     # -------------------------------------------------- coordinator fence --
-    def fence(self, strict: bool = True):
-        """Two-phase coordinator fence.
+    def _drain(self) -> List[dict]:
+        """Phase 1 of the fence: the DRAIN barrier.
 
-        Phase 1 drains every healthy shard's queue (so all enqueued applies
-        are in the shard images and, in disk mode, durably persisted).
-        Phase 2 flushes the shards' completed events into the coordinator
-        manifest, in global ``seq`` order, and stamps a ``cycle`` record —
-        the consistency point ``load_latest`` recovers to.  With ``strict``
-        (the default) a :class:`ShardSaveError` is then raised if any shard
-        is poisoned; the healthy shards were already drained and stamped, so
-        their saves are never lost to another writer's error.
-        """
+        Thread backend: join every healthy shard's queue (its applies are
+        then in the shard image and, in disk mode, persisted).  Process
+        backend: *broadcast* the DRAIN marker to every healthy worker
+        first, then collect each one's ``drained`` ack — workers drain
+        concurrently, and the ack's watermark confirms apply **and**
+        persist up to that seq.  Either way a shard that cannot ack is
+        poisoned here, and the acked events of every shard (including ones
+        that died after acking) are returned for stamping."""
+        if self.backend == "process":
+            self._drain_token += 1
+            token = self._drain_token
+            pending = []
+            for j, p in enumerate(self.procs):
+                if j in self.failed:
+                    continue
+                if p.send_drain(token):
+                    pending.append(j)
+                else:
+                    self.failed[j] = p.error
+            for j in pending:
+                if not self.procs[j].wait_drained(token,
+                                                  self._drain_timeout):
+                    self.failed[j] = self.procs[j].error
+            drained: List[dict] = []
+            for j, p in enumerate(self.procs):
+                # a dead/poisoned worker may have acked durable applies the
+                # parent never pumped — fold them so they are stamped, just
+                # as the thread backend stamps a poisoned store's completed
+                # applies
+                p.pump()
+                evs = p.collect_applied()
+                drained.extend(evs)
+                for e in evs:
+                    self._watermarks[j] = max(self._watermarks[j], e["seq"])
+                self._watermarks[j] = max(self._watermarks[j], p.durable_seq)
+            return drained
         for j, applier in enumerate(self.appliers):
             if j in self.failed:
                 continue
@@ -450,35 +702,145 @@ class ShardedCheckpointWriter:
                 applier.fence()
             except RuntimeError:
                 self.failed[j] = applier.error
-        drained: List[dict] = []
-        for s in self.stores:
+        drained = []
+        for j, s in enumerate(self.stores):
             drained.extend(s.applied)
+            for e in s.applied:
+                self._watermarks[j] = max(self._watermarks[j], e["seq"])
             s.applied = []
-        if self.directory is not None:
+        return drained
+
+    def fence(self, strict: bool = True):
+        """Two-phase coordinator fence (the DRAIN/STAMP barrier).
+
+        Phase 1 (:meth:`_drain`) broadcasts DRAIN and collects every
+        healthy shard's durable watermark.  Phase 2 flushes the acked
+        events into the coordinator manifest, in global ``seq`` order, and
+        stamps a ``cycle`` record carrying the watermarks — the consistency
+        point ``load_latest`` recovers to — only once every healthy shard
+        has acked.  The first stamped cycle of a run atomically advances
+        the root ``CURRENT`` pointer to this run.  With ``strict`` (the
+        default) a :class:`ShardSaveError` is then raised if any shard is
+        poisoned; the healthy shards were already drained and stamped, so
+        their saves are never lost to another writer's error.
+        """
+        if self._closed:
+            # close() already drained + stamped the final cycle; a later
+            # fence (e.g. report() after the emulator shut the fleet down)
+            # must not mistake the cleanly-exited workers for crashes
+            if strict and self.failed:
+                raise ShardSaveError(self.failed)
+            return
+        drained = self._drain()
+        if self.run_dir is not None:
             drained.sort(key=lambda e: (e["seq"], e["shard"]))
             self._manifest["events"].extend(drained)
             self.cycle += 1
             self._manifest["events"].append({
                 "kind": "cycle", "cycle": self.cycle, "time": time.time(),
-                "shard_seq": {str(j): max((e["seq"] for e in drained
-                                           if e["shard"] == j), default=0)
+                "shard_seq": {str(j): self._watermarks[j]
                               for j in range(self.n_shards)},
                 "failed_shards": sorted(self.failed)})
-            tmp = os.path.join(self.directory, "manifest.json.tmp")
-            with open(tmp, "w") as f:
-                json.dump(self._manifest, f)
-            os.replace(tmp, os.path.join(self.directory, "manifest.json"))
+            # atomic durable rewrite (fsync data + dir before/after the
+            # rename): the stamp itself survives power loss.  NOTE: the
+            # stamped events' .npz payloads are NOT fsynced by the workers
+            # (that would serialize every persist on disk flushes), so the
+            # full power-loss story — fsync payloads before DRAIN acks —
+            # is a ROADMAP item; process/node *crash* durability, which
+            # the crash suite drives, is complete
+            atomic_json_dump(os.path.join(self.run_dir, "manifest.json"),
+                             self._manifest)
+            if not self._current_advanced:
+                # only now may recovery prefer this run over its parent
+                _write_current(self.root_dir, self._manifest["run"])
+                self._current_advanced = True
+        if self.backend == "process":
+            # every healthy worker acked past these spools; poisoned ones
+            # will never read them (their queued work was dropped)
+            for p in self._spool_files:
+                try:
+                    os.remove(p)
+                except OSError:
+                    pass
+            self._spool_files = []
         if strict and self.failed:
             raise ShardSaveError(self.failed)
 
     def close(self):
-        """Stamp a final cycle and stop the worker threads; never raises."""
+        """Stamp a final cycle and stop the workers; never raises
+        (idempotent)."""
+        if self._closed:
+            return
         try:
             self.fence(strict=False)
         except Exception:
             pass
-        for applier in self.appliers:
-            applier.close()
+        self._closed = True
+        if self.backend == "process":
+            for p in self.procs:
+                p.close()
+            if self._spool_owned:
+                shutil.rmtree(self._spool_dir, ignore_errors=True)
+        else:
+            for applier in self.appliers:
+                applier.close()
+
+    # ------------------------------------------------------- re-admission --
+    def kill_shard(self, j: int):
+        """Failure drill: hard-kill shard ``j``'s writer (SIGKILL for the
+        process backend, a latched poison for the thread backend).  The
+        crash-injection suite and operator drills drive this; recovery must
+        behave exactly as for a real writer death."""
+        if self.backend == "process":
+            self.procs[j].kill()
+            self.failed[j] = self.procs[j].error
+            return
+        err = RuntimeError(f"shard {j} writer killed (drill)")
+        applier = self.appliers[j]
+        applier._exc = err          # same latch a worker error sets
+        self.failed[j] = err
+
+    def readmit(self, tables, accs, trainer_state=None, step: int = 0):
+        """Re-admit every poisoned shard into the fleet (call at a cycle
+        boundary, after ``fence``).
+
+        Per poisoned shard: (1) the writer is respawned — a fresh process
+        seeded from the shard's last-good image (disk replay of stamped
+        events when a directory exists), or a fresh applier thread over the
+        surviving store; (2) a **fresh full of the shard's current rows**
+        is enqueued, covering every row the shard missed while poisoned,
+        and the delta hashes for its ranges are re-based on that snapshot;
+        (3) the shard leaves ``failed`` and resumes normal routing.  The
+        reseed full is stamped — and the shard's recovery point caught up —
+        at the *next* fence.  Returns the re-admitted shard ids.
+        """
+        if not self.failed:
+            return []
+        readmitted = sorted(self.failed)
+        seq = self._next_seq()
+        snap_t = [self._snap(t) for t in tables]
+        snap_a = [self._snap(a) for a in accs]
+        spool = None
+        for j in readmitted:
+            if self.backend == "process":
+                seed_t, seed_a, seed_tr = self._shard_images(j)
+                self.procs[j].respawn(seed_t, seed_a, seed_tr)
+                if spool is None:
+                    spool = self._spool(seq, snap_t, snap_a)
+            else:
+                self.appliers[j].close()
+                self.appliers[j] = self._new_applier(j)
+            del self.failed[j]
+            if self._dispatch(j, "full", self._full_payload(
+                    j, snap_t, snap_a, step, seq, spool)):
+                if self._hashes is not None:
+                    for t, (lo, hi) in enumerate(self.ranges[j]):
+                        self._hashes[t][lo:hi] = row_hash(snap_t[t][lo:hi],
+                                                          snap_a[t][lo:hi])
+                if j == 0 and trainer_state is not None:
+                    self.save_trainer(trainer_state, step=step)
+        self.shard_readmissions += len(readmitted)
+        return readmitted
 
     # ----------------------------------------------------------- restores --
     def restore_shards(self, tables, accs, shard_ids: Sequence[int]):
@@ -487,17 +849,19 @@ class ShardedCheckpointWriter:
         out_t = [np.array(t) for t in tables]
         out_a = [np.array(a) for a in accs]
         for j in shard_ids:
-            s = self.stores[j]
-            for t, (lo, hi) in enumerate(s.ranges):
+            img_t, img_a, _ = self._shard_images(j)
+            for t, (lo, hi) in enumerate(self.ranges[j]):
                 if hi > lo:
-                    out_t[t][lo:hi] = s.image_tables[t]
-                    out_a[t][lo:hi] = s.image_accs[t]
+                    out_t[t][lo:hi] = img_t[t]
+                    out_a[t][lo:hi] = img_a[t]
         return out_t, out_a
 
     def restore_all(self):
-        """Full recovery image (every shard + trainer replica)."""
-        tabs, accs = self._assemble()
-        return tabs, accs, self.stores[0].trainer_image
+        """Full recovery image (every shard + trainer replica), fetched in
+        a single per-shard sweep."""
+        images = [self._shard_images(j) for j in range(self.n_shards)]
+        tabs, accs = self._assemble(images)
+        return tabs, accs, images[0][2]
 
     # --------------------------------------------------------------- disk --
     @classmethod
@@ -505,63 +869,46 @@ class ShardedCheckpointWriter:
                     trainer_state=None) -> "ShardedCheckpointWriter":
         """Reconstruct a consistent cross-shard image from disk.
 
-        Only events logged before the last ``cycle`` stamp are replayed —
-        files persisted after the last coordinator fence may cover some
+        The run the atomic ``CURRENT`` pointer designates is the recovery
+        root; its manifest chains to prior runs via ``parent``.  Only
+        events logged *before* each run's last ``cycle`` stamp are replayed
+        — files persisted after the last coordinator fence may cover some
         shards but not others and are ignored.  Each shard then replays
         independently, strictly in manifest event order, from its last full
         event onward; the trainer replica comes from the newest stamped
         trainer event.  Returns a sync-mode in-memory writer holding the
         image (use ``restore_all`` / ``restore_shards``).
         """
-        manifest = _read_manifest(directory, LAYOUT, spec)
-        if manifest is None:
-            raise FileNotFoundError(f"no manifest.json in {directory}")
-        events = manifest["events"]
-        last_cycle = None
-        for i, e in enumerate(events):
-            if e["kind"] == "cycle":
-                last_cycle = i
-        covered = events[:last_cycle] if last_cycle is not None else []
+        chain = manifest_chain(directory, LAYOUT, spec)
+        if not chain:
+            raise FileNotFoundError(
+                f"no loadable checkpoint run in {directory} "
+                f"(no CURRENT pointer or manifest.json)")
+        events = _stamped_events(chain)
         out = cls(tables, accs, spec, trainer_state=None, directory=None,
                   async_save=False, delta_saves=False)
         for j, store in enumerate(out.stores):
-            evs = [e for e in covered if e.get("shard") == j
-                   and e["kind"] in ("full", "partial")]
-            full_idx = None
-            for i, e in enumerate(evs):
-                if e["kind"] == "full":
-                    full_idx = i
-            start = 0
-            sdir = os.path.join(directory, f"shard_{j}")
-            if full_idx is not None:
-                with np.load(os.path.join(
-                        sdir, f"full_e{evs[full_idx]['seq']}.npz")) as z:
-                    for t in range(len(store.image_tables)):
-                        store.image_tables[t][...] = z[f"table_{t}"]
-                        store.image_accs[t][...] = z[f"acc_{t}"]
-                start = full_idx + 1
-            for e in evs[start:]:
-                if e["kind"] != "partial":
-                    continue
-                with np.load(os.path.join(sdir, e["file"])) as z:
-                    t = int(z["table"])
-                    local = z["rows"] - store.ranges[t][0]
-                    store.image_tables[t][local] = z["values"]
-                    store.image_accs[t][local] = z["accs"]
-        tr_evs = [e for e in covered if e["kind"] == "trainer"]
+            _replay_shard(store, j, events)
+        tr_evs = [(d, e) for d, e in events if e["kind"] == "trainer"]
         if tr_evs:
+            d, e = tr_evs[-1]
             out.stores[0].trainer_image = load_trainer_tree(
-                os.path.join(directory, "shard_0", tr_evs[-1]["file"]),
-                trainer_state)
+                os.path.join(d, "shard_0", e["file"]), trainer_state)
         return out
 
 
 def load_latest_auto(directory: str, tables, accs, spec: EmbShardSpec,
                      trainer_state=None):
-    """Dispatch on the manifest layout: sharded fleet vs flat store.
-    Returns an object exposing ``restore_all`` / ``restore_shards``."""
-    from repro.core.checkpoint import CheckpointStore
-    with open(os.path.join(directory, "manifest.json")) as f:
+    """Dispatch on the manifest layout: sharded fleet vs flat store.  The
+    run-versioned ``CURRENT`` pointer (or a legacy top-level manifest) is
+    resolved first.  Returns an object exposing ``restore_all`` /
+    ``restore_shards``."""
+    from repro.core.checkpoint import CheckpointStore, resolve_run_dir
+    run_dir = resolve_run_dir(directory)
+    if run_dir is None:
+        raise FileNotFoundError(
+            f"no loadable checkpoint run in {directory}")
+    with open(os.path.join(run_dir, "manifest.json")) as f:
         layout = json.load(f).get("layout")
     loader = (ShardedCheckpointWriter if layout == LAYOUT
               else CheckpointStore)

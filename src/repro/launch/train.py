@@ -40,7 +40,8 @@ def train(cfg, steps=200, batch=8, seq=128, lr=0.005, mode="cpr-mfu",
           n_failures=2, fail_fraction=0.25, seed=0, target_pls=0.1,
           checkpoint_dir=None, log_every=20, use_flash=False,
           async_save=False, tracker_backend="pallas", sharded_save=False,
-          delta_saves=None, n_emb=8, resume=False):
+          delta_saves=None, n_emb=8, resume=False, writer_procs=False,
+          readmit=False):
     """Returns (final_params, history dict)."""
     assert cfg.causal and cfg.modality_frontend is None, \
         "LM driver needs a causal text model"
@@ -56,7 +57,8 @@ def train(cfg, steps=200, batch=8, seq=128, lr=0.005, mode="cpr-mfu",
     mgr = CPRManager(mode, p, (cfg.vocab_size,), target_pls=target_pls,
                      directory=checkpoint_dir, async_save=async_save,
                      tracker_backend=tracker_backend,
-                     sharded_save=sharded_save, delta_saves=delta_saves)
+                     sharded_save=sharded_save, delta_saves=delta_saves,
+                     writer_procs=writer_procs, readmit=readmit)
     if resume and checkpoint_dir:
         # warm start from the last consistent cycle on disk: embedding rows,
         # their optimizer rows, and the non-embedding trainer tree
@@ -156,6 +158,13 @@ def main():
     ap.add_argument("--no-delta-saves", action="store_true",
                     help="disable row-hash skip of unchanged rows in "
                          "sharded partial saves")
+    ap.add_argument("--writer-procs", action="store_true",
+                    help="run each shard writer in its own OS process "
+                         "(crash-isolated; implies --sharded-save)")
+    ap.add_argument("--readmit", action="store_true",
+                    help="respawn poisoned shard writers at the next cycle "
+                         "boundary and reseed them (fresh full of their "
+                         "current rows) instead of sticky fail-stop")
     ap.add_argument("--n-emb", type=int, default=8,
                     help="number of Emb-PS shards (N_emb)")
     ap.add_argument("--resume", action="store_true",
@@ -173,13 +182,18 @@ def main():
                     sharded_save=args.sharded_save,
                     delta_saves=(False if args.no_delta_saves else None),
                     n_emb=args.n_emb, resume=args.resume,
+                    writer_procs=args.writer_procs, readmit=args.readmit,
                     tracker_backend=args.tracker_backend)
     r = hist["report"]
     o = r["overheads"]
+    extra = ""
+    if r.get("shard_failures") or r.get("shard_readmissions"):
+        extra = (f" shard_failures={r['shard_failures']} "
+                 f"readmissions={r['shard_readmissions']}")
     print(f"done: mode={r['mode']} pls={r['measured_pls']:.4f} "
           f"overhead={o['fraction'] * 100:.2f}% "
           f"save_blocked={o['save_blocked_s']:.3f}s "
-          f"final_loss={hist['loss'][-1][1]:.4f}")
+          f"final_loss={hist['loss'][-1][1]:.4f}{extra}")
 
 
 if __name__ == "__main__":

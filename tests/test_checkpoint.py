@@ -107,7 +107,9 @@ def test_two_partials_same_table_same_step_both_survive_on_disk(tmp_path):
     b_vals = np.full((1, 8), 22.0, np.float32)
     store.save_rows(0, np.array([0]), a_vals, np.ones(1, np.float32), step=5)
     store.save_rows(0, np.array([1]), b_vals, np.ones(1, np.float32), step=5)
-    files = [p for p in os.listdir(str(tmp_path)) if p.startswith("partial")]
+    # run-versioned layout: this run's files live under its run-<n>/ dir
+    files = [p for p in os.listdir(store.directory)
+             if p.startswith("partial")]
     assert len(files) == 2                    # distinct files on disk
     loaded = CheckpointStore.load_latest(str(tmp_path), tables, accs, spec)
     np.testing.assert_array_equal(loaded.image_tables[0][0], a_vals[0])
@@ -213,3 +215,41 @@ def test_scar_selects_most_changed_rows():
     # shadow updated -> selecting again prefers the next-most-changed row
     idx2, _ = trk.scar_select(state, moved, 1)
     assert int(idx2[0]) == 4
+
+
+# ------------------------------------------------------ run versioning ------
+def test_flat_store_new_run_crash_preserves_prior_run(tmp_path):
+    """Regression (pre-fix failing on the in-place manifest rewrite): a new
+    run reusing a checkpoint directory that crashes before its first durable
+    event must leave the prior run's CURRENT manifest loadable — and even
+    after it logs events, the prior run's files are never rewritten."""
+    from repro.core.checkpoint import resolve_run_dir
+
+    tables, accs = make_state()
+    spec = EmbShardSpec((40, 17, 5), 2)
+    s1 = CheckpointStore(tables, accs, spec, directory=str(tmp_path))
+    s1.save_full([t + 1 for t in tables], [a + 1 for a in accs], step=1)
+    cur1 = resolve_run_dir(str(tmp_path))
+    m1_path = os.path.join(cur1, "manifest.json")
+    m1_bytes = open(m1_path, "rb").read()
+
+    # run 2 "crashes" right after construction: a run dir was allocated but
+    # nothing durable happened — CURRENT must still point at run 1
+    s2 = CheckpointStore(tables, accs, spec, directory=str(tmp_path))
+    assert s2.directory != cur1
+    assert resolve_run_dir(str(tmp_path)) == cur1
+    assert open(m1_path, "rb").read() == m1_bytes
+    loaded = CheckpointStore.load_latest(str(tmp_path), tables, accs, spec)
+    np.testing.assert_array_equal(loaded.image_tables[0], tables[0] + 1)
+
+    # run 3 logs a durable event: CURRENT advances to it, but run 1's
+    # manifest is byte-identical and recovery chains run-1 full + run-3
+    # partial
+    s3 = CheckpointStore(tables, accs, spec, directory=str(tmp_path))
+    s3.save_rows(0, np.array([4]), np.full((1, 8), 8.0, np.float32),
+                 np.full(1, 8.0, np.float32), step=2)
+    assert resolve_run_dir(str(tmp_path)) == s3.directory
+    assert open(m1_path, "rb").read() == m1_bytes
+    loaded = CheckpointStore.load_latest(str(tmp_path), tables, accs, spec)
+    np.testing.assert_array_equal(loaded.image_tables[0][4], np.full(8, 8.0))
+    np.testing.assert_array_equal(loaded.image_tables[1], tables[1] + 1)

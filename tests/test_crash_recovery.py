@@ -1,0 +1,337 @@
+"""Crash-injection recovery suite for the process-isolated writer fleet.
+
+These tests SIGKILL real writer processes at arbitrary points inside
+``save_full`` / ``save_rows`` and assert the CPR recovery contract the
+paper's overhead numbers depend on:
+
+  * ``load_latest`` lands **exactly** on the last stamped cycle — per
+    shard, never newer than the last cycle stamp (unacked work is not
+    resurrected) and never older than the previous one (acked+stamped work
+    is not lost); torn files a kill left behind are never read because
+    only stamped events are replayed.
+  * The trainer keeps running with the shard marked poisoned — a writer
+    crash is a report entry, not a trainer crash.
+  * A re-admitted shard's image exact-matches the oracle (the current
+    training state) after its reseed cycle.
+
+Marked ``crash`` so CI can run them as a dedicated job
+(``pytest -m crash``); they also run in tier-1 (bounded: a handful of
+spawn-backed workers per test).
+"""
+import json
+import os
+import signal
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import (CPRManager, EmbShardSpec, ShardedCheckpointWriter,
+                        ShardSaveError, SystemParams)
+from repro.core.checkpoint import resolve_run_dir
+
+pytestmark = pytest.mark.crash
+
+# big enough that a compressed per-shard persist takes real time (the kill
+# window), small enough to keep the suite fast
+SIZES = (60_000, 8_000)
+DIM = 16
+
+
+def make_state(sizes=SIZES, d=DIM, seed=0):
+    rng = np.random.default_rng(seed)
+    tables = [rng.normal(size=(n, d)).astype(np.float32) for n in sizes]
+    accs = [np.zeros(n, np.float32) for n in sizes]
+    return tables, accs
+
+
+def new_fleet(tables, accs, spec, tmp_path, **kw):
+    kw.setdefault("backend", "process")
+    kw.setdefault("delta_saves", False)
+    kw.setdefault("drain_timeout", 30.0)
+    return ShardedCheckpointWriter(tables, accs, spec,
+                                   directory=str(tmp_path), **kw)
+
+
+def sigkill(fleet, j):
+    """Kill shard j's writer the way a node failure would: SIGKILL, no
+    cleanup, no goodbye."""
+    os.kill(fleet.procs[j].pid, signal.SIGKILL)
+
+
+def stamped_events(tmp_path):
+    """The stamped (recovery-eligible) events straight from the on-disk
+    manifest — the ground truth load_latest must replay, nothing more."""
+    run_dir = resolve_run_dir(str(tmp_path))
+    with open(os.path.join(run_dir, "manifest.json")) as f:
+        manifest = json.load(f)
+    evs = manifest["events"]
+    last = None
+    for i, e in enumerate(evs):
+        if e["kind"] == "cycle":
+            last = i
+    return (evs[:last] if last is not None else []), run_dir
+
+
+@pytest.mark.parametrize("kill_delay_s", [0.0, 0.05])
+def test_sigkill_mid_save_full_recovers_to_last_stamp(tmp_path,
+                                                      kill_delay_s):
+    """SIGKILL one writer while a save_full is in flight: recovery must be
+    exactly v1 (the last stamp) or exactly v2 (if the shard acked before
+    dying and the fence stamped it) for the killed shard — never a torn
+    mix — and exactly v2 for every healthy shard."""
+    tables, accs = make_state()
+    spec = EmbShardSpec(SIZES, 4)
+    fleet = new_fleet(tables, accs, spec, tmp_path)
+    v1_t = [t + 1 for t in tables]
+    v1_a = [a + 1 for a in accs]
+    fleet.save_full(v1_t, v1_a, step=1)
+    fleet.fence()                                  # cycle 1: v1 stamped
+    v2_t = [t + 2 for t in tables]
+    v2_a = [a + 2 for a in accs]
+    fleet.save_full(v2_t, v2_a, step=2)
+    if kill_delay_s:
+        time.sleep(kill_delay_s)                   # vary the kill point
+    sigkill(fleet, 1)
+    try:
+        fleet.fence()                              # cycle 2: healthy shards
+        killed_before_ack = False                  # kill landed post-ack
+    except ShardSaveError as e:
+        killed_before_ack = True
+        assert sorted(e.shard_errors) == [1]
+    fleet.close()
+
+    loaded = ShardedCheckpointWriter.load_latest(
+        str(tmp_path), tables, accs, spec)
+    lt, la, _ = loaded.restore_all()
+    for t in range(len(SIZES)):
+        for j in range(4):
+            lo, hi = spec.shard_range(t, j)
+            got_t, got_a = lt[t][lo:hi], la[t][lo:hi]
+            if j != 1:
+                np.testing.assert_array_equal(got_t, v2_t[t][lo:hi])
+                np.testing.assert_array_equal(got_a, v2_a[t][lo:hi])
+            else:
+                # whole-slice v1 or whole-slice v2 — a torn row mix of the
+                # two versions is the bug this suite exists to catch
+                is_v1 = np.array_equal(got_t, v1_t[t][lo:hi]) and \
+                    np.array_equal(got_a, v1_a[t][lo:hi])
+                is_v2 = np.array_equal(got_t, v2_t[t][lo:hi]) and \
+                    np.array_equal(got_a, v2_a[t][lo:hi])
+                assert is_v1 or is_v2, \
+                    f"torn image on killed shard (table {t})"
+                if killed_before_ack:
+                    assert is_v1, "unacked save_full resurrected"
+
+
+def test_sigkill_mid_save_rows_replays_exact_stamped_prefix(tmp_path):
+    """SIGKILL between a burst of save_rows: the killed shard's recovered
+    image must equal the oracle replay of exactly the events the manifest
+    stamped (an in-order prefix of what reached that shard) applied over
+    the last full — no torn rows, no stale-partial resurrection."""
+    tables, accs = make_state()
+    spec = EmbShardSpec(SIZES, 4)
+    fleet = new_fleet(tables, accs, spec, tmp_path)
+    v1_t = [t + 1 for t in tables]
+    v1_a = [a + 1 for a in accs]
+    fleet.save_full(v1_t, v1_a, step=0)
+    fleet.fence()                                  # cycle 1
+    rng = np.random.default_rng(7)
+    for k in range(8):                             # burst of partials
+        rows = rng.choice(SIZES[0], size=512, replace=False)
+        vals = np.full((rows.size, DIM), 10.0 + k, np.float32)
+        avs = np.full(rows.size, 10.0 + k, np.float32)
+        fleet.save_rows(0, rows, vals, avs, step=k)
+        if k == 4:
+            sigkill(fleet, 2)                      # mid-burst
+    with pytest.raises(ShardSaveError):
+        fleet.fence()                              # cycle 2
+    fleet.close()
+
+    stamped, run_dir = stamped_events(tmp_path)
+    loaded = ShardedCheckpointWriter.load_latest(
+        str(tmp_path), tables, accs, spec)
+    lt, la, _ = loaded.restore_all()
+    # oracle: v1 + the stamped partials, replayed from their files in order
+    orc_t = [np.array(t) for t in v1_t]
+    orc_a = [np.array(a) for a in v1_a]
+    for e in stamped:
+        if e["kind"] != "partial":
+            continue
+        path = os.path.join(run_dir, f"shard_{e['shard']}", e["file"])
+        with np.load(path) as z:                   # stamped => never torn
+            t = int(z["table"])
+            orc_t[t][z["rows"]] = z["values"]
+            orc_a[t][z["rows"]] = z["accs"]
+    for t in range(len(SIZES)):
+        np.testing.assert_array_equal(lt[t], orc_t[t])
+        np.testing.assert_array_equal(la[t], orc_a[t])
+    # the kill really cost the killed shard some stamped work: shard 2's
+    # stamped partial count is below the total routed to it
+    n_stamped_2 = sum(1 for e in stamped
+                      if e["kind"] == "partial" and e["shard"] == 2)
+    assert n_stamped_2 < 8
+
+
+def test_trainer_continues_with_shard_poisoned(tmp_path):
+    """A writer SIGKILL is a report entry, not a trainer crash: the manager
+    keeps running save events, healthy shards keep persisting, and the
+    report names the poisoned shard."""
+    p = SystemParams(N_emb=4)
+    mgr = CPRManager("cpr", p, SIZES, directory=str(tmp_path),
+                     writer_procs=True, delta_saves=False)
+    tables, accs = make_state()
+    mgr.attach_store(tables, accs)
+    mgr.set_total_samples(1000)
+    mgr.run_save(mgr.save_interval, [t + 1 for t in tables],
+                 [a + 1 for a in accs], {}, step=1)
+    os.kill(mgr.store.procs[3].pid, signal.SIGKILL)
+    for s in (2, 3):                               # trainer keeps going
+        mgr.run_save(mgr.save_interval * s, [t + s for t in tables],
+                     [a + s for a in accs], {}, step=s)
+    rep = mgr.report()
+    assert rep["writer_backend"] == "process"
+    assert rep["poisoned_shards"] == [3]
+    assert rep["shard_failures"] == [3]
+    assert rep["shard_readmissions"] == 0
+    assert rep["dropped_bytes"] > 0
+    # healthy shards' latest saves are all there
+    img = mgr.store.restore_shards(tables, accs, [0, 1, 2])[0]
+    lo, hi = mgr.spec.shard_range(0, 0)
+    np.testing.assert_array_equal(img[0][lo:hi], (tables[0] + 3)[lo:hi])
+    mgr.close()
+
+
+def test_readmitted_shard_exact_matches_oracle_after_reseed(tmp_path):
+    """Acceptance: after the reseed cycle, a re-admitted shard's image
+    exact-matches the oracle (current training state) — and disk recovery
+    agrees."""
+    tables, accs = make_state()
+    spec = EmbShardSpec(SIZES, 4)
+    fleet = new_fleet(tables, accs, spec, tmp_path)
+    fleet.save_full([t + 1 for t in tables], [a + 1 for a in accs], step=1)
+    fleet.fence()
+    sigkill(fleet, 0)
+    # work the dead shard misses
+    oracle_t = [t + 2 for t in tables]
+    oracle_a = [a + 2 for a in accs]
+    fleet.save_full(oracle_t, oracle_a, step=2)
+    with pytest.raises(ShardSaveError):
+        fleet.fence()
+    readmitted = fleet.readmit(oracle_t, oracle_a, step=3)
+    assert readmitted == [0]
+    assert fleet.shard_readmissions == 1
+    assert fleet.failed == {}
+    fleet.fence()                                  # reseed cycle stamps
+    lt, la, _ = fleet.restore_all()
+    for t in range(len(SIZES)):
+        np.testing.assert_array_equal(lt[t], oracle_t[t])
+        np.testing.assert_array_equal(la[t], oracle_a[t])
+    fleet.close()
+    dt, da, _ = ShardedCheckpointWriter.load_latest(
+        str(tmp_path), tables, accs, spec).restore_all()
+    for t in range(len(SIZES)):
+        np.testing.assert_array_equal(dt[t], oracle_t[t])
+
+
+def test_manager_readmits_at_next_boundary(tmp_path):
+    """With readmit on, the manager respawns a SIGKILLed writer at the next
+    cycle boundary; after the following boundary stamps the reseed, the
+    report shows the rejoin and the shard serves current state."""
+    p = SystemParams(N_emb=4)
+    mgr = CPRManager("cpr", p, SIZES, directory=str(tmp_path),
+                     writer_procs=True, readmit=True, delta_saves=False)
+    tables, accs = make_state()
+    mgr.attach_store(tables, accs)
+    mgr.set_total_samples(1000)
+    mgr.run_save(mgr.save_interval, [t + 1 for t in tables],
+                 [a + 1 for a in accs], {}, step=1)
+    os.kill(mgr.store.procs[2].pid, signal.SIGKILL)
+    # boundary 2 records the poison and re-admits with the step-2 state
+    mgr.run_save(mgr.save_interval * 2, [t + 2 for t in tables],
+                 [a + 2 for a in accs], {}, step=2)
+    # boundary 3 stamps the reseed full
+    mgr.run_save(mgr.save_interval * 3, [t + 3 for t in tables],
+                 [a + 3 for a in accs], {}, step=3)
+    rep = mgr.report()
+    assert rep["shard_readmissions"] == 1
+    assert rep["poisoned_shards"] == []
+    assert rep["shard_failures"] == [2]            # history is kept
+    img = mgr.store.restore_shards(tables, accs, [2])[0]
+    lo, hi = mgr.spec.shard_range(0, 2)
+    np.testing.assert_array_equal(img[0][lo:hi], (tables[0] + 3)[lo:hi])
+    mgr.close()
+
+
+def test_emulator_survives_writer_kill_and_resumes(tmp_path):
+    """End-to-end: an emulation whose writer process is SIGKILLed mid-run
+    still finishes, reports the poison, and the checkpoint directory stays
+    resumable by a fresh emulator."""
+    from repro.configs.dlrm import DLRM_KAGGLE, scaled
+    from repro.core import Emulator, FailureInjector
+
+    from repro.data.synthetic import ClickLogDataset
+
+    cfg = scaled(DLRM_KAGGLE, max_rows=500)
+    ds = ClickLogDataset(cfg.table_sizes, num_samples=4000, seed=3)
+    p = SystemParams(N_emb=2)
+    mgr = CPRManager("cpr", p, cfg.table_sizes, directory=str(tmp_path),
+                     writer_procs=True, readmit=True)
+    inj = FailureInjector(0, 0.25, p.N_emb, p.T_total, seed=11)
+    emu = Emulator(cfg, ds, mgr, inj, batch_size=256)
+
+    killed = {"done": False}
+    orig_run_save = mgr.run_save
+
+    def run_save_and_kill(*a, **kw):
+        out = orig_run_save(*a, **kw)
+        if not killed["done"]:
+            killed["done"] = True
+            os.kill(mgr.store.procs[1].pid, signal.SIGKILL)
+        return out
+
+    mgr.run_save = run_save_and_kill
+    r = emu.run(max_steps=10)
+    assert killed["done"]
+    assert r.report["shard_failures"] == [1]
+    assert np.isfinite(r.final_loss)
+
+    mgr2 = CPRManager("cpr", p, cfg.table_sizes, sharded_save=True,
+                      async_save=False)
+    inj2 = FailureInjector(0, 0.25, p.N_emb, p.T_total, seed=12)
+    r2 = Emulator(cfg, ds, mgr2, inj2, batch_size=256).run(
+        max_steps=3, resume_from=str(tmp_path))
+    assert np.isfinite(r2.final_loss)
+
+
+def test_acked_events_of_killed_writer_are_stamped(tmp_path):
+    """Regression: a worker that durably applied + persisted + acked a save
+    and was THEN killed — before the parent ever pumped the ack — must
+    still get that event stamped at the next fence (parity with the thread
+    backend, which always collects a poisoned store's completed applies).
+    Pre-fix, the fence skipped the dead shard's buffered acks and recovery
+    regressed past an acknowledged durable save."""
+    tables, accs = make_state()
+    spec = EmbShardSpec(SIZES, 2)
+    fleet = new_fleet(tables, accs, spec, tmp_path)
+    fleet.save_full([t + 1 for t in tables], [a + 1 for a in accs], step=1)
+    fleet.fence()                                  # cycle 1
+    rows = np.arange(16)                           # owned by shard 0
+    vals = np.full((rows.size, DIM), 5.0, np.float32)
+    fleet.save_rows(0, rows, vals, np.full(rows.size, 5.0, np.float32),
+                    step=2)
+    # wait until the worker's ack is sitting unread in the pipe — i.e. the
+    # apply is done and persisted — then kill before anything pumps it
+    deadline = time.time() + 15.0
+    while not fleet.procs[0]._conn.poll(0) and time.time() < deadline:
+        time.sleep(0.01)
+    assert fleet.procs[0]._conn.poll(0), "ack never arrived"
+    sigkill(fleet, 0)
+    with pytest.raises(ShardSaveError):
+        fleet.fence()                              # cycle 2
+    stamped, _ = stamped_events(tmp_path)
+    assert any(e["kind"] == "partial" and e["shard"] == 0 for e in stamped)
+    fleet.close()
+    lt, _, _ = ShardedCheckpointWriter.load_latest(
+        str(tmp_path), tables, accs, spec).restore_all()
+    np.testing.assert_array_equal(lt[0][:16], vals)

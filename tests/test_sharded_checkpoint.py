@@ -4,9 +4,14 @@ Covers the PR's acceptance contract: byte-identical images to the flat sync
 store after arbitrary save interleavings for N_emb ∈ {1, 2, 4}; per-shard
 fail-stop isolating a poisoned shard; coordinator-fence disk consistency
 (load_latest recovers to the last stamped cycle only); delta row-hash skip;
-trainer replica round-trip incl. degenerate empty shards; and the manager/
-emulator wiring.
+trainer replica round-trip incl. degenerate empty shards; the manager/
+emulator wiring; thread-vs-process backend parity (byte-identical manifests
+and images for identical schedules); the poisoned-shard re-admission state
+machine under random kill/readmit/fence interleavings (hypothesis); and the
+run-versioned directory layout (CURRENT only advances at a stamped cycle).
+SIGKILL-based crash injection lives in tests/test_crash_recovery.py.
 """
+import json
 import os
 import tempfile
 import time
@@ -17,7 +22,7 @@ from hypothesis_compat import given, settings, st
 
 from repro.core import (CheckpointStore, CPRManager, EmbShardSpec,
                         FailureEvent, ShardedCheckpointWriter, ShardSaveError,
-                        SystemParams, load_latest_auto)
+                        SystemParams, load_latest_auto, resolve_run_dir)
 from repro.core.sharded_checkpoint import row_hash
 
 SIZES = (40, 17, 3)
@@ -351,6 +356,9 @@ def test_row_hash_distinguishes_rows_and_matches_itself():
     v2 = v.copy()
     v2[7, 0] = np.nextafter(v2[7, 0], np.inf)   # 1-ulp change must register
     assert row_hash(v2, a)[7] != h1[7]
+    # empty shard ranges (readmit re-bases hashes per shard slice) hash to
+    # an empty array instead of blowing up on the 0-row reshape
+    assert row_hash(v[:0], a[:0]).shape == (0,)
 
 
 # ------------------------------------------------ degenerate + trainer ------
@@ -500,7 +508,11 @@ def test_emulator_sharded_run_and_disk_resume(tmp_path):
     assert r.report["sharded_save"] is True
     assert r.report["bytes_written"] > 0
     assert r.report["shard_failures"] == []
-    assert os.path.exists(os.path.join(str(tmp_path), "manifest.json"))
+    # run-versioned layout: CURRENT names the stamped run holding the manifest
+    from repro.core.checkpoint import resolve_run_dir
+    run_dir = resolve_run_dir(str(tmp_path))
+    assert run_dir is not None
+    assert os.path.exists(os.path.join(run_dir, "manifest.json"))
 
     mgr2 = CPRManager("cpr", p, cfg.table_sizes, async_save=False,
                       sharded_save=True)
@@ -508,3 +520,136 @@ def test_emulator_sharded_run_and_disk_resume(tmp_path):
     r2 = Emulator(cfg, ds, mgr2, inj2, batch_size=256).run(
         max_steps=4, resume_from=str(tmp_path))
     assert np.isfinite(r2.final_loss)
+
+
+# ---------------------------------------------------- backend parity --------
+def test_backend_parity_thread_vs_process(tmp_path):
+    """Identical save/fence schedules through the thread-fleet and
+    process-fleet backends must produce byte-identical manifests (modulo
+    event timestamps) and byte-identical assembled images."""
+    tables, accs = make_state()
+    spec = EmbShardSpec(SIZES, 4)
+    results = {}
+    for backend in ("thread", "process"):
+        d = str(tmp_path / backend)
+        fleet = ShardedCheckpointWriter(
+            [t.copy() for t in tables], [a.copy() for a in accs], spec,
+            directory=d, backend=backend, delta_saves=False,
+            trainer_state=trainer_tree(0.0))
+        drive(fleet, SIZES, 21, n_ops=10, with_trainer=True)
+        fleet.fence()
+        drive(fleet, SIZES, 22, n_ops=6, with_trainer=True)
+        fleet.fence()
+        imgs = fleet.restore_all()[:2]     # one per-shard image fetch
+        stats = (fleet.shard_bytes, fleet.shard_events, fleet.bytes_written)
+        fleet.close()
+        with open(os.path.join(resolve_run_dir(d), "manifest.json")) as f:
+            results[backend] = (imgs, stats, json.load(f))
+
+    (t_img, t_stats, t_man) = results["thread"]
+    (p_img, p_stats, p_man) = results["process"]
+    for t in range(len(SIZES)):
+        np.testing.assert_array_equal(t_img[0][t], p_img[0][t])
+        np.testing.assert_array_equal(t_img[1][t], p_img[1][t])
+    assert t_stats == p_stats
+
+    def strip(m):
+        return {**m, "events": [{k: v for k, v in e.items() if k != "time"}
+                                for e in m["events"]]}
+    assert strip(t_man) == strip(p_man)
+
+
+# ------------------------------------------------- re-admission property ----
+@settings(max_examples=12, deadline=None)
+@given(st.integers(0, 10_000), st.sampled_from([2, 4]), st.integers(4, 14))
+def test_readmission_property_converges_to_oracle(seed, n_shards, n_ops):
+    """Random interleavings of saves / kills / re-admissions / fences: once
+    every poisoned shard has been re-admitted (reseed full of the current
+    state) and a fence has stamped, every shard's image must exact-match
+    the oracle in-memory state — the re-admission state machine never
+    leaves a stale or torn shard behind."""
+    sizes = (13, 7, 1)                  # 1-row table -> empty shards
+    state_t, state_a = make_state(sizes, seed=seed + 1)  # mutable oracle
+    spec = EmbShardSpec(sizes, n_shards)
+    fleet = ShardedCheckpointWriter([t.copy() for t in state_t],
+                                    [a.copy() for a in state_a], spec,
+                                    async_save=True, delta_saves=True)
+    rng = np.random.default_rng(seed)
+    n_kills = 0
+    for k in range(n_ops):
+        op = rng.random()
+        if op < 0.15:                                   # writer crash
+            j = int(rng.integers(n_shards))
+            fleet.kill_shard(j)
+            n_kills += 1
+        elif op < 0.30:                                 # cycle boundary
+            fleet.fence(strict=False)
+        elif op < 0.45:                                 # re-admission
+            fleet.readmit(state_t, state_a, step=k)
+        elif op < 0.60:                                 # full of new state
+            for t in range(len(sizes)):
+                state_t[t] = state_t[t] + np.float32(rng.normal())
+                state_a[t] = state_a[t] + np.float32(abs(rng.normal()))
+            fleet.save_full(state_t, state_a, step=k)
+        else:                                           # partial of new rows
+            t = int(rng.integers(len(sizes)))
+            rows = rng.choice(sizes[t],
+                              size=int(rng.integers(1, sizes[t] + 1)),
+                              replace=False)
+            vals = rng.normal(size=(rows.size, 8)).astype(np.float32)
+            avs = rng.random(rows.size).astype(np.float32)
+            state_t[t][rows] = vals
+            state_a[t][rows] = avs
+            fleet.save_rows(t, rows, vals, avs, step=k)
+    readmitted = fleet.readmit(state_t, state_a, step=n_ops)
+    fleet.fence(strict=False)
+    assert fleet.failed == {}
+    assert fleet.shard_readmissions >= len(readmitted)
+    for t in range(len(sizes)):
+        np.testing.assert_array_equal(fleet.image_tables[t], state_t[t])
+        np.testing.assert_array_equal(fleet.image_accs[t], state_a[t])
+    fleet.close()
+
+
+# ---------------------------------------------------- run versioning --------
+def test_crash_before_first_fence_preserves_prior_run(tmp_path):
+    """Regression (pre-fix failing on the in-place rewrite): a new run
+    reusing a checkpoint directory that crashes before its *first fence*
+    must leave the prior run's CURRENT manifest loadable and its files
+    untouched — the new run's unstamped files are simply ignored."""
+    tables, accs = make_state()
+    spec = EmbShardSpec(SIZES, 2)
+    run1 = ShardedCheckpointWriter(tables, accs, spec,
+                                   directory=str(tmp_path),
+                                   async_save=False, delta_saves=False)
+    run1.save_full([t + 1 for t in tables], [a + 1 for a in accs], step=1)
+    run1.fence()
+    run1.close()
+    cur1 = resolve_run_dir(str(tmp_path))
+    m1_path = os.path.join(cur1, "manifest.json")
+    m1_bytes = open(m1_path, "rb").read()
+
+    # run 2 persists files into its own run dir but crashes before its
+    # first fence (no stamp, no close): sync appliers, so the .npz files
+    # really are on disk — and must be invisible to recovery
+    run2 = ShardedCheckpointWriter(tables, accs, spec,
+                                   directory=str(tmp_path),
+                                   async_save=False, delta_saves=False)
+    run2.save_full([t + 9 for t in tables], [a + 9 for a in accs], step=2)
+    assert any(f.startswith("full_e")
+               for f in os.listdir(os.path.join(run2.run_dir, "shard_0")))
+    assert resolve_run_dir(str(tmp_path)) == cur1
+    assert open(m1_path, "rb").read() == m1_bytes
+    lt, _, _ = ShardedCheckpointWriter.load_latest(
+        str(tmp_path), tables, accs, spec).restore_all()
+    np.testing.assert_array_equal(lt[0], tables[0] + 1)   # run-1 image
+
+    # the first fence of run 2 stamps + atomically advances CURRENT; run
+    # 1's manifest is still byte-identical (nothing rewritten in place)
+    run2.fence()
+    assert resolve_run_dir(str(tmp_path)) == run2.run_dir
+    assert open(m1_path, "rb").read() == m1_bytes
+    lt2, _, _ = ShardedCheckpointWriter.load_latest(
+        str(tmp_path), tables, accs, spec).restore_all()
+    np.testing.assert_array_equal(lt2[0], tables[0] + 9)
+    run2.close()
