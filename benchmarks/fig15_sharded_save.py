@@ -15,12 +15,16 @@ Also measures delta saves (ROADMAP item): a partial re-save of rows whose
 content did not change must ship ~0 bytes (row-hash skip), and a save where
 only a fraction of rows changed must ship only that fraction.
 
-Process-fleet additions (writer_rpc): the same save-event critical path
-through the process-isolated backend — whose caller-side cost is one
-uncompressed spool write + n_shards pipe sends, so it must also stay flat
-vs shard count — with a fence-consistency audit against the sync store,
-and the cost of a poisoned-shard **re-admission** (kill one writer, then
-``readmit`` + fence: respawn, reseed, fresh full, stamp).
+Remote-transport additions (repro.core.transport): the same save-event
+critical path through the process-isolated pipe transport — comparing the
+**shared-memory snapshot path** (zero disk writes on the critical path)
+against the legacy **spool-file** path (one uncompressed .npz write per
+save event); the acceptance bar is shm ≤ spool at every N_emb.  Plus the
+socket transport (auto-spawned loopback shard_server per shard, slices
+streamed over TCP by a sender thread — the multi-host fallback), each with
+a fence-consistency audit against the sync store, and the cost of a
+poisoned-shard **re-admission** (kill one writer, then ``readmit`` +
+fence: respawn, reseed, fresh full, stamp).
 """
 from __future__ import annotations
 
@@ -85,17 +89,20 @@ def _bench_shards(sizes, d, n_shards, events, directory):
     return sync_ms, sharded_ms, delta_ms, image_matches
 
 
-def _bench_process(sizes, d, n_shards, events, directory):
-    """Process-fleet save_full critical path (spool + pipe sends) and a
-    post-fence image parity audit vs the flat sync store."""
+def _bench_transport(sizes, d, n_shards, events, directory, backend,
+                     **writer_kw):
+    """Remote-transport save_full critical path (what the training thread
+    blocks on: snapshot + transport hand-off) and a post-fence image
+    parity audit vs the flat sync store."""
     tables, accs = _state(sizes, d)
     spec = EmbShardSpec(sizes, n_shards)
     sync = CheckpointStore([t.copy() for t in tables],
                            [a.copy() for a in accs], spec)
     writer = ShardedCheckpointWriter(
         [t.copy() for t in tables], [a.copy() for a in accs], spec,
-        directory=directory, backend="process", delta_saves=False)
-    proc_ms = _time_events(
+        directory=directory, backend=backend, delta_saves=False,
+        **writer_kw)
+    crit_ms = _time_events(
         lambda: writer.save_full(tables, accs, step=0), events,
         after=lambda: writer.fence())
     sync.save_full(tables, accs, step=0)
@@ -104,7 +111,7 @@ def _bench_process(sizes, d, n_shards, events, directory):
         np.array_equal(a, b) for a, b in
         list(zip(wt, sync.image_tables)) + list(zip(wa, sync.image_accs)))
     writer.close()
-    return proc_ms, image_matches
+    return crit_ms, image_matches
 
 
 def _bench_readmit(sizes, d, n_shards, directory):
@@ -114,7 +121,7 @@ def _bench_readmit(sizes, d, n_shards, directory):
     spec = EmbShardSpec(sizes, n_shards)
     writer = ShardedCheckpointWriter(
         [t.copy() for t in tables], [a.copy() for a in accs], spec,
-        directory=directory, backend="process", delta_saves=False)
+        directory=directory, backend="pipe", delta_saves=False)
     writer.save_full(tables, accs, step=0)
     writer.fence()
     writer.kill_shard(0)
@@ -189,14 +196,38 @@ def run(max_rows=20_000, n_shards=(1, 2, 4, 8), events=4, r=0.125,
             "skip_ratio": round(1.0 - resave / max(first, 1), 4),
         })
 
-    # process-isolated fleet: critical path vs shard count + parity audit
+    # pipe fleet: the spool-file save_full path (one uncompressed .npz
+    # disk write on the critical path) vs the shared-memory path (no disk
+    # write) — the acceptance bar is shm <= spool at every N_emb
     for n in n_shards:
         with tempfile.TemporaryDirectory() as tmp:
-            proc_ms, ok = _bench_process(sizes, d, n, events, tmp + "/ck")
+            spool_ms, ok_spool = _bench_transport(
+                sizes, d, n, events, tmp + "/spool", "pipe",
+                snapshot="spool")
+            shm_ms, ok_shm = _bench_transport(
+                sizes, d, n, events, tmp + "/shm", "pipe", snapshot="shm")
         rows.append({
-            "figure": "fig15", "kind": "process_save_event", "backend": "disk",
-            "n_shards": n, "total_rows": total,
-            "process_crit_ms": round(proc_ms, 3),
+            "figure": "fig15", "kind": "pipe_snapshot_path",
+            "backend": "disk", "n_shards": n, "total_rows": total,
+            "spool_crit_ms": round(spool_ms, 3),
+            "shm_crit_ms": round(shm_ms, 3),
+            "shm_speedup": round(spool_ms / max(shm_ms, 1e-9), 2),
+            "shm_not_slower": bool(shm_ms <= spool_ms),
+            "image_matches_sync": bool(ok_spool and ok_shm),
+        })
+
+    # socket fleet: same protocol over TCP (auto-spawned loopback
+    # shard_server per shard); the submit cost is the hand-off to the
+    # per-shard sender threads, which slice + pack off the critical path
+    # (residual growth vs shard count is GIL sharing with those senders)
+    for n in n_shards:
+        with tempfile.TemporaryDirectory() as tmp:
+            sock_ms, ok = _bench_transport(sizes, d, n, events,
+                                           tmp + "/ck", "socket")
+        rows.append({
+            "figure": "fig15", "kind": "socket_save_event",
+            "backend": "disk", "n_shards": n, "total_rows": total,
+            "socket_crit_ms": round(sock_ms, 3),
             "image_matches_sync": bool(ok),
         })
 

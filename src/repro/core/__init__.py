@@ -7,7 +7,9 @@ Public API:
   AsyncCheckpointWriter                        — background incremental saves
   ShardedCheckpointWriter, ShardSaveError      — per-shard writer fleet with
                                                  a coordinator fence
-  WriterProcError                              — process-isolated writer died
+  ShardTransport, make_transport, TRANSPORTS   — pluggable writer transports
+                                                 (inproc / pipe / socket)
+  WriterProcError                              — a shard writer died
   resolve_run_dir                              — run-versioned CURRENT pointer
   GammaFailureModel, FailureInjector           — failure modeling (§3)
   Emulator                                     — the evaluation framework (§5.1)
@@ -22,7 +24,8 @@ from repro.core.checkpoint import (AsyncApplier, AsyncCheckpointWriter,
                                    resolve_run_dir)
 from repro.core.sharded_checkpoint import (ShardedCheckpointWriter,
                                            ShardSaveError, load_latest_auto)
-from repro.core.writer_rpc import WriterProcError
+from repro.core.transport import (TRANSPORTS, ShardTransport,
+                                  WriterProcError, make_transport)
 from repro.core.failure import FailureEvent, FailureInjector, GammaFailureModel
 from repro.core.manager import ALL_MODES, CPRManager
 from repro.core.emulator import EmulationResult, Emulator

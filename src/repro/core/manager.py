@@ -29,6 +29,7 @@ from repro.core.checkpoint import (AsyncCheckpointWriter, CheckpointStore,
                                    EmbShardSpec)
 from repro.core.sharded_checkpoint import (ShardedCheckpointWriter,
                                            ShardSaveError)
+from repro.core.transport import normalize_transport
 
 PRIORITY_MODES = ("cpr-mfu", "cpr-ssu", "cpr-scar")
 ALL_MODES = ("full", "partial", "cpr") + PRIORITY_MODES
@@ -75,7 +76,12 @@ class CPRManager:
                  tracker_backend: str = "host", seg_size: int = 512,
                  sharded_save: bool = False,
                  delta_saves: Optional[bool] = None,
-                 writer_procs: bool = False, readmit: bool = False):
+                 writer_procs: bool = False, readmit: bool = False,
+                 transport: Optional[str] = None,
+                 shard_addrs: Optional[list] = None,
+                 heartbeat_interval: Optional[float] = None,
+                 readmit_backoff: float = 0.0,
+                 transport_options: Optional[dict] = None):
         assert mode in ALL_MODES, mode
         assert tracker_backend in ("host", "pallas"), tracker_backend
         self.mode = mode
@@ -90,16 +96,29 @@ class CPRManager:
         # sharded_save: one writer + directory per Emb-PS shard behind a
         # coordinator fence (Check-N-Run's decoupled architecture); delta
         # saves (row-hash skip of unchanged rows) default on with it.
-        # writer_procs moves each shard's writer behind an OS process
-        # boundary (repro.core.writer_rpc) — a writer crash poisons one
-        # shard, never the trainer — and implies sharded_save; readmit
-        # respawns poisoned writers at the next cycle boundary with a
-        # fresh-full reseed instead of leaving fail-stop sticky.
-        self.writer_procs = writer_procs
-        self.sharded_save = sharded_save or writer_procs
-        # a process-backed fleet is asynchronous by construction (saves
-        # hand off over a pipe; fence() is the durability point)
-        self.async_save = async_save or writer_procs
+        # transport picks the writer fleet's carrier (repro.core.transport):
+        # "inproc" applier threads, "pipe" per-shard OS processes (a writer
+        # crash poisons one shard, never the trainer), or "socket" —
+        # writers on other hosts (repro.launch.shard_server) joining the
+        # same DRAIN/STAMP fence.  writer_procs=True is the legacy alias
+        # for transport="pipe".  Any transport but inproc implies
+        # sharded_save.  readmit respawns poisoned writers at the next
+        # cycle boundary with a fresh-full reseed instead of leaving
+        # fail-stop sticky; readmit_backoff throttles crash-looping shards
+        # exponentially; heartbeat_interval starts the proactive
+        # dead-writer monitor.
+        self.transport = normalize_transport(
+            transport if transport is not None
+            else ("pipe" if writer_procs else "inproc"))
+        self.writer_procs = self.transport != "inproc"
+        self.shard_addrs = shard_addrs
+        self.heartbeat_interval = heartbeat_interval
+        self.readmit_backoff = readmit_backoff
+        self.transport_options = transport_options
+        self.sharded_save = sharded_save or self.writer_procs
+        # a remote-backed fleet is asynchronous by construction (saves
+        # hand off to the transport; fence() is the durability point)
+        self.async_save = async_save or self.writer_procs
         self.readmit = readmit
         self.delta_saves = (self.sharded_save if delta_saves is None
                             else delta_saves)
@@ -191,8 +210,11 @@ class CPRManager:
             self.store = ShardedCheckpointWriter(
                 tables, accs, self.spec, trainer_state,
                 directory=self.directory, async_save=self.async_save,
-                delta_saves=self.delta_saves,
-                backend=("process" if self.writer_procs else "thread"))
+                delta_saves=self.delta_saves, backend=self.transport,
+                addresses=self.shard_addrs,
+                heartbeat_interval=self.heartbeat_interval,
+                readmit_backoff=self.readmit_backoff,
+                transport_options=self.transport_options)
             self.writer = self.store
         else:
             self.store = CheckpointStore(tables, accs, self.spec,
@@ -410,7 +432,7 @@ class CPRManager:
             "effective_mode": self.effective_mode,
             "async_save": self.async_save,
             "sharded_save": self.sharded_save,
-            "writer_backend": ("process" if self.writer_procs else "thread"),
+            "writer_backend": self.transport,
             "tracker_backend": self.tracker_backend,
             "T_save": self.T_save,
             "save_interval": self.save_interval,

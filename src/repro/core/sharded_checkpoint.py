@@ -3,43 +3,53 @@
 The paper's production setting (and Check-N-Run, Eisenman et al.) decouples
 snapshot from persist *per Emb-PS shard*: every shard owns its slice of each
 embedding table and persists it independently, so a slow or failed shard
-never blocks — or loses — the others' saves.  This module is that
-architecture on one host:
+never blocks — or loses — the others' saves.  This module is the
+coordinator of that architecture; the per-shard writers live behind a
+**pluggable transport** (``repro.core.transport``):
 
-  * :class:`ShardedCheckpointWriter` owns one applier per shard, behind one
-    of two backends.  ``backend="thread"`` (the default — CI and laptops)
-    runs a :class:`_ShardStore` (image + disk persistence for the shard's
-    row ranges) under an :class:`AsyncApplier` worker thread, or inline in
-    sync mode.  ``backend="process"`` moves each shard's apply loop into a
-    real OS process (``repro.core.writer_rpc``): a writer crash — segfault,
-    OOM-kill, operator SIGKILL — poisons one shard and never the trainer.
-    ``save_rows`` routes each row to its owning shard via
+  * :class:`ShardedCheckpointWriter` owns one :class:`ShardEndpoint` per
+    shard via a :class:`ShardTransport`.  ``backend="inproc"`` (alias
+    ``"thread"``, the default — CI and laptops) runs each shard's
+    ``_ShardStore`` under an in-process applier thread.  ``backend="pipe"``
+    (alias ``"process"``) moves each apply loop into a spawned OS process:
+    a writer crash — segfault, OOM-kill, operator SIGKILL — poisons one
+    shard and never the trainer.  ``backend="socket"`` runs the same
+    protocol over TCP so writers hosted by ``repro.launch.shard_server``
+    on *other hosts* join the fence.  The coordinator has ONE apply /
+    fence / readmit code path; only the transport differs.
+
+  * ``save_rows`` routes each row to its owning shard via
     ``EmbShardSpec.shard_of_rows``; ``save_full`` takes ONE immutable host
-    snapshot per table shared by every worker (thread backend) or spooled
-    once as an uncompressed .npz that every worker slices locally (process
-    backend) — either way the save-event critical path does not grow with
-    shard count.
+    snapshot shipped fleet-wide by the transport (inproc: shared arrays;
+    pipe: a ``multiprocessing.shared_memory`` segment — zero disk writes
+    on the critical path, with a spool-file fallback; socket: each shard
+    streamed exactly its own slices) — either way the save-event critical
+    path does not grow with shard count.
 
   * **Coordinator fence** (two-phase DRAIN/STAMP barrier): phase 1
     broadcasts DRAIN to every healthy shard and collects each shard's
-    durable seq watermark (thread backend: queue join; process backend: the
-    worker's ``drained`` ack, which confirms apply **and** persist).  Phase
-    2 flushes the acked per-shard events into the coordinator manifest, in
+    durable seq watermark — the worker batch-fsyncs its persisted event
+    payloads before acking, so the watermark is power-loss-true.  Phase 2
+    flushes the acked per-shard events into the coordinator manifest, in
     global ``seq`` order, and stamps a ``cycle`` record carrying the
     watermarks — only once every healthy shard has acked.  ``load_latest``
     only replays events logged *before* the last cycle stamp, so it
     reconstructs a consistent cross-shard image even when shards persisted
     at different rates.
 
-  * **Per-shard fail-stop + re-admission**: a worker error (or dead writer
-    process) poisons only its own shard.  Later work routed to a poisoned
-    shard is dropped (and counted), other shards keep saving; ``fence``
-    still drains and stamps the healthy shards before raising
-    :class:`ShardSaveError`.  ``readmit`` reverses the poisoning at a cycle
-    boundary: the writer is respawned, reseeded from its last-good image
-    (disk replay of stamped events when a directory exists), and shipped a
-    fresh full of the shard's current rows — covering everything it missed
-    — which the next fence stamps.  ``shard_readmissions`` counts rejoins.
+  * **Per-shard fail-stop + re-admission**: a worker error, dead writer
+    process, severed connection, or missed heartbeat poisons only its own
+    shard.  Later work routed there is dropped (and counted), other shards
+    keep saving; ``fence`` still drains and stamps the healthy shards
+    before raising :class:`ShardSaveError`.  ``readmit`` reverses the
+    poisoning at a cycle boundary: the writer is respawned (atomically —
+    a failed respawn leaves the shard poisoned for retry at the next
+    boundary), reseeded from its last-good image, and shipped a fresh full
+    of the shard's current rows.  With ``readmit_backoff`` a crash-looping
+    shard's re-admissions back off exponentially so it cannot thrash the
+    fleet.  ``heartbeat_interval`` starts a monitor thread that probes the
+    endpoints so a dead writer is discovered proactively, not at the next
+    submit/fence.
 
   * **Run-versioned directories**: each run writes under its own
     ``run-<n>/`` (manifest + shard dirs + spool) and the root's atomic
@@ -59,31 +69,37 @@ Disk layout (all under the coordinator ``directory``)::
     run-<n>/shard_<j>/full_e<seq>.npz shard j's slice of every table at seq
     run-<n>/shard_<j>/partial_t<t>_e<seq>.npz
     run-<n>/shard_0/trainer_e<seq>.npz
-    run-<n>/spool/spool_e<seq>.npz    process backend: full-snapshot spool
-                                      (deleted at the next fence)
+    run-<n>/spool/spool_e<seq>.npz    pipe spool fallback (deleted at the
+                                      next fence; shm mode writes nothing)
 
 Every event carries the global, monotonically increasing ``seq`` assigned at
-submit time; filenames are keyed by it, never by (table, step).
+submit time; filenames are keyed by it, never by (table, step).  The
+backend-parity tests assert byte-identical manifests (modulo timestamps)
+and images across all three transports for identical schedules.
 """
 from __future__ import annotations
 
 import json
 import os
-import shutil
-import tempfile
 import threading
 import time
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core.checkpoint import (AsyncApplier, EmbShardSpec, _leaves,
-                                   _new_run_dir, _read_manifest, _to_numpy,
-                                   _write_current, atomic_json_dump,
-                                   load_trainer_tree, manifest_chain,
-                                   save_trainer_tree, snap_host)
+from repro.core.checkpoint import (EmbShardSpec, _leaves, _new_run_dir,
+                                   _read_manifest, _to_numpy, _write_current,
+                                   atomic_json_dump, load_trainer_tree,
+                                   manifest_chain, snap_host)
+from repro.core.transport import (DRAIN_TIMEOUT_S, TRANSPORT_ALIASES,
+                                  TRANSPORTS, _InlineApplier, _ShardStore,
+                                  fsync_path, make_transport,
+                                  normalize_transport)
 
 LAYOUT = "sharded-v1"
+
+# accepted ``backend=`` names (transports + their legacy aliases)
+BACKENDS = TRANSPORTS + tuple(TRANSPORT_ALIASES)
 
 _FNV_OFFSET = np.uint64(14695981039346656037)
 _FNV_PRIME = np.uint64(1099511628211)
@@ -121,123 +137,6 @@ class ShardSaveError(RuntimeError):
             f"{sorted(self.shard_errors)} failed fail-stop ({names}); "
             f"their saves after the failure were discarded, other shards' "
             f"saves are intact")
-
-
-class _InlineApplier:
-    """Same surface as :class:`AsyncApplier`, applied on the caller thread
-    (sync mode) with the same fail-stop latch semantics."""
-
-    def __init__(self):
-        self._exc: Optional[BaseException] = None
-
-    @property
-    def error(self) -> Optional[BaseException]:
-        return self._exc
-
-    def submit(self, fn, *args, **kw):
-        """Apply inline; raises on the latching call (parity with
-        ``AsyncApplier.submit`` raising once an error is latched) so the
-        router never counts a failed apply as saved."""
-        if self._exc is not None:              # fail-stop after error
-            raise RuntimeError("shard writer failed") from self._exc
-        try:
-            fn(*args, **kw)
-        except BaseException as e:
-            self._exc = e
-            raise RuntimeError("checkpoint apply failed") from e
-
-    def fence(self):
-        if self._exc is not None:
-            raise RuntimeError("checkpoint apply failed") from self._exc
-
-    def close(self):
-        pass
-
-
-class _ShardStore:
-    """Image + disk persistence for one shard's row ranges.
-
-    ``apply_*`` methods run on the shard's (single) applier thread — or
-    inside the shard's writer process for the process backend; the
-    completed-event list is only read by the coordinator after that queue
-    has been drained, so no locking is needed.
-    """
-
-    def __init__(self, shard: int, spec: EmbShardSpec, tables, accs,
-                 directory: Optional[str] = None, sliced: bool = False):
-        self.shard = shard
-        self.spec = spec
-        self.ranges = [spec.shard_range(t, shard)
-                       for t in range(len(spec.table_sizes))]
-        if sliced:
-            # ``tables``/``accs`` are already this shard's row slices (the
-            # writer-process worker is seeded with only its own rows)
-            self.image_tables = [np.array(np.asarray(t)) for t in tables]
-            self.image_accs = [np.array(np.asarray(a)) for a in accs]
-        else:
-            self.image_tables = [np.array(np.asarray(t)[lo:hi])
-                                 for t, (lo, hi) in zip(tables, self.ranges)]
-            self.image_accs = [np.array(np.asarray(a)[lo:hi])
-                               for a, (lo, hi) in zip(accs, self.ranges)]
-        self.trainer_image = None              # populated on shard 0 only
-        self.directory = directory
-        self.bytes_written = 0
-        self.save_events = 0
-        self.applied: List[dict] = []          # completed events, in order
-        if directory:
-            os.makedirs(directory, exist_ok=True)
-
-    def _record(self, ev):
-        ev["shard"] = self.shard
-        ev["time"] = time.time()
-        self.bytes_written += ev["bytes"]
-        self.save_events += 1
-        self.applied.append(ev)
-
-    def apply_full(self, tables, accs, step: int, seq: int):
-        """``tables``/``accs`` are immutable full-table snapshots shared
-        with the other shards' workers (read-only); slice out our ranges."""
-        nbytes = 0
-        for t, (lo, hi) in enumerate(self.ranges):
-            self.image_tables[t][...] = tables[t][lo:hi]
-            self.image_accs[t][...] = accs[t][lo:hi]
-            nbytes += self.image_tables[t].nbytes + self.image_accs[t].nbytes
-        if self.directory:
-            arrs = {}
-            for t in range(len(self.image_tables)):
-                arrs[f"table_{t}"] = self.image_tables[t]
-                arrs[f"acc_{t}"] = self.image_accs[t]
-            np.savez_compressed(
-                os.path.join(self.directory, f"full_e{seq}.npz"), **arrs)
-        self._record({"kind": "full", "step": step, "seq": seq,
-                      "bytes": nbytes})
-
-    def apply_rows(self, table: int, rows: np.ndarray, values: np.ndarray,
-                   acc_values: np.ndarray, step: int, seq: int):
-        """``rows`` are global ids, already routed to (and owned by) us."""
-        lo, _ = self.ranges[table]
-        local = rows - lo
-        self.image_tables[table][local] = values
-        self.image_accs[table][local] = acc_values
-        nbytes = values.nbytes + acc_values.nbytes + rows.nbytes
-        fname = None
-        if self.directory:
-            fname = f"partial_t{table}_e{seq}.npz"
-            np.savez_compressed(os.path.join(self.directory, fname),
-                                rows=rows, values=values, accs=acc_values,
-                                table=table, step=step)
-        self._record({"kind": "partial", "table": table, "step": step,
-                      "seq": seq, "bytes": nbytes, "file": fname})
-
-    def apply_trainer(self, tree, step: int, seq: int):
-        self.trainer_image = tree
-        nbytes = sum(np.asarray(a).nbytes for a in _leaves(tree))
-        fname = None
-        if self.directory:
-            fname = f"trainer_e{seq}.npz"
-            save_trainer_tree(os.path.join(self.directory, fname), tree)
-        self._record({"kind": "trainer", "step": step, "seq": seq,
-                      "bytes": nbytes, "file": fname})
 
 
 def _stamped_events(chain) -> List[Tuple[str, dict]]:
@@ -285,9 +184,6 @@ def _replay_shard(store: _ShardStore, j: int,
             store.image_accs[t][local] = z["accs"]
 
 
-BACKENDS = ("thread", "process")
-
-
 class ShardedCheckpointWriter:
     """One checkpoint writer + directory per Emb-PS shard, one coordinator.
 
@@ -296,45 +192,65 @@ class ShardedCheckpointWriter:
     surface (``restore_shards``, ``restore_all``, ``bytes_written``,
     ``save_events``, assembled ``image_tables`` / ``image_accs`` views).
 
-    ``backend="thread"`` (default) keeps every shard's applier in-process;
-    ``backend="process"`` isolates each behind an OS process boundary (see
-    ``repro.core.writer_rpc``) so writer crashes are survivable — the
-    crash-injection suite SIGKILLs workers mid-save and recovery must still
-    land exactly on the last stamped cycle.
+    The writer fleet sits behind a transport (``backend=`` one of
+    ``inproc`` / ``pipe`` / ``socket``, legacy aliases ``thread`` /
+    ``process``); the coordinator's routing, fence, restore and
+    re-admission logic is transport-agnostic.  The crash-injection suite
+    SIGKILLs pipe workers and socket servers mid-save and recovery must
+    still land exactly on the last stamped cycle.
     """
 
     def __init__(self, tables, accs, spec: EmbShardSpec, trainer_state=None,
                  directory: Optional[str] = None, async_save: bool = True,
                  delta_saves: bool = True, max_inflight: int = 2,
                  backend: str = "thread",
-                 drain_timeout: Optional[float] = None):
+                 drain_timeout: Optional[float] = None,
+                 snapshot: Optional[str] = None,
+                 addresses: Optional[Sequence] = None,
+                 fsync_payloads: bool = True,
+                 heartbeat_interval: Optional[float] = None,
+                 readmit_backoff: float = 0.0,
+                 readmit_backoff_max: float = 60.0,
+                 transport_options: Optional[dict] = None):
         assert backend in BACKENDS, backend
         self.spec = spec
         self.n_shards = spec.n_shards
-        self.backend = backend
-        # the process backend is inherently asynchronous (saves return
-        # after the pipe send; durability comes from fence()) — normalize
-        # the flag so callers and report() see the true semantics
-        self.async_save = True if backend == "process" else async_save
+        self.backend = normalize_transport(backend)
+        # remote transports are inherently asynchronous (saves return
+        # after the submit hand-off; durability comes from fence()) —
+        # normalize the flag so callers and report() see the true semantics
+        self.async_save = True if self.backend != "inproc" else async_save
         self.delta_saves = delta_saves
+        self.fsync_payloads = fsync_payloads
         host_t = [np.asarray(t) for t in tables]
         host_a = [np.asarray(a) for a in accs]
         self.ranges = [[spec.shard_range(t, j)
                         for t in range(len(spec.table_sizes))]
                        for j in range(self.n_shards)]
-        self.failed: Dict[int, BaseException] = {}   # poisoned shards
+        # poisoned shards: owned by the trainer thread (every mutation and
+        # iteration happens there; the heartbeat thread only latches
+        # endpoints and does point lookups)
+        self.failed: Dict[int, BaseException] = {}
         self.shard_readmissions = 0
         self._closed = False
         self._seq = 0
         self._seq_lock = threading.Lock()
         self.cycle = 0
         self._drain_token = 0
+        self._drain_timeout = drain_timeout or DRAIN_TIMEOUT_S
         self.dropped_bytes = 0          # routed to a poisoned shard
         self.delta_rows_skipped = 0
         self.delta_bytes_skipped = 0
         self._hashes = ([row_hash(t, a) for t, a in zip(host_t, host_a)]
                         if delta_saves else None)
         self._watermarks = [0] * self.n_shards   # durable seq per shard
+
+        # ---- readmission back-off (crash-loop throttle) ----
+        self.readmit_backoff = readmit_backoff        # base secs; 0 = off
+        self.readmit_backoff_max = readmit_backoff_max
+        self._readmit_attempts = [0] * self.n_shards
+        self._readmit_not_before = [0.0] * self.n_shards
+        self._last_readmit_t = [0.0] * self.n_shards
 
         # ---- run-versioned directory layout ----
         self.root_dir = directory
@@ -355,59 +271,77 @@ class ShardedCheckpointWriter:
                               "events": []}
         self.directory = self.run_dir   # this run's files live here
 
-        # ---- per-shard writers ----
+        # ---- per-shard seed slices ----
+        # pristine initial slices per shard: the disk-replay base (a row
+        # never covered by a stamped event restores to its initial value)
+        # and every transport's spawn seed.  Never mutated.
+        trainer_np = _to_numpy(trainer_state)
+        self._init_slices = [
+            ([np.array(host_t[t][lo:hi])
+              for t, (lo, hi) in enumerate(self.ranges[j])],
+             [np.array(host_a[t][lo:hi])
+              for t, (lo, hi) in enumerate(self.ranges[j])],
+             trainer_np if j == 0 else None)
+            for j in range(self.n_shards)]
+        # last-known image per shard: the restore fallback when a remote
+        # worker is dead and there is no disk to replay; starts as the
+        # (shared, read-only) init slices, replaced wholesale by every
+        # successful fetch
+        self._img_cache = list(self._init_slices)
+
+        # ---- the transport + its endpoints ----
         shard_dirs = [os.path.join(self.run_dir, f"shard_{j}")
                       if self.run_dir else None
                       for j in range(self.n_shards)]
-        trainer_np = _to_numpy(trainer_state)
-        if backend == "process":
-            from repro.core.writer_rpc import (DRAIN_TIMEOUT_S,
-                                               ProcessShardWriter)
-            self._drain_timeout = drain_timeout or DRAIN_TIMEOUT_S
-            self._spool_dir = (os.path.join(self.run_dir, "spool")
-                               if self.run_dir
-                               else tempfile.mkdtemp(prefix="cpr-spool-"))
-            self._spool_owned = self.run_dir is None
-            self._spool_files: List[str] = []
-            # pristine initial slices per shard: the disk-replay base (a
-            # row never covered by a stamped event restores to its initial
-            # value) and the spawn seed.  Never mutated.
-            self._init_slices = [
-                ([np.array(host_t[t][lo:hi])
-                  for t, (lo, hi) in enumerate(self.ranges[j])],
-                 [np.array(host_a[t][lo:hi])
-                  for t, (lo, hi) in enumerate(self.ranges[j])],
-                 trainer_np if j == 0 else None)
-                for j in range(self.n_shards)]
-            # last-known image per shard: the restore fallback when a
-            # worker is dead and there is no disk to replay; starts as the
-            # (shared, read-only) init slices, replaced wholesale by every
-            # successful fetch
-            self._img_cache = list(self._init_slices)
-            self.stores = None
-            self.appliers = None
-            self.procs = [
-                ProcessShardWriter(j, spec, self._img_cache[j][0],
-                                   self._img_cache[j][1],
-                                   trainer_image=(trainer_np if j == 0
-                                                  else None),
-                                   directory=shard_dirs[j])
-                for j in range(self.n_shards)]
+        opts = dict(transport_options or {})
+        opts.setdefault("fsync_payloads", fsync_payloads)
+        if self.backend == "inproc":
+            opts.setdefault("async_save", self.async_save)
+            opts.setdefault("max_inflight", max_inflight)
+        elif self.backend == "pipe":
+            if snapshot is not None:
+                opts.setdefault("snapshot", snapshot)
+            if self.run_dir:            # else the transport mkdtemps its
+                opts.setdefault("spool_dir",      # own dir and removes it
+                                os.path.join(self.run_dir, "spool"))
         else:
-            self._drain_timeout = drain_timeout
-            self.procs = None
-            self.stores = [
-                _ShardStore(j, spec, host_t, host_a, directory=shard_dirs[j])
-                for j in range(self.n_shards)]
-            self.stores[0].trainer_image = trainer_np
-            self._max_inflight = max_inflight
-            self.appliers = [self._new_applier(j)
-                             for j in range(self.n_shards)]
+            if addresses is not None:
+                opts.setdefault("addresses", list(addresses))
+        self.transport = make_transport(self.backend, spec,
+                                        self._init_slices, shard_dirs,
+                                        **opts)
+        self.endpoints = self.transport.endpoints
 
-    def _new_applier(self, j: int):
-        return (AsyncApplier(name=f"cpr-shard-ckpt-{j}",
-                             max_inflight=self._max_inflight)
-                if self.async_save else _InlineApplier())
+        # ---- heartbeat monitor (proactive dead-writer detection) ----
+        self.heartbeat_interval = heartbeat_interval
+        self._hb_stop = threading.Event()
+        self._hb_thread: Optional[threading.Thread] = None
+        if heartbeat_interval:
+            self._hb_thread = threading.Thread(
+                target=self._heartbeat_loop, name="cpr-fleet-heartbeat",
+                daemon=True)
+            self._hb_thread.start()
+
+    # --------------------------------------------- legacy backend surface --
+    @property
+    def stores(self) -> Optional[List[_ShardStore]]:
+        """Inproc transport: the per-shard stores (tests poke them)."""
+        if self.transport.is_remote:
+            return None
+        return [ep.store for ep in self.endpoints]
+
+    @property
+    def appliers(self):
+        """Inproc transport: the per-shard applier threads."""
+        if self.transport.is_remote:
+            return None
+        return [ep.applier for ep in self.endpoints]
+
+    @property
+    def procs(self):
+        """Remote transports: the per-shard endpoints (``.pid`` is the
+        writer/server process for crash drills)."""
+        return self.endpoints if self.transport.is_remote else None
 
     # --------------------------------------------------------- accounting --
     @property
@@ -420,15 +354,11 @@ class ShardedCheckpointWriter:
 
     @property
     def shard_bytes(self) -> List[int]:
-        if self.backend == "process":
-            return [p.bytes_written for p in self.procs]
-        return [s.bytes_written for s in self.stores]
+        return [ep.bytes_written for ep in self.endpoints]
 
     @property
     def shard_events(self) -> List[int]:
-        if self.backend == "process":
-            return [p.save_events for p in self.procs]
-        return [s.save_events for s in self.stores]
+        return [ep.save_events for ep in self.endpoints]
 
     @property
     def image_tables(self) -> List[np.ndarray]:
@@ -441,25 +371,25 @@ class ShardedCheckpointWriter:
 
     @property
     def trainer_image(self):
-        if self.backend == "process":
-            return self._shard_images(0)[2]
-        return self.stores[0].trainer_image
+        return self._shard_images(0)[2]
 
     # ------------------------------------------------------- image access --
     def _shard_images(self, j: int):
         """(table_slices, acc_slices, trainer_image) for shard ``j``'s
-        current image.  Process backend: fetched from the live worker; for
-        a dead/poisoned worker the last-good image is replayed from the
-        stamped events on disk, falling back to the last fetched image."""
-        if self.backend != "process":
-            s = self.stores[j]
-            return s.image_tables, s.image_accs, s.trainer_image
-        if j not in self.failed and self.procs[j].error is None:
-            got = self.procs[j].fetch_image(self._drain_timeout)
+        current image.  Healthy endpoint: fetched live.  Dead/poisoned
+        remote endpoint: the last-good image is replayed from the stamped
+        events on disk, falling back to the last fetched image.  The inproc
+        stores live in this process, so their image survives poisoning
+        (frozen at the last successful apply)."""
+        ep = self.endpoints[j]
+        if (j not in self.failed and ep.error is None) or \
+                ep.image_survives_failure:
+            got = ep.fetch_image(self._drain_timeout)
             if got is not None:
-                self._img_cache[j] = got
+                if not ep.image_survives_failure:
+                    self._img_cache[j] = got
                 return got
-            self.failed[j] = self.procs[j].error
+            self.failed[j] = ep.error
         if self.root_dir is not None:
             disk = self._replay_shard_from_disk(j)
             if disk is not None:
@@ -496,8 +426,8 @@ class ShardedCheckpointWriter:
     def _assemble(self, images=None):
         """Assemble full tables from per-shard image slices.  ``images``
         lets a caller that also needs the trainer replica pay for one
-        per-shard fetch instead of several (process backend: each fetch
-        ships the shard's whole image over the pipe)."""
+        per-shard fetch instead of several (remote transports: each fetch
+        ships the shard's whole image over the wire)."""
         tabs, accs = [], []
         if images is None:
             images = [self._shard_images(j) for j in range(self.n_shards)]
@@ -520,17 +450,13 @@ class ShardedCheckpointWriter:
             self._seq += 1
             return self._seq
 
-    def _applier_error(self, j: int) -> Optional[BaseException]:
-        return (self.procs[j].error if self.backend == "process"
-                else self.appliers[j].error)
-
     def _healthy(self, j: int) -> bool:
         """Poisoned-shard check at routing time (fail-stop isolation): a
-        latched worker error — or a dead writer process — drops this shard
-        out of the fleet; everyone else keeps saving."""
+        latched worker error — or a dead writer process / lost connection —
+        drops this shard out of the fleet; everyone else keeps saving."""
         if j in self.failed:
             return False
-        err = self._applier_error(j)
+        err = self.endpoints[j].error
         if err is not None:
             self.failed[j] = err
             return False
@@ -543,54 +469,33 @@ class ShardedCheckpointWriter:
         recorded, never a crash."""
         if not self._healthy(j):
             return False
+        ep = self.endpoints[j]
         try:
-            if self.backend == "process":
-                p = self.procs[j]
-                {"full": p.submit_full, "rows": p.submit_rows,
-                 "trainer": p.submit_trainer}[kind](*payload)
-            else:
-                s = self.stores[j]
-                fn = {"full": s.apply_full, "rows": s.apply_rows,
-                      "trainer": s.apply_trainer}[kind]
-                self.appliers[j].submit(fn, *payload)
+            {"full": ep.submit_full, "rows": ep.submit_rows,
+             "trainer": ep.submit_trainer}[kind](*payload)
             return True
         except RuntimeError as e:
-            self.failed[j] = self._applier_error(j) or e
+            self.failed[j] = ep.error or e
             return False
 
     _snap = staticmethod(snap_host)
 
-    def _full_payload(self, j: int, snap_t, snap_a, step: int, seq: int,
-                      spool: Optional[str]):
-        if self.backend == "process":
-            return (spool, step, seq)
-        return (snap_t, snap_a, step, seq)
-
-    def _spool(self, seq: int, snap_t, snap_a) -> Optional[str]:
-        if self.backend != "process":
-            return None
-        from repro.core.writer_rpc import spool_full_snapshot
-        path = spool_full_snapshot(self._spool_dir, seq, snap_t, snap_a)
-        self._spool_files.append(path)
-        return path
-
     def save_full(self, tables, accs, trainer_state=None, step: int = 0):
-        """One immutable host snapshot per table, shared by every shard's
-        worker (each slices out its own ranges off the critical path);
-        returns enqueued snapshot bytes (poisoned shards' slices are
+        """One immutable host snapshot per table, shipped fleet-wide by the
+        transport (each shard slices out its own ranges off the critical
+        path); returns enqueued snapshot bytes (poisoned shards' slices are
         dropped, not counted)."""
         seq = self._next_seq()
         snap_t = [self._snap(t) for t in tables]
         snap_a = [self._snap(a) for a in accs]
         full_h = ([row_hash(t, a) for t, a in zip(snap_t, snap_a)]
                   if self._hashes is not None else None)
-        spool = self._spool(seq, snap_t, snap_a)
+        ref = self.transport.make_snapshot(seq, snap_t, snap_a)
         nbytes = 0
         for j in range(self.n_shards):
             part = sum(snap_t[t][lo:hi].nbytes + snap_a[t][lo:hi].nbytes
                        for t, (lo, hi) in enumerate(self.ranges[j]))
-            if not self._dispatch(j, "full", self._full_payload(
-                    j, snap_t, snap_a, step, seq, spool)):
+            if not self._dispatch(j, "full", (ref, step, seq)):
                 self.dropped_bytes += part
                 continue
             nbytes += part
@@ -655,60 +560,106 @@ class ShardedCheckpointWriter:
                 self._hashes[table][rows[m]] = h[m]
         return nbytes
 
+    # ----------------------------------------------------------- health ----
+    def _heartbeat_loop(self):
+        """Monitor thread: probe endpoints so a writer that died between
+        saves is latched proactively.  Deliberately latches the ENDPOINT
+        only — ``self.failed`` is owned by the trainer thread (fences
+        iterate it unlocked), so the fold into the poisoned set happens at
+        the next routing/fence/``check_health`` call.  A latched endpoint
+        is already out of the fleet for every practical purpose: submits
+        to it drop immediately."""
+        while not self._hb_stop.wait(self.heartbeat_interval):
+            if self._closed:
+                return
+            for j, ep in enumerate(self.endpoints):
+                if j not in self.failed and ep.error is None:
+                    try:
+                        ep.probe()
+                    except Exception:
+                        pass            # a probe failure is not a crash
+
+    def check_health(self) -> List[int]:
+        """One probe sweep on the caller's (trainer) thread: latch dead
+        endpoints and fold them into the poisoned set.  Returns the newly
+        poisoned shard ids."""
+        newly = []
+        for j, ep in enumerate(self.endpoints):
+            if j in self.failed:
+                continue
+            ep.probe()
+            if ep.error is not None:
+                self.failed[j] = ep.error
+                newly.append(j)
+        return newly
+
     # -------------------------------------------------- coordinator fence --
     def _drain(self) -> List[dict]:
         """Phase 1 of the fence: the DRAIN barrier.
 
-        Thread backend: join every healthy shard's queue (its applies are
-        then in the shard image and, in disk mode, persisted).  Process
-        backend: *broadcast* the DRAIN marker to every healthy worker
-        first, then collect each one's ``drained`` ack — workers drain
-        concurrently, and the ack's watermark confirms apply **and**
-        persist up to that seq.  Either way a shard that cannot ack is
-        poisoned here, and the acked events of every shard (including ones
-        that died after acking) are returned for stamping."""
-        if self.backend == "process":
-            self._drain_token += 1
-            token = self._drain_token
-            pending = []
-            for j, p in enumerate(self.procs):
-                if j in self.failed:
-                    continue
-                if p.send_drain(token):
-                    pending.append(j)
-                else:
-                    self.failed[j] = p.error
-            for j in pending:
-                if not self.procs[j].wait_drained(token,
-                                                  self._drain_timeout):
-                    self.failed[j] = self.procs[j].error
-            drained: List[dict] = []
-            for j, p in enumerate(self.procs):
-                # a dead/poisoned worker may have acked durable applies the
-                # parent never pumped — fold them so they are stamped, just
-                # as the thread backend stamps a poisoned store's completed
-                # applies
-                p.pump()
-                evs = p.collect_applied()
-                drained.extend(evs)
-                for e in evs:
-                    self._watermarks[j] = max(self._watermarks[j], e["seq"])
-                self._watermarks[j] = max(self._watermarks[j], p.durable_seq)
-            return drained
-        for j, applier in enumerate(self.appliers):
+        *Broadcast* the DRAIN marker to every healthy shard first, then
+        collect each one's ``drained`` ack — shards drain concurrently, and
+        the ack's watermark confirms apply, persist **and payload fsync**
+        up to that seq.  (Inproc endpoints implement the ack as a queue
+        join + batched fsync on the caller thread.)  A shard that cannot
+        ack is poisoned here, and the acked events of every shard
+        (including ones that died after acking) are returned for stamping.
+        """
+        self._drain_token += 1
+        token = self._drain_token
+        pending = []
+        for j, ep in enumerate(self.endpoints):
             if j in self.failed:
                 continue
-            try:
-                applier.fence()
-            except RuntimeError:
-                self.failed[j] = applier.error
-        drained = []
-        for j, s in enumerate(self.stores):
-            drained.extend(s.applied)
-            for e in s.applied:
+            if ep.begin_drain(token):
+                pending.append(j)
+            else:
+                self.failed[j] = ep.error
+        for j in pending:
+            if not self.endpoints[j].finish_drain(token,
+                                                  self._drain_timeout):
+                self.failed[j] = self.endpoints[j].error
+        drained: List[dict] = []
+        for j, ep in enumerate(self.endpoints):
+            # a dead/poisoned worker may have acked durable applies the
+            # coordinator never pumped — fold them so they are stamped,
+            # whatever the transport
+            ep.pump()
+            evs = ep.collect_applied()
+            drained.extend(evs)
+            for e in evs:
                 self._watermarks[j] = max(self._watermarks[j], e["seq"])
-            s.applied = []
+            self._watermarks[j] = max(self._watermarks[j], ep.durable_seq)
         return drained
+
+    def _fsync_failed_shards_payloads(self, drained: List[dict]):
+        """A poisoned shard never answered this DRAIN, so its acked events'
+        payloads were persisted but not fsynced by the worker.  fsync them
+        from the coordinator before they are stamped — the stamp must never
+        cover a payload the page cache could still lose.
+
+        Scope: this backstop needs the shard's directory to be visible on
+        the coordinator's filesystem — always true for inproc/pipe, and
+        for socket only with local/shared storage.  A remote socket writer
+        on a private disk that dies between its last ack and the DRAIN ack
+        leaves those stamped events crash-true but not power-loss-true
+        (fsync_path no-ops on the nonexistent local path); see
+        docs/recovery.md."""
+        if not (self.run_dir and self.fsync_payloads and self.failed):
+            return
+        dirs = set()
+        for e in drained:
+            j = e.get("shard")
+            if j not in self.failed:
+                continue
+            fname = e.get("file") or (f"full_e{e['seq']}.npz"
+                                      if e["kind"] == "full" else None)
+            if fname:
+                d = os.path.join(self.run_dir, f"shard_{j}")
+                fsync_path(os.path.join(d, fname))
+                dirs.add(d)
+        for d in dirs:
+            fsync_path(d)
 
     def fence(self, strict: bool = True):
         """Two-phase coordinator fence (the DRAIN/STAMP barrier).
@@ -734,6 +685,7 @@ class ShardedCheckpointWriter:
         drained = self._drain()
         if self.run_dir is not None:
             drained.sort(key=lambda e: (e["seq"], e["shard"]))
+            self._fsync_failed_shards_payloads(drained)
             self._manifest["events"].extend(drained)
             self.cycle += 1
             self._manifest["events"].append({
@@ -742,27 +694,25 @@ class ShardedCheckpointWriter:
                               for j in range(self.n_shards)},
                 "failed_shards": sorted(self.failed)})
             # atomic durable rewrite (fsync data + dir before/after the
-            # rename): the stamp itself survives power loss.  NOTE: the
-            # stamped events' .npz payloads are NOT fsynced by the workers
-            # (that would serialize every persist on disk flushes), so the
-            # full power-loss story — fsync payloads before DRAIN acks —
-            # is a ROADMAP item; process/node *crash* durability, which
-            # the crash suite drives, is complete
+            # rename).  Together with the workers' payload fsync at DRAIN
+            # (and _fsync_failed_shards_payloads for shards that died with
+            # acked-but-unsynced events), the stamp and everything it
+            # references survive power loss, not just process crashes.
             atomic_json_dump(os.path.join(self.run_dir, "manifest.json"),
                              self._manifest)
             if not self._current_advanced:
                 # only now may recovery prefer this run over its parent
                 _write_current(self.root_dir, self._manifest["run"])
                 self._current_advanced = True
-        if self.backend == "process":
-            # every healthy worker acked past these spools; poisoned ones
-            # will never read them (their queued work was dropped)
-            for p in self._spool_files:
-                try:
-                    os.remove(p)
-                except OSError:
-                    pass
-            self._spool_files = []
+        # every healthy shard acked past the pending save_full snapshots;
+        # poisoned ones will never read them (their queued work was
+        # dropped) — release the shm segments / spool files
+        self.transport.release_pending()
+        # a shard that stayed healthy through a whole stamped cycle is
+        # stable again: its crash-loop back-off clock starts over
+        for j in range(self.n_shards):
+            if j not in self.failed:
+                self._readmit_attempts[j] = 0
         if strict and self.failed:
             raise ShardSaveError(self.failed)
 
@@ -771,76 +721,104 @@ class ShardedCheckpointWriter:
         (idempotent)."""
         if self._closed:
             return
+        self._hb_stop.set()
+        if self._hb_thread is not None:
+            self._hb_thread.join(timeout=2.0)
         try:
             self.fence(strict=False)
         except Exception:
             pass
         self._closed = True
-        if self.backend == "process":
-            for p in self.procs:
-                p.close()
-            if self._spool_owned:
-                shutil.rmtree(self._spool_dir, ignore_errors=True)
-        else:
-            for applier in self.appliers:
-                applier.close()
+        self.transport.close()
 
     # ------------------------------------------------------- re-admission --
     def kill_shard(self, j: int):
         """Failure drill: hard-kill shard ``j``'s writer (SIGKILL for the
-        process backend, a latched poison for the thread backend).  The
+        pipe/socket transports, a latched poison for inproc).  The
         crash-injection suite and operator drills drive this; recovery must
         behave exactly as for a real writer death."""
-        if self.backend == "process":
-            self.procs[j].kill()
-            self.failed[j] = self.procs[j].error
-            return
-        err = RuntimeError(f"shard {j} writer killed (drill)")
-        applier = self.appliers[j]
-        applier._exc = err          # same latch a worker error sets
-        self.failed[j] = err
+        self.endpoints[j].kill()
+        self.failed[j] = self.endpoints[j].error
 
     def readmit(self, tables, accs, trainer_state=None, step: int = 0):
-        """Re-admit every poisoned shard into the fleet (call at a cycle
+        """Re-admit poisoned shards into the fleet (call at a cycle
         boundary, after ``fence``).
 
-        Per poisoned shard: (1) the writer is respawned — a fresh process
-        seeded from the shard's last-good image (disk replay of stamped
-        events when a directory exists), or a fresh applier thread over the
-        surviving store; (2) a **fresh full of the shard's current rows**
-        is enqueued, covering every row the shard missed while poisoned,
-        and the delta hashes for its ranges are re-based on that snapshot;
-        (3) the shard leaves ``failed`` and resumes normal routing.  The
-        reseed full is stamped — and the shard's recovery point caught up —
-        at the *next* fence.  Returns the re-admitted shard ids.
+        Per poisoned shard: (1) the writer is respawned — a fresh process /
+        connection seeded from the shard's last-good image (disk replay of
+        stamped events when a directory exists), or a fresh applier thread
+        over the surviving store; (2) a **fresh full of the shard's current
+        rows** is enqueued, covering every row the shard missed while
+        poisoned, and the delta hashes for its ranges are re-based on that
+        snapshot; (3) the shard leaves ``failed`` and resumes normal
+        routing.  The reseed full is stamped — and the shard's recovery
+        point caught up — at the *next* fence.
+
+        Respawn failure is **atomic**: the shard stays poisoned (latched
+        with the respawn error) and is retried at a later boundary — it is
+        never left half-registered.  With ``readmit_backoff`` a shard's
+        consecutive re-admissions are throttled exponentially (base
+        doubling per attempt, capped at ``readmit_backoff_max``; the
+        counter resets once the shard stays healthy for a stamped cycle) so
+        a crash-looping shard cannot thrash the fleet.  Returns the
+        successfully re-admitted shard ids.
         """
         if not self.failed:
             return []
-        readmitted = sorted(self.failed)
+        candidates = sorted(self.failed)
         seq = self._next_seq()
         snap_t = [self._snap(t) for t in tables]
         snap_a = [self._snap(a) for a in accs]
-        spool = None
-        for j in readmitted:
-            if self.backend == "process":
-                seed_t, seed_a, seed_tr = self._shard_images(j)
-                self.procs[j].respawn(seed_t, seed_a, seed_tr)
-                if spool is None:
-                    spool = self._spool(seq, snap_t, snap_a)
-            else:
-                self.appliers[j].close()
-                self.appliers[j] = self._new_applier(j)
+        ref = None
+        readmitted = []
+        now = time.monotonic()
+        for j in candidates:
+            if self.readmit_backoff > 0 and now < self._readmit_not_before[j]:
+                continue                       # still backing off
+            ep = self.endpoints[j]
+            self._note_readmit_attempt(j, now)
+            try:
+                if self.transport.is_remote:
+                    seed_t, seed_a, seed_tr = self._shard_images(j)
+                    ep.respawn(seed_t, seed_a, seed_tr)
+                else:
+                    ep.respawn(None, None)
+            except BaseException as e:
+                # atomic failure: the endpoint (re)latched itself; the
+                # shard stays poisoned and retries at a later boundary
+                ep.poison(e)
+                self.failed[j] = ep.error or e
+                continue
             del self.failed[j]
-            if self._dispatch(j, "full", self._full_payload(
-                    j, snap_t, snap_a, step, seq, spool)):
+            if ref is None:
+                ref = self.transport.make_snapshot(seq, snap_t, snap_a)
+            if self._dispatch(j, "full", (ref, step, seq)):
                 if self._hashes is not None:
                     for t, (lo, hi) in enumerate(self.ranges[j]):
                         self._hashes[t][lo:hi] = row_hash(snap_t[t][lo:hi],
                                                           snap_a[t][lo:hi])
                 if j == 0 and trainer_state is not None:
                     self.save_trainer(trainer_state, step=step)
+            readmitted.append(j)
         self.shard_readmissions += len(readmitted)
         return readmitted
+
+    def _note_readmit_attempt(self, j: int, now: float):
+        """Crash-loop throttle bookkeeping: one attempt (successful or not)
+        schedules the shard's next eligibility exponentially further out —
+        unless the shard had been stable for ``readmit_backoff_max``, which
+        starts the sequence over."""
+        if self.readmit_backoff <= 0:
+            return
+        if (self._last_readmit_t[j] and
+                now - self._last_readmit_t[j] > self.readmit_backoff_max):
+            self._readmit_attempts[j] = 0
+        self._readmit_attempts[j] += 1
+        delay = min(self.readmit_backoff *
+                    (2 ** (self._readmit_attempts[j] - 1)),
+                    self.readmit_backoff_max)
+        self._readmit_not_before[j] = now + delay
+        self._last_readmit_t[j] = now
 
     # ----------------------------------------------------------- restores --
     def restore_shards(self, tables, accs, shard_ids: Sequence[int]):
@@ -886,7 +864,7 @@ class ShardedCheckpointWriter:
                 f"(no CURRENT pointer or manifest.json)")
         events = _stamped_events(chain)
         out = cls(tables, accs, spec, trainer_state=None, directory=None,
-                  async_save=False, delta_saves=False)
+                  async_save=False, delta_saves=False, backend="inproc")
         for j, store in enumerate(out.stores):
             _replay_shard(store, j, events)
         tr_evs = [(d, e) for d, e in events if e["kind"] == "trainer"]

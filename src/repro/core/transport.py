@@ -1,0 +1,1572 @@
+"""Pluggable shard-transport layer for the checkpoint writer fleet.
+
+The coordinator (``repro.core.sharded_checkpoint.ShardedCheckpointWriter``)
+used to special-case two writer backends — an in-process applier thread and
+a ``multiprocessing`` pipe worker — in every submit/fence/restore path.
+This module turns the writer-fleet communication into an abstraction so the
+same DRAIN/STAMP protocol runs over any carrier, per the Check-N-Run /
+Chameleon observation that fault-tolerance *policy* should be selectable
+per deployment without rewriting the engine:
+
+  * :class:`ShardEndpoint` — the per-shard handle the coordinator routes
+    through: ``submit_full`` / ``submit_rows`` / ``submit_trainer``,
+    the two-phase ``begin_drain`` / ``finish_drain`` barrier with durable
+    seq watermarks, ``fetch_image`` for restores, ``probe`` for heartbeat
+    liveness, and the ``kill`` / ``respawn`` re-admission lifecycle.
+    Failures latch fail-stop exactly as before: one bad endpoint poisons
+    one shard, never the trainer.
+
+  * :class:`ShardTransport` — the fleet-level factory: it owns the
+    endpoints and the **snapshot shipping strategy** for ``save_full``
+    (one shared payload per save event, sliced per shard off the critical
+    path).  Three implementations:
+
+      - :class:`InprocTransport` (``backend="inproc"``, alias ``thread``):
+        each shard's :class:`_ShardStore` runs under an in-process
+        ``AsyncApplier`` thread (or inline in sync mode); snapshots are
+        shared host arrays.
+      - :class:`PipeTransport` (``backend="pipe"``, alias ``process``):
+        each shard's store runs the same apply loop behind a spawned OS
+        process fed over a duplex pipe.  ``save_full`` snapshots ship
+        **zero-copy via ``multiprocessing.shared_memory``** — the one
+        remaining per-save disk write (the uncompressed spool ``.npz``)
+        is off the save-event critical path; the spool file remains as an
+        explicit fallback (``snapshot="spool"``) and for hosts without a
+        usable ``/dev/shm``.
+      - :class:`SocketTransport` (``backend="socket"``): the same
+        length-prefixed message protocol over TCP, so shard writers on
+        *other hosts* join the DRAIN/STAMP fence.  Workers are hosted by
+        the ``repro.launch.shard_server`` entrypoint (or auto-spawned
+        locally when no addresses are given).  Submits go through a
+        bounded outbound queue + sender thread so a partitioned writer
+        can only poison its own shard — it can never stall the trainer.
+
+Wire protocol (logical messages; the pipe carries them as pickled tuples,
+the socket as length-prefixed binary frames via :func:`pack_msg`):
+
+  coordinator -> worker                    worker -> coordinator
+  ("spawn", shard, table_sizes, n_shards,  ("ack",     seq, event_dict)
+   directory, seed_t, seed_a, seed_tr,     ("error",   seq, err_string)
+   fsync)                [socket only]     ("drained", token, watermark, err)
+  ("full",    seq, step, payload)          ("image",   tables, accs, trainer)
+  ("rows",    seq, step, t, rows, v, a)    ("pong",    token)
+  ("trainer", seq, step, tree)
+  ("drain",   token)
+  ("image",)
+  ("ping",    token)
+  ("close",)
+
+``save_full`` payloads are one of ``("spool", path)``, ``("shm", name,
+meta)`` or ``("slices", tables, accs)`` — every worker applies them through
+the same :class:`_ShardStore`, so manifests and images are byte-identical
+across transports (the backend-parity tests assert it).
+
+Durability: workers batch-fsync their persisted ``.npz`` payloads (file
+data + directory entry) *before* answering DRAIN, so the durable watermark
+the coordinator stamps into the cycle record is power-loss-true, not just
+crash-true.  Replies arrive in command order; after sending DRAIN the
+coordinator simply consumes replies until the matching ``drained`` token.
+"""
+from __future__ import annotations
+
+import os
+import queue
+import socket as _socket
+import struct
+import threading
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.checkpoint import (AsyncApplier, EmbShardSpec, _leaves,
+                                   save_trainer_tree)
+
+# Default seconds the coordinator waits for a shard's DRAIN ack before
+# declaring the writer dead.  Generous: a healthy worker only has bounded
+# queued work, so a miss here means a real wedge or a network partition.
+DRAIN_TIMEOUT_S = 60.0
+# Seconds a socket submit may wait for outbound-queue space before the
+# shard is declared stalled (poisoned).  The queue only fills when the
+# peer stops reading — a partition — so this bounds trainer-side blocking.
+SUBMIT_TIMEOUT_S = 30.0
+# Seconds without ANY inbound reply (pong, ack, drained...) before a
+# probed socket endpoint is latched.  Matches the DRAIN deadline: a worker
+# busy inside one long apply is silent but alive, and must not be
+# heartbeat-poisoned while a fence would still have waited for it.
+HEARTBEAT_TIMEOUT_S = 60.0
+# Outbound submit-queue depth per socket endpoint.
+SUBMIT_QUEUE_DEPTH = 64
+
+TRANSPORTS = ("inproc", "pipe", "socket")
+TRANSPORT_ALIASES = {"thread": "inproc", "process": "pipe"}
+
+
+def normalize_transport(name: str) -> str:
+    """Map legacy backend names (thread/process) onto transport names."""
+    out = TRANSPORT_ALIASES.get(name, name)
+    if out not in TRANSPORTS:
+        raise ValueError(f"unknown transport {name!r} "
+                         f"(expected one of {TRANSPORTS + tuple(TRANSPORT_ALIASES)})")
+    return out
+
+
+class WriterProcError(RuntimeError):
+    """A shard's writer failed: an apply raised inside the worker, the
+    process died (crash, OOM-kill, SIGKILL), or the connection to a remote
+    writer was lost / timed out."""
+
+
+# =========================================================================
+# wire codec: length-prefixed binary frames for the socket transport
+# =========================================================================
+# msgpack-style tagged encoding of the protocol's value universe: None,
+# bool, int, float, str, bytes, list, tuple, dict, numpy ndarray.  No
+# external dependency; arrays travel as raw dtype bytes.
+
+_U32 = struct.Struct(">I")
+_I64 = struct.Struct(">q")
+_F64 = struct.Struct(">d")
+_U64 = struct.Struct(">Q")
+
+
+def _pack_into(o, out: List[bytes]):
+    if o is None:
+        out.append(b"n")
+    elif o is True:
+        out.append(b"T")
+    elif o is False:
+        out.append(b"F")
+    elif isinstance(o, np.ndarray):
+        dt = np.ascontiguousarray(o)
+        ds = dt.dtype.str.encode()
+        out.append(b"a" + _U32.pack(len(ds)) + ds +
+                   _U32.pack(dt.ndim) +
+                   b"".join(_U64.pack(s) for s in dt.shape) +
+                   _U64.pack(dt.nbytes))
+        out.append(dt.tobytes())
+    elif isinstance(o, (np.generic,)):
+        _pack_into(o.item(), out)
+    elif isinstance(o, bool):            # pragma: no cover (caught above)
+        out.append(b"T" if o else b"F")
+    elif isinstance(o, int):
+        out.append(b"i" + _I64.pack(o))
+    elif isinstance(o, float):
+        out.append(b"f" + _F64.pack(o))
+    elif isinstance(o, str):
+        b = o.encode()
+        out.append(b"s" + _U32.pack(len(b)) + b)
+    elif isinstance(o, (bytes, bytearray, memoryview)):
+        b = bytes(o)
+        out.append(b"b" + _U32.pack(len(b)) + b)
+    elif isinstance(o, tuple):
+        out.append(b"t" + _U32.pack(len(o)))
+        for v in o:
+            _pack_into(v, out)
+    elif isinstance(o, list):
+        out.append(b"l" + _U32.pack(len(o)))
+        for v in o:
+            _pack_into(v, out)
+    elif isinstance(o, dict):
+        out.append(b"d" + _U32.pack(len(o)))
+        for k, v in o.items():
+            _pack_into(k, out)
+            _pack_into(v, out)
+    else:
+        raise TypeError(f"cannot encode {type(o).__name__} on the wire")
+
+
+def pack_msg(o) -> bytes:
+    """Encode one protocol message as a self-delimited binary frame body."""
+    out: List[bytes] = []
+    _pack_into(o, out)
+    return b"".join(out)
+
+
+def _unpack_from(buf: memoryview, pos: int):
+    tag = buf[pos:pos + 1].tobytes()
+    pos += 1
+    if tag == b"n":
+        return None, pos
+    if tag == b"T":
+        return True, pos
+    if tag == b"F":
+        return False, pos
+    if tag == b"i":
+        return _I64.unpack_from(buf, pos)[0], pos + 8
+    if tag == b"f":
+        return _F64.unpack_from(buf, pos)[0], pos + 8
+    if tag in (b"s", b"b"):
+        n = _U32.unpack_from(buf, pos)[0]
+        pos += 4
+        raw = buf[pos:pos + n].tobytes()
+        return (raw.decode() if tag == b"s" else raw), pos + n
+    if tag in (b"t", b"l"):
+        n = _U32.unpack_from(buf, pos)[0]
+        pos += 4
+        items = []
+        for _ in range(n):
+            v, pos = _unpack_from(buf, pos)
+            items.append(v)
+        return (tuple(items) if tag == b"t" else items), pos
+    if tag == b"d":
+        n = _U32.unpack_from(buf, pos)[0]
+        pos += 4
+        d = {}
+        for _ in range(n):
+            k, pos = _unpack_from(buf, pos)
+            v, pos = _unpack_from(buf, pos)
+            d[k] = v
+        return d, pos
+    if tag == b"a":
+        n = _U32.unpack_from(buf, pos)[0]
+        pos += 4
+        dtype = np.dtype(buf[pos:pos + n].tobytes().decode())
+        pos += n
+        ndim = _U32.unpack_from(buf, pos)[0]
+        pos += 4
+        shape = tuple(_U64.unpack_from(buf, pos + 8 * i)[0]
+                      for i in range(ndim))
+        pos += 8 * ndim
+        nbytes = _U64.unpack_from(buf, pos)[0]
+        pos += 8
+        arr = np.frombuffer(buf[pos:pos + nbytes].tobytes(),
+                            dtype=dtype).reshape(shape)
+        return arr, pos + nbytes
+    raise ValueError(f"bad wire tag {tag!r}")
+
+
+def unpack_msg(body: bytes):
+    """Decode one frame body produced by :func:`pack_msg`."""
+    obj, pos = _unpack_from(memoryview(body), 0)
+    if pos != len(body):
+        raise ValueError("trailing bytes in wire frame")
+    return obj
+
+
+# =========================================================================
+# channels: one logical duplex message stream per shard
+# =========================================================================
+class PipeChannel:
+    """``multiprocessing.Connection`` carrier (messages travel pickled)."""
+
+    def __init__(self, conn):
+        self._conn = conn
+
+    def send(self, msg):
+        self._conn.send(msg)
+
+    def recv(self):
+        return self._conn.recv()
+
+    def poll(self, timeout: float = 0.0) -> bool:
+        return self._conn.poll(timeout)
+
+    def close(self):
+        try:
+            self._conn.close()
+        except OSError:
+            pass
+
+
+class SockChannel:
+    """Length-prefixed binary frames over a TCP socket.
+
+    Frame = 8-byte big-endian body length + :func:`pack_msg` body.
+    ``poll`` only reports True once a *complete* frame is buffered, so
+    ``recv`` after a successful poll never blocks mid-frame.
+
+    The socket stays in blocking mode for its whole life; the recv side
+    waits with ``select`` instead of ``settimeout``.  This matters: a
+    sender thread may be inside ``sendall`` on the same socket, and
+    flipping the socket's timeout/blocking mode under it could truncate an
+    in-flight frame and desync the protocol.
+    """
+
+    def __init__(self, sock: _socket.socket):
+        self._sock = sock
+        self._buf = bytearray()
+        self._send_lock = threading.Lock()
+        sock.settimeout(None)           # blocking forever; see class doc
+        try:
+            sock.setsockopt(_socket.IPPROTO_TCP, _socket.TCP_NODELAY, 1)
+        except OSError:
+            pass                        # AF_UNIX (tests) has no Nagle
+
+    # ------------------------------------------------------------- send ---
+    def send(self, msg):
+        body = pack_msg(msg)
+        try:
+            with self._send_lock:
+                self._sock.sendall(_U64.pack(len(body)) + body)
+        except (BrokenPipeError, ConnectionError, OSError) as e:
+            raise BrokenPipeError(str(e)) from e
+
+    # ------------------------------------------------------------- recv ---
+    def _frame_len(self) -> Optional[int]:
+        if len(self._buf) < 8:
+            return None
+        return _U64.unpack_from(self._buf, 0)[0]
+
+    def _has_frame(self) -> bool:
+        n = self._frame_len()
+        return n is not None and len(self._buf) >= 8 + n
+
+    def _fill(self, timeout: Optional[float]) -> bool:
+        """Read whatever is available within ``timeout``; False on timeout,
+        EOFError when the peer closed.  Waits with ``select`` (never
+        ``settimeout`` — the socket's blocking mode is shared with the
+        sender thread); after a readable select, recv returns promptly."""
+        import select
+        try:
+            readable, _, _ = select.select([self._sock], [], [], timeout)
+            if not readable:
+                return False
+            chunk = self._sock.recv(1 << 20)
+        except (ConnectionError, OSError, ValueError) as e:
+            raise EOFError(str(e)) from e
+        if not chunk:
+            raise EOFError("connection closed by peer")
+        self._buf.extend(chunk)
+        return True
+
+    def poll(self, timeout: float = 0.0) -> bool:
+        if self._has_frame():
+            return True
+        deadline = time.monotonic() + timeout
+        while True:
+            remaining = deadline - time.monotonic()
+            if not self._fill(max(remaining, 0.0)):
+                return self._has_frame()    # nothing arrived in time
+            if self._has_frame():
+                return True
+            if remaining <= 0:
+                return False                # partial frame; don't spin
+
+    def recv(self):
+        while not self._has_frame():
+            self._fill(None)
+        n = self._frame_len()
+        body = bytes(self._buf[8:8 + n])
+        del self._buf[:8 + n]
+        return unpack_msg(body)
+
+    def close(self):
+        try:
+            self._sock.shutdown(_socket.SHUT_RDWR)
+        except OSError:
+            pass
+        try:
+            self._sock.close()
+        except OSError:
+            pass
+
+
+# =========================================================================
+# the worker-side apply engine (shared by every transport)
+# =========================================================================
+class _ShardStore:
+    """Image + disk persistence for one shard's row ranges.
+
+    ``apply_*`` methods run on the shard's (single) applier thread — or
+    inside the shard's writer process / remote server for the pipe and
+    socket transports; the completed-event list is only read by the
+    coordinator after that queue has been drained, so no locking is needed.
+
+    With ``fsync_payloads`` (default) every persisted ``.npz`` path is
+    tracked and :meth:`sync_payloads` batch-fsyncs file data + directory —
+    the workers call it when answering DRAIN, so an acked watermark means
+    the payloads survive power loss, not just a process crash.
+    """
+
+    def __init__(self, shard: int, spec: EmbShardSpec, tables, accs,
+                 directory: Optional[str] = None, sliced: bool = False,
+                 fsync_payloads: bool = True):
+        self.shard = shard
+        self.spec = spec
+        self.ranges = [spec.shard_range(t, shard)
+                       for t in range(len(spec.table_sizes))]
+        if sliced:
+            # ``tables``/``accs`` are already this shard's row slices (the
+            # worker is seeded with only its own rows)
+            self.image_tables = [np.array(np.asarray(t)) for t in tables]
+            self.image_accs = [np.array(np.asarray(a)) for a in accs]
+        else:
+            self.image_tables = [np.array(np.asarray(t)[lo:hi])
+                                 for t, (lo, hi) in zip(tables, self.ranges)]
+            self.image_accs = [np.array(np.asarray(a)[lo:hi])
+                               for a, (lo, hi) in zip(accs, self.ranges)]
+        self.trainer_image = None              # populated on shard 0 only
+        self.directory = directory
+        self.fsync_payloads = fsync_payloads
+        self._pending_fsync: List[str] = []
+        self.bytes_written = 0
+        self.save_events = 0
+        self.applied: List[dict] = []          # completed events, in order
+        if directory:
+            os.makedirs(directory, exist_ok=True)
+
+    def _record(self, ev, fname: Optional[str] = None):
+        ev["shard"] = self.shard
+        ev["time"] = time.time()
+        self.bytes_written += ev["bytes"]
+        self.save_events += 1
+        self.applied.append(ev)
+        if fname and self.fsync_payloads:
+            self._pending_fsync.append(os.path.join(self.directory, fname))
+
+    def apply_full(self, tables, accs, step: int, seq: int):
+        """``tables``/``accs`` are immutable full-table snapshots shared
+        with the other shards' workers (read-only); slice out our ranges."""
+        self._apply_full([tables[t][lo:hi]
+                          for t, (lo, hi) in enumerate(self.ranges)],
+                         [accs[t][lo:hi]
+                          for t, (lo, hi) in enumerate(self.ranges)],
+                         step, seq)
+
+    def apply_full_sliced(self, table_slices, acc_slices, step: int,
+                          seq: int):
+        """Like :meth:`apply_full` but the payload is already this shard's
+        row slices (the socket transport streams only the shard's rows)."""
+        self._apply_full(table_slices, acc_slices, step, seq)
+
+    def _apply_full(self, t_slices, a_slices, step: int, seq: int):
+        nbytes = 0
+        for t in range(len(self.image_tables)):
+            self.image_tables[t][...] = t_slices[t]
+            self.image_accs[t][...] = a_slices[t]
+            nbytes += self.image_tables[t].nbytes + self.image_accs[t].nbytes
+        fname = None
+        if self.directory:
+            arrs = {}
+            for t in range(len(self.image_tables)):
+                arrs[f"table_{t}"] = self.image_tables[t]
+                arrs[f"acc_{t}"] = self.image_accs[t]
+            fname = f"full_e{seq}.npz"
+            np.savez_compressed(os.path.join(self.directory, fname), **arrs)
+        self._record({"kind": "full", "step": step, "seq": seq,
+                      "bytes": nbytes}, fname)
+
+    def apply_rows(self, table: int, rows: np.ndarray, values: np.ndarray,
+                   acc_values: np.ndarray, step: int, seq: int):
+        """``rows`` are global ids, already routed to (and owned by) us."""
+        lo, _ = self.ranges[table]
+        local = np.asarray(rows) - lo
+        self.image_tables[table][local] = values
+        self.image_accs[table][local] = acc_values
+        nbytes = values.nbytes + acc_values.nbytes + np.asarray(rows).nbytes
+        fname = None
+        if self.directory:
+            fname = f"partial_t{table}_e{seq}.npz"
+            np.savez_compressed(os.path.join(self.directory, fname),
+                                rows=rows, values=values, accs=acc_values,
+                                table=table, step=step)
+        self._record({"kind": "partial", "table": table, "step": step,
+                      "seq": seq, "bytes": nbytes, "file": fname}, fname)
+
+    def apply_trainer(self, tree, step: int, seq: int):
+        self.trainer_image = tree
+        nbytes = sum(np.asarray(a).nbytes for a in _leaves(tree))
+        fname = None
+        if self.directory:
+            fname = f"trainer_e{seq}.npz"
+            save_trainer_tree(os.path.join(self.directory, fname), tree)
+        self._record({"kind": "trainer", "step": step, "seq": seq,
+                      "bytes": nbytes, "file": fname}, fname)
+
+    def sync_payloads(self):
+        """Batch-fsync every payload persisted since the last DRAIN (file
+        data, then the directory entry) so the watermark acked back to the
+        coordinator is power-loss-durable.  Off the save critical path:
+        runs at DRAIN time, in the worker."""
+        if not self._pending_fsync:
+            return
+        for path in self._pending_fsync:
+            fsync_path(path)
+        fsync_path(self.directory)
+        self._pending_fsync = []
+
+
+def fsync_path(path: str):
+    """fsync one file or directory by path (no-op if it vanished)."""
+    try:
+        fd = os.open(path, os.O_RDONLY)
+    except OSError:
+        return
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
+# =========================================================================
+# save_full snapshot shipping
+# =========================================================================
+class SnapshotRef:
+    """One ``save_full`` host snapshot, shipped fleet-wide.  Endpoints call
+    :meth:`payload_for` to get their wire payload; the coordinator calls
+    :meth:`release` once a fence confirmed every healthy shard consumed it.
+    """
+
+    def __init__(self, seq: int):
+        self.seq = seq
+
+    def payload_for(self, shard: int):
+        raise NotImplementedError
+
+    def release(self):
+        pass
+
+
+class InlineSnapshot(SnapshotRef):
+    """In-process: the immutable host arrays themselves are the payload."""
+
+    def __init__(self, seq, snap_t, snap_a):
+        super().__init__(seq)
+        self.tables = snap_t
+        self.accs = snap_a
+
+    def payload_for(self, shard: int):
+        return self.tables, self.accs
+
+
+class SpoolSnapshot(SnapshotRef):
+    """Pipe fallback: ONE uncompressed ``.npz`` on disk that every worker
+    slices locally.  Costs a disk write on the save-event critical path —
+    which is exactly what :class:`ShmSnapshot` removes."""
+
+    def __init__(self, seq, spool_dir, snap_t, snap_a):
+        super().__init__(seq)
+        os.makedirs(spool_dir, exist_ok=True)
+        self.path = os.path.join(spool_dir, f"spool_e{seq}.npz")
+        arrs = {}
+        for t, (tab, acc) in enumerate(zip(snap_t, snap_a)):
+            arrs[f"table_{t}"] = np.asarray(tab)
+            arrs[f"acc_{t}"] = np.asarray(acc)
+        np.savez(self.path, **arrs)
+
+    def payload_for(self, shard: int):
+        return ("spool", self.path)
+
+    def release(self):
+        try:
+            os.remove(self.path)
+        except OSError:
+            pass
+
+
+class ShmSnapshot(SnapshotRef):
+    """One ``multiprocessing.shared_memory`` segment holding the full
+    (tables, accs) snapshot; workers attach and slice zero-copy.  Removes
+    the last per-save disk write from the save-event critical path."""
+
+    def __init__(self, seq, snap_t, snap_a):
+        super().__init__(seq)
+        from multiprocessing import shared_memory
+        arrs = []
+        for t, a in enumerate(snap_t):
+            arrs.append((f"table_{t}", np.ascontiguousarray(a)))
+        for t, a in enumerate(snap_a):
+            arrs.append((f"acc_{t}", np.ascontiguousarray(a)))
+        total = max(1, sum(a.nbytes for _, a in arrs))
+        self._shm = shared_memory.SharedMemory(create=True, size=total)
+        self.meta = []                 # (key, dtype_str, shape, offset)
+        off = 0
+        for key, a in arrs:
+            view = np.ndarray(a.shape, a.dtype, buffer=self._shm.buf,
+                              offset=off)
+            view[...] = a
+            self.meta.append((key, a.dtype.str, tuple(a.shape), off))
+            off += a.nbytes
+        del view
+
+    def payload_for(self, shard: int):
+        return ("shm", self._shm.name, self.meta)
+
+    def release(self):
+        try:
+            self._shm.close()
+            self._shm.unlink()
+        except (OSError, FileNotFoundError):
+            pass
+
+
+class SliceSnapshot(SnapshotRef):
+    """Socket streaming fallback: shared memory cannot cross hosts, so each
+    shard is sent exactly its own row slices (total wire bytes across the
+    fleet = one snapshot).  Slicing happens lazily on the sender thread —
+    off the trainer's critical path."""
+
+    def __init__(self, seq, snap_t, snap_a, ranges):
+        super().__init__(seq)
+        self.tables = snap_t
+        self.accs = snap_a
+        self.ranges = ranges           # ranges[shard][table] = (lo, hi)
+
+    def payload_for(self, shard: int):
+        r = self.ranges[shard]
+        return ("slices",
+                [np.ascontiguousarray(t[lo:hi])
+                 for t, (lo, hi) in zip(self.tables, r)],
+                [np.ascontiguousarray(a[lo:hi])
+                 for a, (lo, hi) in zip(self.accs, r)])
+
+
+def _apply_full_payload(store: _ShardStore, spec: EmbShardSpec, payload,
+                        step: int, seq: int):
+    """Worker side: apply one ``save_full`` payload, whichever way it was
+    shipped.  All three payload kinds produce the identical event record."""
+    kind = payload[0]
+    if kind == "slices":
+        store.apply_full_sliced(payload[1], payload[2], step, seq)
+        return
+    if kind == "spool":
+        with np.load(payload[1]) as z:
+            tabs = [z[f"table_{t}"] for t in range(len(spec.table_sizes))]
+            accs = [z[f"acc_{t}"] for t in range(len(spec.table_sizes))]
+        store.apply_full(tabs, accs, step, seq)
+        return
+    if kind == "shm":
+        from multiprocessing import shared_memory
+        name, meta = payload[1], payload[2]
+        # NOTE: attaching registers the name with the resource tracker
+        # (idempotent set-add; workers share the coordinator's tracker via
+        # the spawn fd).  Do NOT unregister here — that would remove the
+        # coordinator's own registration and break its unlink at release.
+        seg = shared_memory.SharedMemory(name=name)
+        try:
+            views = {key: np.ndarray(shape, np.dtype(dt), buffer=seg.buf,
+                                     offset=off)
+                     for key, dt, shape, off in meta}
+            tabs = [views[f"table_{t}"]
+                    for t in range(len(spec.table_sizes))]
+            accs = [views[f"acc_{t}"]
+                    for t in range(len(spec.table_sizes))]
+            store.apply_full(tabs, accs, step, seq)   # copies our slices
+        finally:
+            del views, tabs, accs     # release buffer exports before close
+            seg.close()
+        return
+    raise ValueError(f"unknown save_full payload kind {kind!r}")
+
+
+# =========================================================================
+# the unified worker loop (pipe children and socket servers both run this)
+# =========================================================================
+def serve_shard(chan, shard: int, spec: EmbShardSpec,
+                directory: Optional[str], seed,
+                fsync_payloads: bool = True):
+    """One shard writer's apply loop over a :class:`PipeChannel` /
+    :class:`SockChannel`.
+
+    ``seed`` is ``(table_slices, acc_slices, trainer_image)`` — only this
+    shard's rows ever cross the transport at spawn.  Fail-stop: the first
+    apply error is latched and reported; later apply commands are dropped
+    (never applied out of order around the hole) while control commands
+    (drain / image / ping) keep answering so the coordinator can fence.
+    DRAIN fsyncs the pending payloads before acking, making the returned
+    watermark power-loss-durable.
+    """
+    seed_t, seed_a, seed_tr = seed
+    store = _ShardStore(shard, spec, seed_t, seed_a, directory=directory,
+                        sliced=True, fsync_payloads=fsync_payloads)
+    store.trainer_image = seed_tr
+    err: Optional[str] = None
+    watermark = 0
+    while True:
+        try:
+            msg = chan.recv()
+        except (EOFError, OSError):
+            return                      # coordinator gone: nothing to ack to
+        kind = msg[0]
+        try:
+            if kind == "close":
+                return
+            if kind == "ping":
+                chan.send(("pong", msg[1]))
+                continue
+            if kind == "drain":
+                try:
+                    store.sync_payloads()   # power-loss-true watermark
+                except BaseException as e:
+                    if err is None:
+                        err = f"{type(e).__name__}: {e}"
+                chan.send(("drained", msg[1], watermark, err))
+                continue
+            if kind == "image":
+                chan.send(("image", store.image_tables, store.image_accs,
+                           store.trainer_image))
+                continue
+            if err is not None:         # fail-stop: drop applies
+                continue
+            seq, step = msg[1], msg[2]
+            try:
+                if kind == "full":
+                    _apply_full_payload(store, spec, msg[3], step, seq)
+                elif kind == "rows":
+                    table, rows, vals, avs = msg[3:]
+                    store.apply_rows(table, rows, vals, avs, step, seq)
+                elif kind == "trainer":
+                    store.apply_trainer(msg[3], step, seq)
+                else:
+                    raise ValueError(f"unknown command {kind!r}")
+                watermark = seq         # durable at the next DRAIN fsync
+                chan.send(("ack", seq, store.applied.pop()))
+            except BaseException as e:  # latch + report, keep serving
+                err = f"{type(e).__name__}: {e}"
+                chan.send(("error", seq, err))
+        except (BrokenPipeError, OSError):
+            return                      # coordinator gone mid-reply
+
+
+def _pipe_worker_main(conn, shard: int, spec: EmbShardSpec,
+                      directory: Optional[str], seed, fsync_payloads: bool):
+    """Pipe-transport child entry point (numpy-only; never imports jax)."""
+    serve_shard(PipeChannel(conn), shard, spec, directory, seed,
+                fsync_payloads)
+
+
+# =========================================================================
+# endpoints
+# =========================================================================
+class ShardEndpoint:
+    """Per-shard handle the coordinator routes through.  Subclasses latch
+    failures into ``_exc`` (fail-stop: it never clears except in a
+    successful ``respawn``)."""
+
+    #: True when the shard's image remains readable in the coordinator
+    #: process even after the endpoint is poisoned (inproc: the store
+    #: lives here; its image stays frozen at the last successful apply).
+    image_survives_failure = False
+
+    def __init__(self, shard: int):
+        self.shard = shard
+        self.applied: List[dict] = []   # acked events since last collect
+        self.durable_seq = 0            # last drain-confirmed watermark
+        self._exc: Optional[BaseException] = None
+
+    @property
+    def error(self) -> Optional[BaseException]:
+        """The latched failure, if any (fail-stop: it never clears)."""
+        return self._exc
+
+    def poison(self, exc: BaseException):
+        """Latch an externally observed failure (e.g. a failed respawn must
+        leave the shard unambiguously out of the fleet)."""
+        if self._exc is None:
+            self._exc = exc
+
+    # lifecycle hooks every transport implements ---------------------------
+    def submit_full(self, ref: SnapshotRef, step: int, seq: int):
+        raise NotImplementedError
+
+    def submit_rows(self, table, rows, values, acc_values, step, seq):
+        raise NotImplementedError
+
+    def submit_trainer(self, tree, step, seq):
+        raise NotImplementedError
+
+    def begin_drain(self, token: int) -> bool:
+        raise NotImplementedError
+
+    def finish_drain(self, token: int, timeout: float) -> bool:
+        raise NotImplementedError
+
+    def collect_applied(self) -> List[dict]:
+        out, self.applied = self.applied, []
+        return out
+
+    def pump(self):
+        pass
+
+    def probe(self):
+        """Heartbeat hook: cheaply verify liveness, latching on death.
+        Never blocks the caller for long."""
+
+    def fetch_image(self, timeout: float):
+        raise NotImplementedError
+
+    def kill(self):
+        raise NotImplementedError
+
+    def respawn(self, seed_tables, seed_accs, trainer_image=None):
+        raise NotImplementedError
+
+    def close(self):
+        raise NotImplementedError
+
+
+class _InlineApplier:
+    """Same surface as :class:`AsyncApplier`, applied on the caller thread
+    (sync mode) with the same fail-stop latch semantics."""
+
+    def __init__(self):
+        self._exc: Optional[BaseException] = None
+
+    @property
+    def error(self) -> Optional[BaseException]:
+        return self._exc
+
+    def submit(self, fn, *args, **kw):
+        """Apply inline; raises on the latching call (parity with
+        ``AsyncApplier.submit`` raising once an error is latched) so the
+        router never counts a failed apply as saved."""
+        if self._exc is not None:              # fail-stop after error
+            raise RuntimeError("shard writer failed") from self._exc
+        try:
+            fn(*args, **kw)
+        except BaseException as e:
+            self._exc = e
+            raise RuntimeError("checkpoint apply failed") from e
+
+    def fence(self):
+        if self._exc is not None:
+            raise RuntimeError("checkpoint apply failed") from self._exc
+
+    def close(self):
+        pass
+
+
+class InprocEndpoint(ShardEndpoint):
+    """The absorbed thread backend: one :class:`_ShardStore` under an
+    in-process :class:`AsyncApplier` worker thread (or inline in sync
+    mode).  A crash here takes the trainer down with it — that is the
+    deal the inproc transport offers (zero isolation, zero IPC cost)."""
+
+    image_survives_failure = True
+
+    def __init__(self, shard: int, spec: EmbShardSpec, seed_tables,
+                 seed_accs, trainer_image=None,
+                 directory: Optional[str] = None, async_save: bool = True,
+                 max_inflight: int = 2, fsync_payloads: bool = True):
+        super().__init__(shard)
+        self.async_save = async_save
+        self.max_inflight = max_inflight
+        self.store = _ShardStore(shard, spec, seed_tables, seed_accs,
+                                 directory=directory, sliced=True,
+                                 fsync_payloads=fsync_payloads)
+        self.store.trainer_image = trainer_image
+        self.applier = self._new_applier()
+
+    # accounting reads the store live (exact immediately after an apply,
+    # like the absorbed thread backend — remote endpoints count acks)
+    @property
+    def bytes_written(self) -> int:
+        return self.store.bytes_written
+
+    @property
+    def save_events(self) -> int:
+        return self.store.save_events
+
+    def _new_applier(self):
+        return (AsyncApplier(name=f"cpr-shard-ckpt-{self.shard}",
+                             max_inflight=self.max_inflight)
+                if self.async_save else _InlineApplier())
+
+    @property
+    def error(self):
+        return self._exc or self.applier.error
+
+    # -------------------------------------------------------- submits -----
+    def submit_full(self, ref: SnapshotRef, step: int, seq: int):
+        snap_t, snap_a = ref.payload_for(self.shard)
+        # late-bind the store method so tests can monkeypatch apply_*
+        self.applier.submit(lambda *a: self.store.apply_full(*a),
+                            snap_t, snap_a, step, seq)
+
+    def submit_rows(self, table, rows, values, acc_values, step, seq):
+        self.applier.submit(lambda *a: self.store.apply_rows(*a),
+                            table, rows, values, acc_values, step, seq)
+
+    def submit_trainer(self, tree, step, seq):
+        self.applier.submit(lambda *a: self.store.apply_trainer(*a),
+                            tree, step, seq)
+
+    # ---------------------------------------------------------- drain -----
+    def begin_drain(self, token: int) -> bool:
+        return self.error is None
+
+    def finish_drain(self, token: int, timeout: float) -> bool:
+        try:
+            self.applier.fence()
+        except RuntimeError:
+            return False
+        try:
+            self.store.sync_payloads()      # payloads durable before stamp
+        except OSError as e:
+            # an fsync failure (EIO, ENOSPC) poisons this shard only —
+            # same per-shard fail-stop the remote workers' serve loop
+            # gives it, never a fence-wide crash
+            self.poison(e)
+            return False
+        return True
+
+    def collect_applied(self) -> List[dict]:
+        out, self.store.applied = self.store.applied, []
+        for e in out:
+            self.durable_seq = max(self.durable_seq, e["seq"])
+        return out
+
+    # --------------------------------------------------------- queries ----
+    def fetch_image(self, timeout: float):
+        return (self.store.image_tables, self.store.image_accs,
+                self.store.trainer_image)
+
+    # ----------------------------------------------------------- admin ----
+    def kill(self):
+        err = RuntimeError(f"shard {self.shard} writer killed (drill)")
+        self.applier._exc = err         # same latch a worker error sets
+
+    def respawn(self, seed_tables, seed_accs, trainer_image=None):
+        """Fresh applier over the surviving store (the image lives in this
+        process, so no reseed copy is needed — the caller ships a fresh
+        full to cover anything the poisoned applier dropped)."""
+        self.applier.close()
+        self.applier = self._new_applier()
+        self._exc = None
+
+    def close(self):
+        self.applier.close()
+
+
+class RemoteEndpoint(ShardEndpoint):
+    """Shared parent-side machinery for channel-backed workers (pipe +
+    socket): reply pump, ordered DRAIN collection, image fetch, accounting
+    from acks.  Accounting is exact only after a fence, like the inproc
+    applier.  Subclasses provide the channel, liveness, spawn/respawn."""
+
+    def __init__(self, shard: int):
+        super().__init__(shard)
+        self.bytes_written = 0          # fed by acks; exact after a fence
+        self.save_events = 0
+        self._chan = None
+        self._io_lock = threading.RLock()
+        self._last_activity = time.monotonic()
+
+    # ------------------------------------------------------ liveness ------
+    def _alive(self) -> bool:
+        raise NotImplementedError
+
+    def _latch(self, why: str):
+        if self._exc is None:
+            self._exc = WriterProcError(
+                f"shard {self.shard} writer {why}")
+
+    # --------------------------------------------------------- pump -------
+    def _dispatch_reply(self, msg) -> str:
+        """Fold one worker reply into parent-side state; returns its kind."""
+        self._last_activity = time.monotonic()
+        kind = msg[0]
+        if kind == "ack":
+            ev = msg[2]
+            self.bytes_written += ev["bytes"]
+            self.save_events += 1
+            self.applied.append(dict(ev))
+        elif kind == "error":
+            if self._exc is None:
+                self._exc = WriterProcError(
+                    f"shard {self.shard} writer apply failed "
+                    f"(seq {msg[1]}): {msg[2]}")
+        elif kind == "pong":
+            self._last_pong = (msg[1], time.monotonic())
+        return kind
+
+    def pump(self):
+        """Fold every already-available reply without blocking (keeps the
+        worker's reply stream from filling between fences).  Safe on a dead
+        worker: its buffered acks — saves it durably applied+persisted
+        before dying — are still folded, so the fence can stamp them."""
+        with self._io_lock:
+            try:
+                while self._chan is not None and self._chan.poll(0):
+                    self._dispatch_reply(self._chan.recv())
+            except (EOFError, OSError):
+                self._latch("died")
+
+    def _recv_until(self, want: str, timeout: float):
+        """Consume replies until one of kind ``want`` arrives; None on
+        worker death or timeout (the caller poisons the shard)."""
+        deadline = time.monotonic() + timeout
+        with self._io_lock:
+            while True:
+                remaining = deadline - time.monotonic()
+                if remaining <= 0:
+                    self._latch(f"missed {want} deadline ({timeout:.0f}s)")
+                    return None
+                try:
+                    if self._chan.poll(min(remaining, 0.05)):
+                        msg = self._chan.recv()
+                        if self._dispatch_reply(msg) == want:
+                            return msg
+                    elif not self._alive():
+                        # dead — but the stream may still hold buffered
+                        # replies the worker sent before dying
+                        while self._chan.poll(0):
+                            msg = self._chan.recv()
+                            if self._dispatch_reply(msg) == want:
+                                return msg
+                        self._latch("died")
+                        return None
+                except (EOFError, OSError):
+                    self._latch("died")
+                    return None
+
+    # -------------------------------------------------------- submits -----
+    def _send(self, msg):
+        if self._exc is not None:
+            raise RuntimeError("shard writer failed") from self._exc
+        self.pump()
+        try:
+            self._send_raw(msg)
+        except (BrokenPipeError, OSError) as e:
+            self._latch("died")
+            raise RuntimeError("shard writer died") from e
+        if self._exc is not None:
+            raise RuntimeError("shard writer failed") from self._exc
+
+    def _send_raw(self, msg):
+        self._chan.send(msg)
+
+    def submit_full(self, ref: SnapshotRef, step: int, seq: int):
+        self._send(("full", seq, step, self._full_payload(ref)))
+
+    def _full_payload(self, ref: SnapshotRef):
+        return ref.payload_for(self.shard)
+
+    def submit_rows(self, table, rows, values, acc_values, step, seq):
+        self._send(("rows", seq, step, int(table), np.asarray(rows),
+                    np.asarray(values), np.asarray(acc_values)))
+
+    def submit_trainer(self, tree, step, seq):
+        self._send(("trainer", seq, step, tree))
+
+    # ---------------------------------------------------------- drain -----
+    def begin_drain(self, token: int) -> bool:
+        """Phase-1 broadcast half: enqueue the DRAIN marker.  Returns False
+        (and latches) when the worker is already unreachable."""
+        try:
+            self._send(("drain", token))
+            return True
+        except RuntimeError:
+            return False
+
+    def finish_drain(self, token: int,
+                     timeout: float = DRAIN_TIMEOUT_S) -> bool:
+        """Phase-1 collect half: block until the worker acks the DRAIN
+        marker (all prior applies done, persisted **and fsynced**), folding
+        every in-flight ack on the way.  Updates ``durable_seq`` from the
+        acked watermark.  False — with the shard latched poisoned — on
+        worker death, apply error, or deadline miss."""
+        while True:
+            msg = self._recv_until("drained", timeout)
+            if msg is None:
+                return False
+            _, got_token, watermark, err = msg
+            self.durable_seq = max(self.durable_seq, watermark)
+            if err is not None and self._exc is None:
+                self._exc = WriterProcError(
+                    f"shard {self.shard} writer apply failed: {err}")
+            if got_token == token:
+                return self._exc is None
+            # stale token from an earlier aborted fence: keep consuming
+
+    # --------------------------------------------------------- queries ----
+    def fetch_image(self, timeout: float = DRAIN_TIMEOUT_S):
+        """Pull (image_tables, image_accs, trainer_image) back from the
+        worker; None when the worker is unreachable."""
+        try:
+            self._send(("image",))
+        except RuntimeError:
+            return None
+        msg = self._recv_until("image", timeout)
+        if msg is None:
+            return None
+        return list(msg[1]), list(msg[2]), msg[3]
+
+    def close(self):
+        """Best-effort shutdown; never raises."""
+        try:
+            self._send_raw(("close",))
+        except (BrokenPipeError, OSError, RuntimeError):
+            pass
+        self._teardown(graceful=True)
+        if self._chan is not None:
+            self._chan.close()
+
+    def _teardown(self, graceful: bool):
+        pass
+
+
+class PipeEndpoint(RemoteEndpoint):
+    """One shard writer behind an OS process boundary, fed over a duplex
+    ``multiprocessing`` pipe (spawn context: no fork — the trainer holds
+    jax threads/locks a fork would clone).  Worker death (any crash, incl.
+    SIGKILL) latches the handle fail-stop — one dead writer poisons one
+    shard, never the trainer."""
+
+    def __init__(self, shard: int, spec: EmbShardSpec, seed_tables,
+                 seed_accs, trainer_image=None,
+                 directory: Optional[str] = None,
+                 fsync_payloads: bool = True):
+        super().__init__(shard)
+        self.spec = spec
+        self.directory = directory
+        self.fsync_payloads = fsync_payloads
+        self._spawn(seed_tables, seed_accs, trainer_image)
+
+    def _spawn(self, seed_tables, seed_accs, trainer_image):
+        import multiprocessing as mp
+        ctx = mp.get_context("spawn")
+        parent, child = ctx.Pipe()
+        seed = ([np.asarray(t) for t in seed_tables],
+                [np.asarray(a) for a in seed_accs], trainer_image)
+        self.proc = ctx.Process(
+            target=_pipe_worker_main,
+            args=(child, self.shard, self.spec, self.directory, seed,
+                  self.fsync_payloads),
+            name=f"cpr-shard-writer-{self.shard}", daemon=True)
+        self.proc.start()
+        child.close()                   # child's end lives in the child now
+        self._chan = PipeChannel(parent)
+        self._conn = parent             # crash drills poke the raw pipe
+
+    @property
+    def pid(self) -> Optional[int]:
+        return self.proc.pid
+
+    def _alive(self) -> bool:
+        return self.proc.is_alive()
+
+    def _latch(self, why: str):
+        if self._exc is None:
+            code = self.proc.exitcode
+            self._exc = WriterProcError(
+                f"shard {self.shard} writer process (pid {self.proc.pid}) "
+                f"{why}" + (f" [exitcode {code}]"
+                            if code is not None else ""))
+
+    def probe(self):
+        """Heartbeat: a writer process that died between saves is latched
+        here instead of at the next submit/fence.  Buffered acks are NOT
+        consumed (the fence pump still collects them for stamping)."""
+        if self._exc is None and not self.proc.is_alive():
+            self._latch("died (heartbeat)")
+
+    def kill(self):
+        """Hard-kill the worker (SIGKILL) — the crash-injection surface the
+        recovery suite drives; also usable as an operator failure drill."""
+        if self.proc.is_alive():
+            self.proc.kill()
+        self.proc.join(timeout=5.0)
+        self._latch("was killed")
+
+    def respawn(self, seed_tables, seed_accs, trainer_image=None):
+        """Re-admission: replace a dead/poisoned worker with a fresh process
+        seeded from the caller's last-good image slices.  Atomic: the latch
+        clears only after the fresh worker is up — a spawn failure re-latches
+        and re-raises, leaving the shard unambiguously poisoned."""
+        self._teardown(graceful=False)
+        try:
+            self._spawn(seed_tables, seed_accs, trainer_image)
+        except BaseException as e:
+            self._exc = WriterProcError(
+                f"shard {self.shard} writer respawn failed: "
+                f"{type(e).__name__}: {e}")
+            raise
+        self._exc = None
+        self.applied = []
+
+    def _teardown(self, graceful: bool):
+        if self._chan is not None:
+            self._chan.close()
+        if getattr(self, "proc", None) is None:
+            return
+        if self.proc.is_alive() and not graceful:
+            self.proc.kill()
+        self.proc.join(timeout=5.0)
+        if self.proc.is_alive():
+            self.proc.kill()
+            self.proc.join(timeout=5.0)
+
+
+class SocketEndpoint(RemoteEndpoint):
+    """One shard writer on the far side of a TCP connection, speaking the
+    length-prefixed frame protocol.
+
+    Two modes: connect to an external ``repro.launch.shard_server``
+    (``address=(host, port)`` — the multi-host deployment), or auto-spawn a
+    loopback server process per shard (tests, benchmarks, drills).
+
+    Submits are enqueued to a bounded outbound queue drained by a sender
+    thread: a partitioned or wedged remote writer fills the queue and gets
+    poisoned after ``submit_timeout`` — it never blocks the trainer.
+    Heartbeats ride the same connection (``ping``/``pong``); a missed pong
+    for ``heartbeat_timeout`` latches the endpoint."""
+
+    _CLOSE = object()
+
+    def __init__(self, shard: int, spec: EmbShardSpec, seed_tables,
+                 seed_accs, trainer_image=None,
+                 directory: Optional[str] = None,
+                 address: Optional[Tuple[str, int]] = None,
+                 fsync_payloads: bool = True,
+                 connect_timeout: float = 20.0,
+                 submit_timeout: float = SUBMIT_TIMEOUT_S,
+                 heartbeat_timeout: float = HEARTBEAT_TIMEOUT_S):
+        super().__init__(shard)
+        self.spec = spec
+        self.directory = directory
+        self.fsync_payloads = fsync_payloads
+        self.address = tuple(address) if address else None
+        self.connect_timeout = connect_timeout
+        self.submit_timeout = submit_timeout
+        self.heartbeat_timeout = heartbeat_timeout
+        self._server_proc = None        # auto-spawned server (owned)
+        self._server_ready = None
+        self._outq: Optional[queue.Queue] = None
+        self._sender: Optional[threading.Thread] = None
+        self._ping_token = 0
+        self._ping_sent_at = 0.0
+        self._last_pong = (0, 0.0)
+        self._spawn(seed_tables, seed_accs, trainer_image)
+
+    # ------------------------------------------------------------ spawn ---
+    def _spawn_server(self) -> Tuple[str, int]:
+        """Launch a loopback ``shard_server`` process and return its bound
+        address (the child binds port 0 and reports the real port back)."""
+        import multiprocessing as mp
+
+        from repro.launch import shard_server
+        ctx = mp.get_context("spawn")
+        parent, child = ctx.Pipe()
+        proc = ctx.Process(target=shard_server.spawned_server_main,
+                           args=(child, "127.0.0.1"),
+                           name=f"cpr-shard-server-{self.shard}",
+                           daemon=True)
+        proc.start()
+        child.close()
+        if not parent.poll(self.connect_timeout):
+            proc.kill()
+            raise WriterProcError(
+                f"shard {self.shard} server failed to report its port")
+        host, port = parent.recv()
+        parent.close()
+        self._server_proc = proc
+        return host, port
+
+    def _spawn(self, seed_tables, seed_accs, trainer_image):
+        addr = self.address
+        if addr is None:
+            addr = self._spawn_server()
+        sock = _socket.create_connection(addr, timeout=self.connect_timeout)
+        chan = SockChannel(sock)
+        chan.send(("spawn", self.shard, list(self.spec.table_sizes),
+                   self.spec.n_shards, self.directory,
+                   [np.asarray(t) for t in seed_tables],
+                   [np.asarray(a) for a in seed_accs],
+                   trainer_image, self.fsync_payloads))
+        self._chan = chan
+        self._outq = queue.Queue(maxsize=SUBMIT_QUEUE_DEPTH)
+        self._sender = threading.Thread(
+            target=self._sender_loop, args=(chan, self._outq),
+            name=f"cpr-sock-send-{self.shard}", daemon=True)
+        self._sender.start()
+        self._ping_token = 0
+        self._ping_sent_at = 0.0
+        self._last_pong = (0, time.monotonic())
+
+    def _sender_loop(self, chan: SockChannel, q: queue.Queue):
+        """Drain the outbound queue onto the socket.  ``save_full``
+        payloads are materialized here — slicing the snapshot and packing
+        it happen off the trainer's critical path.  A send failure latches
+        the endpoint but keeps consuming, so producers blocked on a full
+        queue are released instead of wedged."""
+        while True:
+            item = q.get()
+            if item is self._CLOSE:
+                return
+            try:
+                if item[0] == "full":       # lazy: (kind, seq, step, ref)
+                    item = ("full", item[1], item[2],
+                            item[3].payload_for(self.shard))
+                chan.send(item)
+            except (BrokenPipeError, OSError):
+                self._latch("connection lost")
+
+    def submit_full(self, ref: SnapshotRef, step: int, seq: int):
+        # ship the ref itself; the sender thread slices + packs (the ref
+        # stays pending in the transport until the fence releases it, so
+        # it outlives the queue)
+        self._send(("full", seq, step, ref))
+
+    # ------------------------------------------------------------ wires ---
+    def _alive(self) -> bool:
+        if self._server_proc is not None:
+            return self._server_proc.is_alive()
+        return True                     # external server: trust the stream
+
+    def _send_raw(self, msg):
+        try:
+            self._outq.put(msg, timeout=self.submit_timeout)
+        except queue.Full:
+            self._latch(f"submit stalled ({self.submit_timeout:.0f}s): "
+                        f"outbound queue full")
+            raise BrokenPipeError("outbound queue full")
+        if self._exc is not None:       # sender latched while we waited
+            raise BrokenPipeError("connection lost")
+
+    # -------------------------------------------------------- heartbeat ---
+    def probe(self):
+        """Heartbeat: detect a dead server / severed connection between
+        saves.  Sends a ping and latches when the previous ping went
+        unanswered for ``heartbeat_timeout``."""
+        if self._exc is not None:
+            return
+        if self._server_proc is not None and not self._server_proc.is_alive():
+            self._latch("server process died (heartbeat)")
+            return
+        if self._io_lock.acquire(blocking=False):
+            try:
+                while self._chan.poll(0):
+                    self._dispatch_reply(self._chan.recv())
+            except (EOFError, OSError):
+                self._latch("connection lost (heartbeat)")
+                return
+            finally:
+                self._io_lock.release()
+        now = time.monotonic()
+        answered = self._last_pong[0] >= self._ping_token
+        if (not answered and self._ping_sent_at and
+                now - self._ping_sent_at > self.heartbeat_timeout and
+                now - self._last_activity > self.heartbeat_timeout):
+            # no pong AND no other reply either: the link (or worker) is
+            # truly silent.  A worker busy inside one long apply keeps
+            # producing acks — that counts as alive.
+            self._latch(f"heartbeat timed out "
+                        f"({self.heartbeat_timeout:.0f}s of silence)")
+            return
+        if answered:
+            self._ping_token += 1
+            self._ping_sent_at = now
+            try:
+                self._outq.put_nowait(("ping", self._ping_token))
+            except queue.Full:
+                pass                    # submit back-pressure covers this
+
+    # ------------------------------------------------------------- admin --
+    def sever(self):
+        """Failure drill: cut the TCP connection (simulates a network
+        partition) without touching the remote server."""
+        if self._chan is not None:
+            self._chan.close()
+
+    def kill(self):
+        """Hard-kill: SIGKILL the owned server process (crash drill), or
+        sever the connection to an external one."""
+        if self._server_proc is not None:
+            if self._server_proc.is_alive():
+                self._server_proc.kill()
+            self._server_proc.join(timeout=5.0)
+            self._latch("server was killed")
+        else:
+            self.sever()
+            self._latch("connection severed")
+
+    @property
+    def pid(self) -> Optional[int]:
+        """The owned server's pid (None for external servers) — crash
+        drills SIGKILL it directly."""
+        return (self._server_proc.pid
+                if self._server_proc is not None else None)
+
+    def respawn(self, seed_tables, seed_accs, trainer_image=None):
+        """Re-admission: reconnect (re-launching the owned server if it
+        died) and seed a fresh writer incarnation over the wire.  Atomic:
+        on any failure the latch is (re)set and the error re-raised — the
+        shard stays poisoned and can retry at the next boundary."""
+        self._teardown(graceful=False)
+        try:
+            self._spawn(seed_tables, seed_accs, trainer_image)
+        except BaseException as e:
+            self._exc = WriterProcError(
+                f"shard {self.shard} writer respawn failed: "
+                f"{type(e).__name__}: {e}")
+            raise
+        self._exc = None
+        self.applied = []
+
+    def _teardown(self, graceful: bool):
+        if self._outq is not None:
+            try:
+                self._outq.put_nowait(self._CLOSE)
+            except queue.Full:
+                pass
+        if self._chan is not None:
+            self._chan.close()
+        if self._sender is not None:
+            self._sender.join(timeout=2.0)
+            self._sender = None
+        if self._server_proc is not None:
+            if self._server_proc.is_alive() and not graceful:
+                self._server_proc.kill()
+            self._server_proc.join(timeout=5.0)
+            if self._server_proc.is_alive():
+                self._server_proc.kill()
+                self._server_proc.join(timeout=5.0)
+            self._server_proc = None
+
+    def close(self):
+        try:
+            self._send_raw(("close",))
+        except (BrokenPipeError, OSError, RuntimeError):
+            pass
+        time.sleep(0)                   # let the sender flush the close
+        self._teardown(graceful=True)
+
+
+# =========================================================================
+# transports
+# =========================================================================
+class ShardTransport:
+    """Fleet-level abstraction: owns the per-shard endpoints and the
+    ``save_full`` snapshot-shipping strategy.  ``release_pending()`` is
+    called by the coordinator at each fence, once every healthy shard has
+    acked past the pending snapshots."""
+
+    name = "abstract"
+    #: remote transports keep coordinator-side image caches + disk-replay
+    #: fallbacks; the inproc transport's images live in this process
+    is_remote = True
+
+    def __init__(self):
+        self.endpoints: List[ShardEndpoint] = []
+        self._pending: List[SnapshotRef] = []
+
+    def make_snapshot(self, seq: int, snap_t, snap_a) -> SnapshotRef:
+        ref = self._make_snapshot(seq, snap_t, snap_a)
+        self._pending.append(ref)
+        return ref
+
+    def _make_snapshot(self, seq, snap_t, snap_a) -> SnapshotRef:
+        raise NotImplementedError
+
+    def release_pending(self):
+        for ref in self._pending:
+            ref.release()
+        self._pending = []
+
+    def close(self):
+        for ep in self.endpoints:
+            ep.close()
+        self.release_pending()
+
+
+class InprocTransport(ShardTransport):
+    name = "inproc"
+    is_remote = False
+
+    def __init__(self, spec: EmbShardSpec, seeds, shard_dirs,
+                 async_save: bool = True, max_inflight: int = 2,
+                 fsync_payloads: bool = True):
+        super().__init__()
+        self.endpoints = [
+            InprocEndpoint(j, spec, seeds[j][0], seeds[j][1],
+                           trainer_image=seeds[j][2],
+                           directory=shard_dirs[j], async_save=async_save,
+                           max_inflight=max_inflight,
+                           fsync_payloads=fsync_payloads)
+            for j in range(spec.n_shards)]
+
+    def _make_snapshot(self, seq, snap_t, snap_a):
+        return InlineSnapshot(seq, snap_t, snap_a)
+
+
+class PipeTransport(ShardTransport):
+    name = "pipe"
+
+    def __init__(self, spec: EmbShardSpec, seeds, shard_dirs,
+                 snapshot: str = "shm", spool_dir: Optional[str] = None,
+                 fsync_payloads: bool = True):
+        assert snapshot in ("shm", "spool"), snapshot
+        super().__init__()
+        self.snapshot = snapshot
+        self.spool_dir = spool_dir
+        self._owned_spool: Optional[str] = None   # mkdtemp'd by us
+        self.endpoints = [
+            PipeEndpoint(j, spec, seeds[j][0], seeds[j][1],
+                         trainer_image=seeds[j][2],
+                         directory=shard_dirs[j],
+                         fsync_payloads=fsync_payloads)
+            for j in range(spec.n_shards)]
+
+    def _make_snapshot(self, seq, snap_t, snap_a):
+        if self.snapshot == "shm":
+            try:
+                return ShmSnapshot(seq, snap_t, snap_a)
+            except (OSError, ValueError):
+                pass                    # no usable /dev/shm: spool instead
+        if self.spool_dir is None:
+            import tempfile
+            self.spool_dir = self._owned_spool = \
+                tempfile.mkdtemp(prefix="cpr-spool-")
+        return SpoolSnapshot(seq, self.spool_dir, snap_t, snap_a)
+
+    def close(self):
+        super().close()
+        if self._owned_spool is not None:
+            import shutil
+            shutil.rmtree(self._owned_spool, ignore_errors=True)
+            self._owned_spool = None
+
+
+class SocketTransport(ShardTransport):
+    name = "socket"
+
+    def __init__(self, spec: EmbShardSpec, seeds, shard_dirs,
+                 addresses: Optional[Sequence[Tuple[str, int]]] = None,
+                 fsync_payloads: bool = True,
+                 connect_timeout: float = 20.0,
+                 submit_timeout: float = SUBMIT_TIMEOUT_S,
+                 heartbeat_timeout: float = HEARTBEAT_TIMEOUT_S):
+        super().__init__()
+        if addresses is not None and len(addresses) != spec.n_shards:
+            raise ValueError(
+                f"socket transport needs one address per shard: got "
+                f"{len(addresses)} for n_shards={spec.n_shards}")
+        self._ranges = [[spec.shard_range(t, j)
+                         for t in range(len(spec.table_sizes))]
+                        for j in range(spec.n_shards)]
+        self.endpoints = [
+            SocketEndpoint(j, spec, seeds[j][0], seeds[j][1],
+                           trainer_image=seeds[j][2],
+                           directory=shard_dirs[j],
+                           address=(addresses[j] if addresses else None),
+                           fsync_payloads=fsync_payloads,
+                           connect_timeout=connect_timeout,
+                           submit_timeout=submit_timeout,
+                           heartbeat_timeout=heartbeat_timeout)
+            for j in range(spec.n_shards)]
+
+    def _make_snapshot(self, seq, snap_t, snap_a):
+        return SliceSnapshot(seq, snap_t, snap_a, self._ranges)
+
+
+def make_transport(name: str, spec: EmbShardSpec, seeds, shard_dirs,
+                   **opts) -> ShardTransport:
+    """Build the named transport.  ``seeds[j]`` is ``(table_slices,
+    acc_slices, trainer_image_or_None)`` for shard ``j``; ``opts`` are the
+    transport-specific knobs (async_save/max_inflight for inproc,
+    snapshot/spool_dir for pipe, addresses/timeouts for socket)."""
+    name = normalize_transport(name)
+    common = {k: opts[k] for k in ("fsync_payloads",) if k in opts}
+    if name == "inproc":
+        kw = {k: opts[k] for k in ("async_save", "max_inflight")
+              if k in opts}
+        return InprocTransport(spec, seeds, shard_dirs, **kw, **common)
+    if name == "pipe":
+        kw = {k: opts[k] for k in ("snapshot", "spool_dir") if k in opts}
+        return PipeTransport(spec, seeds, shard_dirs, **kw, **common)
+    kw = {k: opts[k] for k in ("addresses", "connect_timeout",
+                               "submit_timeout", "heartbeat_timeout")
+          if k in opts}
+    return SocketTransport(spec, seeds, shard_dirs, **kw, **common)

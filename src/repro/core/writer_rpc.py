@@ -1,360 +1,39 @@
-"""Process-isolated shard checkpoint writers (command pipe + ack protocol).
+"""Back-compat shim: the process-isolated writer RPC moved into the
+pluggable transport layer.
 
-The per-shard writer fleet (``repro.core.sharded_checkpoint``) runs one
-applier per Emb-PS shard.  The thread backend keeps that applier in the
-trainer process, so a writer crash (OOM inside ``np.savez``, a segfaulting
-filesystem client, an operator ``kill -9``) takes the trainer down with it.
-This module moves each shard's apply loop behind a real OS process boundary
-— the Check-N-Run decoupling taken to its fault-isolation conclusion:
+The pipe-backed shard writer (command pipe, ack protocol, durable seq
+watermarks) that used to live here is now ``repro.core.transport``'s
+:class:`~repro.core.transport.PipeTransport` /
+:class:`~repro.core.transport.PipeEndpoint`, sharing one worker apply loop
+(``serve_shard``) and one logical wire protocol with the in-process and
+TCP-socket transports.  ``save_full`` snapshots now ship zero-copy via
+``multiprocessing.shared_memory`` by default; the uncompressed spool
+``.npz`` this module used to write per save event remains available as
+``PipeTransport(snapshot="spool")`` and as the automatic fallback when no
+usable shared memory exists.
 
-  * :func:`_worker_main` is the child: it owns the shard's
-    :class:`~repro.core.sharded_checkpoint._ShardStore` (image slices + the
-    shard's on-disk directory) and executes commands received over a duplex
-    pipe, acking each applied event back with its byte count.  The worker
-    never imports jax; it is numpy + zlib only, so spawn start-up stays
-    cheap and a trainer-side accelerator wedge cannot corrupt it.
-
-  * :class:`ProcessShardWriter` is the parent-side handle: ``submit_*``
-    ship commands (``save_full`` snapshots travel as ONE spooled ``.npz``
-    path that every worker slices locally — the pipe never carries full
-    tables), ``send_drain``/``wait_drained`` implement the coordinator's
-    two-phase DRAIN barrier and return the shard's **durable seq
-    watermark**, and ``fetch_image`` pulls the shard's image back for
-    restores.  Worker death (any crash, incl. SIGKILL) or an application
-    error latches the handle fail-stop, exactly like the thread backend's
-    ``AsyncApplier`` — one dead writer poisons one shard, never the
-    trainer.
-
-Wire protocol (tuples over one duplex ``multiprocessing.Pipe``):
-
-  parent -> child                         child -> parent
-  ("full",    seq, step, spool_path)      ("ack",     seq, event_dict)
-  ("rows",    seq, step, t, rows, v, a)   ("error",   seq, err_string)
-  ("trainer", seq, step, tree)            ("drained", token, watermark, err)
-  ("drain",   token)                      ("image",   tables, accs, trainer)
-  ("image",)
-  ("close",)
-
-Replies arrive in command order, so after sending DRAIN the parent simply
-consumes acks until the matching ``drained`` token.  The watermark is the
-highest seq the worker has fully applied *and persisted* — what the
-coordinator stamps into the cycle record.
+Importable names are preserved for existing callers; new code should use
+``repro.core.transport`` directly.
 """
 from __future__ import annotations
 
-import multiprocessing as mp
-import os
-import time
-from typing import List, Optional
+from repro.core.transport import (DRAIN_TIMEOUT_S, PipeEndpoint,
+                                  PipeTransport, SpoolSnapshot,
+                                  WriterProcError, serve_shard)
 
-import numpy as np
-
-from repro.core.checkpoint import EmbShardSpec
-from repro.core.sharded_checkpoint import _ShardStore
-
-# Default seconds the coordinator waits for a shard's DRAIN ack before
-# declaring the writer dead.  Generous: a healthy worker only has bounded
-# queued work (pipe back-pressure), so a miss here means a real wedge.
-DRAIN_TIMEOUT_S = 60.0
-
-
-class WriterProcError(RuntimeError):
-    """A shard's writer process failed: an apply raised inside the worker,
-    or the process died (crash, OOM-kill, SIGKILL)."""
-
-
-def _worker_main(conn, shard: int, spec: EmbShardSpec,
-                 directory: Optional[str], seed):
-    """Child entry point: the shard's apply loop.
-
-    ``seed`` is ``(table_slices, acc_slices, trainer_image)`` — only this
-    shard's rows ever cross the process boundary at spawn.  Fail-stop: the
-    first apply error is latched and reported; later apply commands are
-    dropped (never applied out of order around the hole) while control
-    commands (drain/image) keep answering so the coordinator can fence.
-    """
-    seed_t, seed_a, seed_tr = seed
-    store = _ShardStore(shard, spec, seed_t, seed_a, directory=directory,
-                        sliced=True)
-    store.trainer_image = seed_tr
-    err: Optional[str] = None
-    watermark = 0
-    while True:
-        try:
-            msg = conn.recv()
-        except (EOFError, OSError):
-            return                          # parent gone: nothing to ack to
-        kind = msg[0]
-        try:
-            if kind == "close":
-                return
-            if kind == "drain":
-                conn.send(("drained", msg[1], watermark, err))
-                continue
-            if kind == "image":
-                conn.send(("image", store.image_tables, store.image_accs,
-                           store.trainer_image))
-                continue
-            if err is not None:             # fail-stop: drop applies
-                continue
-            seq, step = msg[1], msg[2]
-            try:
-                if kind == "full":
-                    spool = msg[3]
-                    with np.load(spool) as z:
-                        tabs = [z[f"table_{t}"]
-                                for t in range(len(spec.table_sizes))]
-                        accs = [z[f"acc_{t}"]
-                                for t in range(len(spec.table_sizes))]
-                    store.apply_full(tabs, accs, step, seq)
-                elif kind == "rows":
-                    table, rows, vals, avs = msg[3:]
-                    store.apply_rows(table, rows, vals, avs, step, seq)
-                elif kind == "trainer":
-                    store.apply_trainer(msg[3], step, seq)
-                else:
-                    raise ValueError(f"unknown command {kind!r}")
-                watermark = seq             # durable: apply + persist done
-                conn.send(("ack", seq, store.applied.pop()))
-            except BaseException as e:      # latch + report, keep serving
-                err = f"{type(e).__name__}: {e}"
-                conn.send(("error", seq, err))
-        except (BrokenPipeError, OSError):
-            return                          # parent gone mid-reply
-
-
-class ProcessShardWriter:
-    """Parent-side handle for one shard's writer process.
-
-    Same poisoning surface as the thread backend's applier: ``error`` holds
-    the latched failure (apply error or process death) and every later
-    ``submit_*`` raises ``RuntimeError`` so the fleet's router counts the
-    work as dropped.  Accounting (``bytes_written`` / ``save_events`` /
-    ``applied``) is fed by the worker's acks, pumped opportunistically on
-    every submit and exhaustively by the DRAIN barrier — so like the thread
-    backend it is exact only after a fence.
-    """
-
-    def __init__(self, shard: int, spec: EmbShardSpec, seed_tables,
-                 seed_accs, trainer_image=None,
-                 directory: Optional[str] = None):
-        self.shard = shard
-        self.spec = spec
-        self.directory = directory
-        self.bytes_written = 0
-        self.save_events = 0
-        self.applied: List[dict] = []   # acked events since last collect
-        self.durable_seq = 0            # last drain-confirmed watermark
-        self._exc: Optional[BaseException] = None
-        self._spawn(seed_tables, seed_accs, trainer_image)
-
-    # ------------------------------------------------------------ spawn ----
-    def _spawn(self, seed_tables, seed_accs, trainer_image):
-        ctx = mp.get_context("spawn")   # no fork: the trainer holds jax
-        self._conn, child = ctx.Pipe()  # threads/locks a fork would clone
-        seed = ([np.asarray(t) for t in seed_tables],
-                [np.asarray(a) for a in seed_accs], trainer_image)
-        self.proc = ctx.Process(
-            target=_worker_main,
-            args=(child, self.shard, self.spec, self.directory, seed),
-            name=f"cpr-shard-writer-{self.shard}", daemon=True)
-        self.proc.start()
-        child.close()                   # child's end lives in the child now
-
-    @property
-    def pid(self) -> Optional[int]:
-        return self.proc.pid
-
-    @property
-    def error(self) -> Optional[BaseException]:
-        """The latched failure, if any (fail-stop: it never clears)."""
-        return self._exc
-
-    def _latch(self, why: str):
-        if self._exc is None:
-            code = self.proc.exitcode
-            self._exc = WriterProcError(
-                f"shard {self.shard} writer process (pid {self.proc.pid}) "
-                f"{why}" + (f" [exitcode {code}]" if code is not None else ""))
-
-    # --------------------------------------------------------- reply pump --
-    def _dispatch(self, msg) -> str:
-        """Fold one worker reply into parent-side state; returns its kind."""
-        kind = msg[0]
-        if kind == "ack":
-            ev = msg[2]
-            self.bytes_written += ev["bytes"]
-            self.save_events += 1
-            self.applied.append(ev)
-        elif kind == "error":
-            if self._exc is None:
-                self._exc = WriterProcError(
-                    f"shard {self.shard} writer apply failed "
-                    f"(seq {msg[1]}): {msg[2]}")
-        return kind
-
-    def pump(self):
-        """Fold every already-available reply without blocking (keeps the
-        worker's reply pipe from filling between fences).  Safe on a dead
-        worker: its buffered acks — saves it durably applied+persisted
-        before dying — are still folded, so the fence can stamp them."""
-        try:
-            while self._conn.poll(0):
-                self._dispatch(self._conn.recv())
-        except (EOFError, OSError):
-            self._latch("died")
-
-    _pump = pump                    # internal alias
-
-    def _recv_until(self, want: str, timeout: float):
-        """Consume replies until one of kind ``want`` arrives; None on
-        worker death or timeout (the caller poisons the shard)."""
-        deadline = time.monotonic() + timeout
-        while True:
-            remaining = deadline - time.monotonic()
-            if remaining <= 0:
-                self._latch(f"missed {want} deadline ({timeout:.0f}s)")
-                return None
-            try:
-                if self._conn.poll(min(remaining, 0.05)):
-                    msg = self._conn.recv()
-                    if self._dispatch(msg) == want:
-                        return msg
-                elif not self.proc.is_alive():
-                    # dead — but the pipe may still hold buffered replies
-                    while self._conn.poll(0):
-                        msg = self._conn.recv()
-                        if self._dispatch(msg) == want:
-                            return msg
-                    self._latch("died")
-                    return None
-            except (EOFError, OSError):
-                self._latch("died")
-                return None
-
-    # ----------------------------------------------------------- submits ---
-    def _send(self, msg):
-        if self._exc is not None:
-            raise RuntimeError("shard writer process failed") from self._exc
-        self._pump()
-        try:
-            self._conn.send(msg)
-        except (BrokenPipeError, OSError) as e:
-            self._latch("died")
-            raise RuntimeError("shard writer process died") from e
-
-    def submit_full(self, spool_path: str, step: int, seq: int):
-        self._send(("full", seq, step, spool_path))
-
-    def submit_rows(self, table: int, rows, values, acc_values, step: int,
-                    seq: int):
-        self._send(("rows", seq, step, table, np.asarray(rows),
-                    np.asarray(values), np.asarray(acc_values)))
-
-    def submit_trainer(self, tree, step: int, seq: int):
-        self._send(("trainer", seq, step, tree))
-
-    # ------------------------------------------------------ DRAIN barrier --
-    def send_drain(self, token: int) -> bool:
-        """Phase-1 broadcast half: enqueue the DRAIN marker.  Returns False
-        (and latches) when the worker is already unreachable."""
-        try:
-            self._send(("drain", token))
-            return True
-        except RuntimeError:
-            return False
-
-    def wait_drained(self, token: int,
-                     timeout: float = DRAIN_TIMEOUT_S) -> bool:
-        """Phase-1 collect half: block until the worker acks the DRAIN
-        marker (all prior applies done **and persisted**), folding every
-        in-flight ack on the way.  Updates ``durable_seq`` from the acked
-        watermark.  False — with the shard latched poisoned — on worker
-        death, apply error, or deadline miss."""
-        while True:
-            msg = self._recv_until("drained", timeout)
-            if msg is None:
-                return False
-            _, got_token, watermark, err = msg
-            self.durable_seq = max(self.durable_seq, watermark)
-            if err is not None and self._exc is None:
-                self._exc = WriterProcError(
-                    f"shard {self.shard} writer apply failed: {err}")
-            if got_token == token:
-                return self._exc is None
-            # stale token from an earlier aborted fence: keep consuming
-
-    def collect_applied(self) -> List[dict]:
-        """Hand the acked-event log to the coordinator (post-drain)."""
-        out, self.applied = self.applied, []
-        return out
-
-    # ------------------------------------------------------------ queries --
-    def fetch_image(self, timeout: float = DRAIN_TIMEOUT_S):
-        """Pull (image_tables, image_accs, trainer_image) back from the
-        worker; None when the worker is unreachable."""
-        try:
-            self._send(("image",))
-        except RuntimeError:
-            return None
-        msg = self._recv_until("image", timeout)
-        if msg is None:
-            return None
-        return msg[1], msg[2], msg[3]
-
-    # ------------------------------------------------------------- admin ---
-    def kill(self):
-        """Hard-kill the worker (SIGKILL) — the crash-injection surface the
-        recovery suite drives; also usable as an operator failure drill."""
-        if self.proc.is_alive():
-            self.proc.kill()
-        self.proc.join(timeout=5.0)
-        self._latch("was killed")
-
-    def respawn(self, seed_tables, seed_accs, trainer_image=None):
-        """Re-admission: replace a dead/poisoned worker with a fresh process
-        seeded from the caller's last-good image slices.  Clears the latch;
-        the caller is responsible for shipping a fresh full of whatever the
-        old worker missed."""
-        try:
-            self._conn.close()
-        except OSError:
-            pass
-        if self.proc.is_alive():
-            self.proc.kill()
-        self.proc.join(timeout=5.0)
-        self._exc = None
-        self.applied = []
-        self._spawn(seed_tables, seed_accs, trainer_image)
-
-    def close(self):
-        """Best-effort shutdown; never raises."""
-        try:
-            self._conn.send(("close",))
-        except (BrokenPipeError, OSError):
-            pass
-        self.proc.join(timeout=5.0)
-        if self.proc.is_alive():
-            self.proc.kill()
-            self.proc.join(timeout=5.0)
-        try:
-            self._conn.close()
-        except OSError:
-            pass
+# historical names
+ProcessShardWriter = PipeEndpoint
+_worker_main = serve_shard
 
 
 def spool_full_snapshot(spool_dir: str, seq: int, snap_tables,
                         snap_accs) -> str:
     """Write ONE uncompressed .npz of the full (tables, accs) snapshot that
-    every shard's worker will slice locally — the process-backend analogue
-    of the thread backend's shared immutable host snapshot.  Uncompressed:
-    this write is on the save-event critical path; the workers' per-shard
-    persists (off the critical path) stay compressed."""
-    os.makedirs(spool_dir, exist_ok=True)
-    path = os.path.join(spool_dir, f"spool_e{seq}.npz")
-    arrs = {}
-    for t, (tab, acc) in enumerate(zip(snap_tables, snap_accs)):
-        arrs[f"table_{t}"] = np.asarray(tab)
-        arrs[f"acc_{t}"] = np.asarray(acc)
-    np.savez(path, **arrs)
-    return path
+    every shard's worker will slice locally — kept for callers of the old
+    spool API; the pipe transport now prefers shared memory."""
+    return SpoolSnapshot(seq, spool_dir, snap_tables, snap_accs).path
+
+
+__all__ = ["DRAIN_TIMEOUT_S", "PipeEndpoint", "PipeTransport",
+           "ProcessShardWriter", "WriterProcError", "serve_shard",
+           "spool_full_snapshot", "_worker_main"]

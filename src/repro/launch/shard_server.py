@@ -1,0 +1,109 @@
+"""Remote shard-writer host: Emb-PS shard checkpoint writers over TCP.
+
+Runs the same writer apply loop as the in-process / pipe transports
+(``repro.core.transport.serve_shard``), but behind a TCP listener speaking
+the length-prefixed frame protocol — so shard writers on *other hosts*
+join the coordinator's DRAIN/STAMP fence.  The server itself is stateless
+between connections: each accepted connection starts with a ``spawn``
+message carrying the shard id, shard spec, directory and seed image, and
+then becomes one writer incarnation.  Re-admission after a crash or
+partition is simply a fresh connection with a fresh seed — the coordinator
+drives it (``SocketEndpoint.respawn``).
+
+The server never imports jax: it is numpy + sockets only, so it is cheap
+to start and a trainer-side accelerator wedge cannot corrupt it.
+
+CLI (one per writer host; the coordinator is pointed at them with
+``train.py --transport socket --shard-servers host:port,...``)::
+
+    PYTHONPATH=src python -m repro.launch.shard_server --host 0.0.0.0 \
+        --port 7070
+
+With ``--port 0`` the kernel picks a free port, printed on stdout as
+``listening on <host>:<port>``.  The per-shard checkpoint directory named
+in the ``spawn`` message is a *server-local* path: in a multi-host fleet,
+point it at storage the recovery job can read (shared fs), or ship the
+shard directories before running ``load_latest`` (docs/recovery.md).
+"""
+from __future__ import annotations
+
+import argparse
+import socket
+import threading
+
+from repro.core.checkpoint import EmbShardSpec
+from repro.core.transport import SockChannel, serve_shard
+
+
+def _handle_conn(sock: socket.socket):
+    """One connection == one writer incarnation: read the spawn message,
+    then run the shard apply loop until the peer goes away."""
+    chan = SockChannel(sock)
+    try:
+        msg = chan.recv()
+    except (EOFError, OSError):
+        chan.close()
+        return
+    try:
+        if msg[0] != "spawn":
+            return
+        (_, shard, table_sizes, n_shards, directory,
+         seed_t, seed_a, seed_tr, fsync) = msg
+        spec = EmbShardSpec(table_sizes, n_shards)
+        serve_shard(chan, shard, spec, directory,
+                    (seed_t, seed_a, seed_tr), fsync_payloads=fsync)
+    finally:
+        chan.close()
+
+
+def serve(host: str = "127.0.0.1", port: int = 0, ready_cb=None,
+          _accept_forever: bool = True) -> None:
+    """Bind, listen, and serve writer connections until killed.  Each
+    connection runs in its own thread (a host typically serves several
+    shards of one fleet, plus re-admission reconnects)."""
+    srv = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+    srv.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+    srv.bind((host, port))
+    srv.listen(64)
+    bound = srv.getsockname()
+    if ready_cb is not None:
+        ready_cb(bound[0], bound[1])
+    while True:
+        try:
+            conn, _ = srv.accept()
+        except OSError:
+            return
+        t = threading.Thread(target=_handle_conn, args=(conn,),
+                             name="cpr-shard-conn", daemon=True)
+        t.start()
+        if not _accept_forever:         # test hook: serve one connection
+            return
+
+
+def spawned_server_main(conn, host: str):
+    """Auto-spawn entry point (``SocketEndpoint`` launches one loopback
+    server per shard): bind port 0 and report the real address back over
+    the bootstrap pipe before serving."""
+    def ready(h, p):
+        conn.send((h, p))
+        conn.close()
+
+    serve(host, 0, ready_cb=ready)
+
+
+def main():
+    ap = argparse.ArgumentParser(
+        description="host remote CPR shard checkpoint writers")
+    ap.add_argument("--host", default="0.0.0.0")
+    ap.add_argument("--port", type=int, default=7070,
+                    help="TCP port (0 = pick a free one)")
+    args = ap.parse_args()
+
+    def ready(h, p):
+        print(f"listening on {h}:{p}", flush=True)
+
+    serve(args.host, args.port, ready_cb=ready)
+
+
+if __name__ == "__main__":
+    main()

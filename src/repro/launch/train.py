@@ -41,7 +41,8 @@ def train(cfg, steps=200, batch=8, seq=128, lr=0.005, mode="cpr-mfu",
           checkpoint_dir=None, log_every=20, use_flash=False,
           async_save=False, tracker_backend="pallas", sharded_save=False,
           delta_saves=None, n_emb=8, resume=False, writer_procs=False,
-          readmit=False):
+          readmit=False, transport=None, shard_addrs=None,
+          heartbeat_interval=None, readmit_backoff=0.0):
     """Returns (final_params, history dict)."""
     assert cfg.causal and cfg.modality_frontend is None, \
         "LM driver needs a causal text model"
@@ -58,7 +59,10 @@ def train(cfg, steps=200, batch=8, seq=128, lr=0.005, mode="cpr-mfu",
                      directory=checkpoint_dir, async_save=async_save,
                      tracker_backend=tracker_backend,
                      sharded_save=sharded_save, delta_saves=delta_saves,
-                     writer_procs=writer_procs, readmit=readmit)
+                     writer_procs=writer_procs, readmit=readmit,
+                     transport=transport, shard_addrs=shard_addrs,
+                     heartbeat_interval=heartbeat_interval,
+                     readmit_backoff=readmit_backoff)
     if resume and checkpoint_dir:
         # warm start from the last consistent cycle on disk: embedding rows,
         # their optimizer rows, and the non-embedding trainer tree
@@ -160,7 +164,27 @@ def main():
                          "sharded partial saves")
     ap.add_argument("--writer-procs", action="store_true",
                     help="run each shard writer in its own OS process "
-                         "(crash-isolated; implies --sharded-save)")
+                         "(crash-isolated; implies --sharded-save; alias "
+                         "for --transport pipe)")
+    ap.add_argument("--transport", choices=("inproc", "pipe", "socket"),
+                    default=None,
+                    help="writer-fleet transport: in-process applier "
+                         "threads, per-shard OS processes (shared-memory "
+                         "snapshots), or TCP to repro.launch.shard_server "
+                         "hosts (implies --sharded-save unless inproc)")
+    ap.add_argument("--shard-servers", default=None,
+                    help="comma-separated host:port list, one per shard, "
+                         "of externally launched shard_server hosts "
+                         "(socket transport; default: auto-spawn local "
+                         "loopback servers)")
+    ap.add_argument("--heartbeat-interval", type=float, default=None,
+                    help="seconds between proactive writer liveness "
+                         "probes (default: only discover dead writers at "
+                         "submit/fence time)")
+    ap.add_argument("--readmit-backoff", type=float, default=0.0,
+                    help="base seconds of exponential re-admission "
+                         "back-off for crash-looping shards (0 = retry "
+                         "at every boundary)")
     ap.add_argument("--readmit", action="store_true",
                     help="respawn poisoned shard writers at the next cycle "
                          "boundary and reseed them (fresh full of their "
@@ -174,6 +198,12 @@ def main():
                     default="pallas")
     args = ap.parse_args()
     cfg = build_cfg(args)
+    shard_addrs = None
+    if args.shard_servers:
+        shard_addrs = []
+        for hp in args.shard_servers.split(","):
+            host, port = hp.rsplit(":", 1)
+            shard_addrs.append((host, int(port)))
     _, hist = train(cfg, steps=args.steps, batch=args.batch, seq=args.seq,
                     lr=args.lr, mode=args.mode, n_failures=args.failures,
                     target_pls=args.target_pls,
@@ -183,6 +213,9 @@ def main():
                     delta_saves=(False if args.no_delta_saves else None),
                     n_emb=args.n_emb, resume=args.resume,
                     writer_procs=args.writer_procs, readmit=args.readmit,
+                    transport=args.transport, shard_addrs=shard_addrs,
+                    heartbeat_interval=args.heartbeat_interval,
+                    readmit_backoff=args.readmit_backoff,
                     tracker_backend=args.tracker_backend)
     r = hist["report"]
     o = r["overheads"]

@@ -1,8 +1,10 @@
-"""Crash-injection recovery suite for the process-isolated writer fleet.
+"""Crash-injection recovery suite for the remote writer transports.
 
-These tests SIGKILL real writer processes at arbitrary points inside
-``save_full`` / ``save_rows`` and assert the CPR recovery contract the
-paper's overhead numbers depend on:
+These tests SIGKILL real writer processes (pipe transport) and remote
+``shard_server`` hosts (socket transport) at arbitrary points inside
+``save_full`` / ``save_rows`` — and sever live TCP connections mid-DRAIN —
+then assert the CPR recovery contract the paper's overhead numbers depend
+on:
 
   * ``load_latest`` lands **exactly** on the last stamped cycle — per
     shard, never newer than the last cycle stamp (unacked work is not
@@ -25,6 +27,7 @@ import time
 
 import numpy as np
 import pytest
+from hypothesis_compat import given, settings, st
 
 from repro.core import (CPRManager, EmbShardSpec, ShardedCheckpointWriter,
                         ShardSaveError, SystemParams)
@@ -55,7 +58,8 @@ def new_fleet(tables, accs, spec, tmp_path, **kw):
 
 def sigkill(fleet, j):
     """Kill shard j's writer the way a node failure would: SIGKILL, no
-    cleanup, no goodbye."""
+    cleanup, no goodbye.  (Pipe transport: the writer process; socket
+    transport: the remote shard_server hosting the writer.)"""
     os.kill(fleet.procs[j].pid, signal.SIGKILL)
 
 
@@ -73,16 +77,19 @@ def stamped_events(tmp_path):
     return (evs[:last] if last is not None else []), run_dir
 
 
+@pytest.mark.parametrize("backend", ["process", "socket"])
 @pytest.mark.parametrize("kill_delay_s", [0.0, 0.05])
 def test_sigkill_mid_save_full_recovers_to_last_stamp(tmp_path,
-                                                      kill_delay_s):
-    """SIGKILL one writer while a save_full is in flight: recovery must be
-    exactly v1 (the last stamp) or exactly v2 (if the shard acked before
-    dying and the fence stamped it) for the killed shard — never a torn
-    mix — and exactly v2 for every healthy shard."""
+                                                      kill_delay_s,
+                                                      backend):
+    """SIGKILL one writer while a save_full is in flight — the pipe worker
+    process, or the remote shard_server hosting the socket writer:
+    recovery must be exactly v1 (the last stamp) or exactly v2 (if the
+    shard acked before dying and the fence stamped it) for the killed
+    shard — never a torn mix — and exactly v2 for every healthy shard."""
     tables, accs = make_state()
     spec = EmbShardSpec(SIZES, 4)
-    fleet = new_fleet(tables, accs, spec, tmp_path)
+    fleet = new_fleet(tables, accs, spec, tmp_path, backend=backend)
     v1_t = [t + 1 for t in tables]
     v1_a = [a + 1 for a in accs]
     fleet.save_full(v1_t, v1_a, step=1)
@@ -190,7 +197,7 @@ def test_trainer_continues_with_shard_poisoned(tmp_path):
         mgr.run_save(mgr.save_interval * s, [t + s for t in tables],
                      [a + s for a in accs], {}, step=s)
     rep = mgr.report()
-    assert rep["writer_backend"] == "process"
+    assert rep["writer_backend"] == "pipe"
     assert rep["poisoned_shards"] == [3]
     assert rep["shard_failures"] == [3]
     assert rep["shard_readmissions"] == 0
@@ -302,6 +309,160 @@ def test_emulator_survives_writer_kill_and_resumes(tmp_path):
     r2 = Emulator(cfg, ds, mgr2, inj2, batch_size=256).run(
         max_steps=3, resume_from=str(tmp_path))
     assert np.isfinite(r2.final_loss)
+
+
+def test_socket_server_killed_mid_save_rows_recovers_to_stamp(tmp_path):
+    """Socket transport: SIGKILL the remote shard_server between a burst of
+    save_rows.  The killed shard's recovered image must equal the oracle
+    replay of exactly the stamped events — the same contract the pipe
+    transport satisfies, now over TCP."""
+    tables, accs = make_state()
+    spec = EmbShardSpec(SIZES, 2)
+    fleet = new_fleet(tables, accs, spec, tmp_path, backend="socket")
+    v1_t = [t + 1 for t in tables]
+    v1_a = [a + 1 for a in accs]
+    fleet.save_full(v1_t, v1_a, step=0)
+    fleet.fence()                                  # cycle 1
+    rng = np.random.default_rng(9)
+    for k in range(6):
+        rows = rng.choice(SIZES[0], size=512, replace=False)
+        vals = np.full((rows.size, DIM), 20.0 + k, np.float32)
+        fleet.save_rows(0, rows, vals,
+                        np.full(rows.size, 20.0 + k, np.float32), step=k)
+        if k == 3:
+            sigkill(fleet, 0)                      # the server, mid-burst
+    with pytest.raises(ShardSaveError) as ei:
+        fleet.fence()                              # cycle 2
+    assert sorted(ei.value.shard_errors) == [0]
+    fleet.close()
+
+    stamped, run_dir = stamped_events(tmp_path)
+    loaded = ShardedCheckpointWriter.load_latest(
+        str(tmp_path), tables, accs, spec)
+    lt, la, _ = loaded.restore_all()
+    orc_t = [np.array(t) for t in v1_t]
+    orc_a = [np.array(a) for a in v1_a]
+    for e in stamped:
+        if e["kind"] != "partial":
+            continue
+        path = os.path.join(run_dir, f"shard_{e['shard']}", e["file"])
+        with np.load(path) as z:                   # stamped => never torn
+            t = int(z["table"])
+            orc_t[t][z["rows"]] = z["values"]
+            orc_a[t][z["rows"]] = z["accs"]
+    for t in range(len(SIZES)):
+        np.testing.assert_array_equal(lt[t], orc_t[t])
+        np.testing.assert_array_equal(la[t], orc_a[t])
+
+
+def test_socket_severed_mid_drain_recovers_to_last_stamp(tmp_path):
+    """Socket transport: cut shard 1's TCP connection while the DRAIN
+    barrier is in flight (saves still queued).  Only that shard is
+    poisoned, the healthy shards' cycle stamps, and recovery lands exactly
+    on the stamped state — a partitioned writer can cost its own shard's
+    tail, never the fence."""
+    tables, accs = make_state()
+    spec = EmbShardSpec(SIZES, 2)
+    fleet = new_fleet(tables, accs, spec, tmp_path, backend="socket",
+                      drain_timeout=10.0)
+    fleet.save_full([t + 1 for t in tables], [a + 1 for a in accs], step=1)
+    fleet.fence()                                  # cycle 1: both shards
+    fleet.save_full([t + 2 for t in tables], [a + 2 for a in accs], step=2)
+    # sever concurrently with the drain broadcast/collect
+    t = time.time()
+    sever = __import__("threading").Timer(0.01, fleet.procs[1].sever)
+    sever.start()
+    try:
+        fleet.fence()                              # cycle 2
+        severed_late = True                        # drain won the race
+    except ShardSaveError as e:
+        severed_late = False
+        assert sorted(e.shard_errors) == [1]
+    sever.join()
+    fleet.close()
+    assert time.time() - t < fleet._drain_timeout + 15.0
+    lt, la, _ = ShardedCheckpointWriter.load_latest(
+        str(tmp_path), tables, accs, spec).restore_all()
+    for tt in range(len(SIZES)):
+        lo, hi = spec.shard_range(tt, 0)           # healthy shard: v2
+        np.testing.assert_array_equal(lt[tt][lo:hi],
+                                      (tables[tt] + 2)[lo:hi])
+        lo, hi = spec.shard_range(tt, 1)           # severed: v1 or v2 whole
+        if hi > lo:
+            is_v1 = np.array_equal(lt[tt][lo:hi], (tables[tt] + 1)[lo:hi])
+            is_v2 = np.array_equal(lt[tt][lo:hi], (tables[tt] + 2)[lo:hi])
+            assert is_v1 or is_v2, "torn image on severed shard"
+            if severed_late:
+                assert is_v2, "drained+stamped save lost"
+
+
+def _drive_socket_interleaving(root, seed, n_ops):
+    """One random kill/readmit/fence/save interleaving over a real socket
+    fleet (SIGKILLed servers, reconnect + reseed readmissions); asserts the
+    final convergence-to-oracle contract."""
+    sizes = (60, 9, 1)                  # 1-row table -> empty shards
+    state_t, state_a = make_state(sizes, d=8, seed=seed + 1)
+    state_t = [np.asarray(t) for t in state_t]
+    state_a = [np.asarray(a) for a in state_a]
+    spec = EmbShardSpec(sizes, 2)
+    fleet = ShardedCheckpointWriter(
+        [t.copy() for t in state_t], [a.copy() for a in state_a],
+        spec, directory=str(root), backend="socket",
+        delta_saves=True, drain_timeout=30.0)
+    rng = np.random.default_rng(seed)
+    for k in range(n_ops):
+        op = rng.random()
+        if op < 0.2:                                # server crash
+            j = int(rng.integers(2))
+            sigkill(fleet, j)
+        elif op < 0.35:                             # cycle boundary
+            fleet.fence(strict=False)
+        elif op < 0.5:                              # re-admission
+            fleet.readmit(state_t, state_a, step=k)
+        elif op < 0.7:                              # full of new state
+            for t in range(len(sizes)):
+                state_t[t] = state_t[t] + np.float32(rng.normal())
+                state_a[t] = state_a[t] + np.float32(abs(rng.normal()))
+            fleet.save_full(state_t, state_a, step=k)
+        else:                                       # partial new rows
+            t = int(rng.integers(len(sizes)))
+            rows = rng.choice(sizes[t],
+                              size=int(rng.integers(1, sizes[t] + 1)),
+                              replace=False)
+            vals = rng.normal(size=(rows.size, 8)).astype(np.float32)
+            avs = rng.random(rows.size).astype(np.float32)
+            state_t[t][rows] = vals
+            state_a[t][rows] = avs
+            fleet.save_rows(t, rows, vals, avs, step=k)
+    fleet.fence(strict=False)       # discover any not-yet-latched deaths
+    fleet.readmit(state_t, state_a, step=99)
+    fleet.fence(strict=False)
+    assert fleet.failed == {}
+    for t in range(len(sizes)):
+        np.testing.assert_array_equal(fleet.image_tables[t], state_t[t])
+        np.testing.assert_array_equal(fleet.image_accs[t], state_a[t])
+    fleet.close()
+
+
+def test_socket_readmission_interleavings_converge_to_oracle(tmp_path):
+    """The kill/readmit/fence interleaving property, driven over the socket
+    transport with real SIGKILLed shard_server processes: once every
+    poisoned shard is re-admitted and a fence stamps, every shard's image
+    must exact-match the oracle state.  Fixed seed sweep so the contract is
+    exercised even without hypothesis installed."""
+    for seed in (1, 2, 3):
+        _drive_socket_interleaving(tmp_path / f"s{seed}", seed, n_ops=8)
+
+
+@settings(max_examples=5, deadline=None)
+@given(st.integers(0, 10_000), st.integers(5, 10))
+def test_socket_readmission_property_converges_to_oracle(seed, n_ops):
+    """Hypothesis variant of the interleaving property over the socket
+    transport (bounded example count: every kill is a real server SIGKILL
+    and every readmit a real reconnect + reseed)."""
+    import tempfile
+    with tempfile.TemporaryDirectory() as tmp:
+        _drive_socket_interleaving(tmp, seed, n_ops)
 
 
 def test_acked_events_of_killed_writer_are_stamped(tmp_path):

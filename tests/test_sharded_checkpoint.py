@@ -523,40 +523,71 @@ def test_emulator_sharded_run_and_disk_resume(tmp_path):
 
 
 # ---------------------------------------------------- backend parity --------
-def test_backend_parity_thread_vs_process(tmp_path):
-    """Identical save/fence schedules through the thread-fleet and
-    process-fleet backends must produce byte-identical manifests (modulo
-    event timestamps) and byte-identical assembled images."""
+def _strip_times(m):
+    return {**m, "events": [{k: v for k, v in e.items() if k != "time"}
+                            for e in m["events"]]}
+
+
+def _drive_parity_fleet(tmp_path, label, spec, tables, accs, **kw):
+    """One deterministic save/fence schedule; returns (images, stats,
+    manifest) for cross-transport comparison."""
+    d = str(tmp_path / label)
+    fleet = ShardedCheckpointWriter(
+        [t.copy() for t in tables], [a.copy() for a in accs], spec,
+        directory=d, delta_saves=False, trainer_state=trainer_tree(0.0),
+        **kw)
+    drive(fleet, SIZES, 21, n_ops=10, with_trainer=True)
+    fleet.fence()
+    drive(fleet, SIZES, 22, n_ops=6, with_trainer=True)
+    fleet.fence()
+    imgs = fleet.restore_all()[:2]     # one per-shard image fetch
+    stats = (fleet.shard_bytes, fleet.shard_events, fleet.bytes_written)
+    fleet.close()
+    with open(os.path.join(resolve_run_dir(d), "manifest.json")) as f:
+        return imgs, stats, json.load(f)
+
+
+def test_backend_parity_across_all_transports(tmp_path):
+    """Acceptance: identical save/fence schedules through the inproc, pipe
+    and socket transports must produce byte-identical manifests (modulo
+    event timestamps) and byte-identical assembled images — the refactor's
+    honesty check.  Legacy aliases (thread/process) must normalize."""
     tables, accs = make_state()
     spec = EmbShardSpec(SIZES, 4)
-    results = {}
-    for backend in ("thread", "process"):
-        d = str(tmp_path / backend)
-        fleet = ShardedCheckpointWriter(
-            [t.copy() for t in tables], [a.copy() for a in accs], spec,
-            directory=d, backend=backend, delta_saves=False,
-            trainer_state=trainer_tree(0.0))
-        drive(fleet, SIZES, 21, n_ops=10, with_trainer=True)
-        fleet.fence()
-        drive(fleet, SIZES, 22, n_ops=6, with_trainer=True)
-        fleet.fence()
-        imgs = fleet.restore_all()[:2]     # one per-shard image fetch
-        stats = (fleet.shard_bytes, fleet.shard_events, fleet.bytes_written)
-        fleet.close()
-        with open(os.path.join(resolve_run_dir(d), "manifest.json")) as f:
-            results[backend] = (imgs, stats, json.load(f))
+    results = {
+        name: _drive_parity_fleet(tmp_path, name, spec, tables, accs,
+                                  backend=name)
+        for name in ("thread", "pipe", "socket")}   # thread == inproc alias
 
-    (t_img, t_stats, t_man) = results["thread"]
-    (p_img, p_stats, p_man) = results["process"]
+    ref_img, ref_stats, ref_man = results["thread"]
+    for name in ("pipe", "socket"):
+        img, stats, man = results[name]
+        for t in range(len(SIZES)):
+            np.testing.assert_array_equal(ref_img[0][t], img[0][t],
+                                          err_msg=f"{name} tables[{t}]")
+            np.testing.assert_array_equal(ref_img[1][t], img[1][t],
+                                          err_msg=f"{name} accs[{t}]")
+        assert stats == ref_stats, name
+        assert _strip_times(man) == _strip_times(ref_man), name
+
+
+def test_pipe_parity_shm_vs_spool_snapshots(tmp_path):
+    """The zero-copy shared-memory save_full path and the spool-file
+    fallback must be indistinguishable on disk: byte-identical manifests
+    (modulo timestamps) and images for the same schedule."""
+    tables, accs = make_state()
+    spec = EmbShardSpec(SIZES, 2)
+    results = {
+        snap: _drive_parity_fleet(tmp_path, snap, spec, tables, accs,
+                                  backend="pipe", snapshot=snap)
+        for snap in ("shm", "spool")}
+    (s_img, s_stats, s_man) = results["shm"]
+    (f_img, f_stats, f_man) = results["spool"]
     for t in range(len(SIZES)):
-        np.testing.assert_array_equal(t_img[0][t], p_img[0][t])
-        np.testing.assert_array_equal(t_img[1][t], p_img[1][t])
-    assert t_stats == p_stats
-
-    def strip(m):
-        return {**m, "events": [{k: v for k, v in e.items() if k != "time"}
-                                for e in m["events"]]}
-    assert strip(t_man) == strip(p_man)
+        np.testing.assert_array_equal(s_img[0][t], f_img[0][t])
+        np.testing.assert_array_equal(s_img[1][t], f_img[1][t])
+    assert s_stats == f_stats
+    assert _strip_times(s_man) == _strip_times(f_man)
 
 
 # ------------------------------------------------- re-admission property ----

@@ -1,0 +1,372 @@
+"""Transport-layer tests: wire codec, channels, snapshot shipping, payload
+fsync, heartbeat liveness, re-admission back-off, and the atomic-respawn
+regression.
+
+Cross-transport behavioral parity (byte-identical manifests/images) lives
+in tests/test_sharded_checkpoint.py; SIGKILL crash injection (pipe workers
+and socket servers) lives in tests/test_crash_recovery.py.
+"""
+import os
+import socket as socket_mod
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import EmbShardSpec, ShardedCheckpointWriter, ShardSaveError
+from repro.core.transport import (InprocTransport, PipeEndpoint, ShmSnapshot,
+                                  SliceSnapshot, SockChannel, SpoolSnapshot,
+                                  _apply_full_payload, _ShardStore,
+                                  normalize_transport, pack_msg, unpack_msg)
+
+SIZES = (40, 17, 3)
+
+
+def make_state(sizes=SIZES, d=8, seed=0):
+    rng = np.random.default_rng(seed)
+    tables = [rng.normal(size=(n, d)).astype(np.float32) for n in sizes]
+    accs = [np.zeros(n, np.float32) for n in sizes]
+    return tables, accs
+
+
+# ------------------------------------------------------------- codec --------
+def test_codec_roundtrips_protocol_values():
+    rng = np.random.default_rng(3)
+    cases = [
+        None, True, False, 0, -1, 2**40, 3.5, float("inf"), "", "drain",
+        b"\x00\xffraw", [], (), {}, ("ack", 7, {"kind": "full", "bytes": 12}),
+        {"nested": [1, (2, None), {"k": b"v"}]},
+        rng.normal(size=(5, 3)).astype(np.float32),
+        np.arange(7, dtype=np.int64),
+        np.zeros((0, 4), np.float32),          # empty shard slices
+        np.float32(1.5), np.int64(9),          # numpy scalars -> python
+    ]
+    for obj in cases:
+        got = unpack_msg(pack_msg(obj))
+        if isinstance(obj, np.ndarray):
+            assert got.dtype == obj.dtype and got.shape == obj.shape
+            np.testing.assert_array_equal(got, obj)
+        elif isinstance(obj, np.generic):
+            assert got == obj.item()
+        else:
+            assert got == obj
+
+
+def test_codec_rejects_unencodable_and_torn_frames():
+    with pytest.raises(TypeError):
+        pack_msg(object())
+    with pytest.raises(ValueError):
+        unpack_msg(pack_msg(("x",)) + b"junk")
+
+
+def test_sock_channel_frames_large_and_interleaved_messages():
+    a, b = socket_mod.socketpair()
+    ca, cb = SockChannel(a), SockChannel(b)
+    big = np.random.default_rng(0).normal(size=(2000, 64)).astype(np.float32)
+    msgs = [("full", 1, 0, ("slices", [big], [big[:, 0]])),
+            ("drain", 7), ("ping", 1)]
+
+    def sender():
+        for m in msgs:
+            ca.send(m)
+    t = threading.Thread(target=sender)
+    t.start()
+    got = []
+    while len(got) < len(msgs):
+        assert cb.poll(5.0)
+        got.append(cb.recv())
+    t.join()
+    assert got[1] == ("drain", 7) and got[2] == ("ping", 1)
+    np.testing.assert_array_equal(got[0][3][1][0], big)
+    ca.close()
+    with pytest.raises(EOFError):
+        cb.poll(0.2), cb.recv()
+    cb.close()
+
+
+def test_normalize_transport_aliases():
+    assert normalize_transport("thread") == "inproc"
+    assert normalize_transport("process") == "pipe"
+    assert normalize_transport("socket") == "socket"
+    with pytest.raises(ValueError):
+        normalize_transport("carrier-pigeon")
+
+
+# ------------------------------------------------- snapshot shipping --------
+@pytest.mark.parametrize("make_ref", [
+    lambda tmp, t, a: ShmSnapshot(5, t, a),
+    lambda tmp, t, a: SpoolSnapshot(5, str(tmp), t, a),
+])
+def test_full_snapshot_payloads_apply_identically(tmp_path, make_ref):
+    """shm and spool payloads must produce the exact apply the inline
+    arrays would — the worker-side _apply_full_payload is one code path."""
+    tables, accs = make_state()
+    spec = EmbShardSpec(SIZES, 2)
+    ref = make_ref(tmp_path, [t + 3 for t in tables], [a + 3 for a in accs])
+    try:
+        for j in range(2):
+            store = _ShardStore(j, spec, tables, accs)
+            _apply_full_payload(store, spec, ref.payload_for(j), step=1,
+                                seq=5)
+            for t, (lo, hi) in enumerate(store.ranges):
+                np.testing.assert_array_equal(store.image_tables[t],
+                                              (tables[t] + 3)[lo:hi])
+            ev = store.applied[-1]
+            assert (ev["kind"], ev["seq"], ev["step"]) == ("full", 5, 1)
+    finally:
+        ref.release()
+
+
+def test_shm_snapshot_releases_segment(tmp_path):
+    tables, accs = make_state()
+    ref = ShmSnapshot(1, tables, accs)
+    name = ref._shm.name
+    from multiprocessing import shared_memory
+    seg = shared_memory.SharedMemory(name=name)   # attachable while pending
+    seg.close()
+    ref.release()
+    with pytest.raises(FileNotFoundError):
+        shared_memory.SharedMemory(name=name)
+
+
+def test_slice_snapshot_sends_only_the_shards_rows():
+    tables, accs = make_state()
+    spec = EmbShardSpec(SIZES, 4)
+    ranges = [[spec.shard_range(t, j) for t in range(len(SIZES))]
+              for j in range(4)]
+    ref = SliceSnapshot(1, tables, accs, ranges)
+    kind, t_slices, a_slices = ref.payload_for(2)
+    assert kind == "slices"
+    for t, (lo, hi) in enumerate(ranges[2]):
+        assert t_slices[t].shape[0] == hi - lo
+        np.testing.assert_array_equal(t_slices[t], tables[t][lo:hi])
+
+
+# -------------------------------------------- power-loss payload fsync ------
+def test_drain_fsyncs_payloads_before_ack(tmp_path, monkeypatch):
+    """Satellite: the durable watermark must be power-loss-true — every
+    payload persisted since the last DRAIN is fsynced (file + directory)
+    before the drain ack, not left to the page cache."""
+    synced = []
+    real_fsync = os.fsync
+
+    def counting_fsync(fd):
+        synced.append(os.readlink(f"/proc/self/fd/{fd}"))
+        return real_fsync(fd)
+    monkeypatch.setattr(os, "fsync", counting_fsync)
+
+    tables, accs = make_state()
+    spec = EmbShardSpec(SIZES, 2)
+    fleet = ShardedCheckpointWriter(tables, accs, spec,
+                                    directory=str(tmp_path),
+                                    backend="inproc", delta_saves=False)
+    fleet.save_full([t + 1 for t in tables], [a + 1 for a in accs], step=1)
+    fleet.save_rows(0, np.arange(4), np.full((4, 8), 2.0, np.float32),
+                    np.full(4, 2.0, np.float32), step=2)
+    pre_stamp = list(synced)
+    assert not any(p.endswith(".npz") for p in pre_stamp), \
+        "payload fsync must be batched at DRAIN, not per save"
+    fleet.fence()
+    # every persisted payload file and its shard directory got synced, and
+    # they were synced BEFORE the manifest stamp hit the log
+    stamp_at = next(i for i, p in enumerate(synced)
+                    if "manifest.json" in p)
+    payload_syncs = [p for p in synced[:stamp_at] if p.endswith(".npz")]
+    on_disk = [os.path.join(r, f) for r, _, fs in os.walk(tmp_path)
+               for f in fs if f.endswith(".npz")]
+    assert sorted(payload_syncs) == sorted(on_disk)
+    dir_syncs = {p for p in synced[:stamp_at] if "shard_" in p
+                 and not p.endswith(".npz")}
+    assert dir_syncs            # the directory entries are durable too
+    # a second fence with nothing new pending syncs no further payloads
+    n = len([p for p in synced if p.endswith(".npz")])
+    fleet.fence()
+    assert len([p for p in synced if p.endswith(".npz")]) == n
+    fleet.close()
+
+
+def test_fence_fsyncs_dead_shards_acked_payloads(tmp_path, monkeypatch):
+    """A shard that died with acked-but-never-drained events: the
+    coordinator itself fsyncs those payloads before stamping them."""
+    tables, accs = make_state()
+    spec = EmbShardSpec(SIZES, 2)
+    fleet = ShardedCheckpointWriter(tables, accs, spec,
+                                    directory=str(tmp_path),
+                                    backend="pipe", delta_saves=False,
+                                    drain_timeout=30.0)
+    rows = np.arange(4)                          # shard 0 rows
+    fleet.save_rows(0, rows, np.full((4, 8), 5.0, np.float32),
+                    np.full(4, 5.0, np.float32), step=1)
+    # wait until the ack (apply + persist done) is buffered, then kill
+    deadline = time.time() + 15.0
+    while not fleet.procs[0]._conn.poll(0) and time.time() < deadline:
+        time.sleep(0.01)
+    assert fleet.procs[0]._conn.poll(0)
+    fleet.procs[0].kill()
+
+    synced = []
+    real_fsync = os.fsync
+
+    def counting_fsync(fd):
+        synced.append(os.readlink(f"/proc/self/fd/{fd}"))
+        return real_fsync(fd)
+    monkeypatch.setattr(os, "fsync", counting_fsync)
+    with pytest.raises(ShardSaveError):
+        fleet.fence()
+    assert any("shard_0" in p and p.endswith(".npz") for p in synced), \
+        "dead shard's stamped payloads were not fsynced by the coordinator"
+    fleet.close()
+
+
+# ------------------------------------------------------- heartbeat ----------
+def test_heartbeat_detects_dead_pipe_writer_without_a_save(tmp_path):
+    """Satellite: with heartbeat_interval set, a writer that dies between
+    saves is latched proactively by the monitor thread — no submit or
+    fence required.  (The fold into the poisoned-shard set is owned by the
+    trainer thread: check_health / the next routing or fence.)"""
+    tables, accs = make_state()
+    spec = EmbShardSpec(SIZES, 2)
+    fleet = ShardedCheckpointWriter(tables, accs, spec, backend="pipe",
+                                    delta_saves=False,
+                                    heartbeat_interval=0.05)
+    fleet.procs[1].proc.kill()          # die silently, no latch
+    deadline = time.time() + 10.0
+    while fleet.procs[1].error is None and time.time() < deadline:
+        time.sleep(0.02)
+    assert fleet.procs[1].error is not None   # latched with no save traffic
+    assert "heartbeat" in str(fleet.procs[1].error)
+    assert fleet.check_health() == [1]        # trainer-thread fold
+    assert 1 in fleet.failed
+    assert 0 not in fleet.failed              # only the dead shard poisoned
+    fleet.close()
+
+
+def test_check_health_probes_socket_server(tmp_path):
+    """Direct check_health: a SIGKILLed shard server is detected by the
+    probe; the severed-connection path is detected by the next probe's
+    ping bookkeeping or stream error."""
+    tables, accs = make_state()
+    spec = EmbShardSpec(SIZES, 2)
+    fleet = ShardedCheckpointWriter(tables, accs, spec, backend="socket",
+                                    delta_saves=False)
+    assert fleet.check_health() == []
+    fleet.procs[0]._server_proc.kill()
+    fleet.procs[0]._server_proc.join(timeout=5.0)
+    assert fleet.check_health() == [0]
+    assert 0 in fleet.failed
+    fleet.close()
+
+
+# -------------------------------------------- re-admission back-off ---------
+def test_readmit_backoff_throttles_crash_looping_shard():
+    """Satellite: with readmit_backoff, a shard that keeps dying is
+    re-admitted on an exponential schedule instead of thrashing the fleet;
+    a shard that stays healthy through a stamped cycle starts over."""
+    tables, accs = make_state()
+    spec = EmbShardSpec(SIZES, 2)
+    fleet = ShardedCheckpointWriter(tables, accs, spec, backend="inproc",
+                                    delta_saves=False,
+                                    readmit_backoff=30.0)
+    fleet.kill_shard(1)
+    assert fleet.readmit(tables, accs, step=1) == [1]   # first: immediate
+    fleet.kill_shard(1)                                 # crash loop
+    assert fleet.readmit(tables, accs, step=2) == []    # throttled
+    assert 1 in fleet.failed                            # still poisoned
+    not_before = fleet._readmit_not_before[1]
+    assert not_before > time.monotonic()
+    # back-off elapses -> eligible again, and the delay doubles
+    fleet._readmit_not_before[1] = 0.0
+    assert fleet.readmit(tables, accs, step=3) == [1]
+    assert (fleet._readmit_not_before[1] - time.monotonic()) > 45.0
+    # surviving a stamped cycle resets the attempt counter
+    fleet.fence()
+    assert fleet._readmit_attempts[1] == 0
+    fleet.close()
+
+
+def test_readmit_without_backoff_retries_every_boundary():
+    tables, accs = make_state()
+    spec = EmbShardSpec(SIZES, 2)
+    fleet = ShardedCheckpointWriter(tables, accs, spec, backend="inproc",
+                                    delta_saves=False)
+    for k in range(3):
+        fleet.kill_shard(0)
+        assert fleet.readmit(tables, accs, step=k) == [0]
+    assert fleet.shard_readmissions == 3
+    fleet.close()
+
+
+# ------------------------------------------- atomic respawn (regression) ----
+def test_failed_respawn_leaves_shard_poisoned_not_half_registered(
+        tmp_path, monkeypatch):
+    """Regression (satellite bugfix): a respawn that fails mid-way used to
+    leave the shard half-registered — latch cleared, dead channel — so
+    routing treated it as healthy and saves vanished.  Respawn failure must
+    be atomic: the shard stays poisoned, the fleet keeps running, and the
+    next boundary's readmit retries successfully."""
+    tables, accs = make_state()
+    spec = EmbShardSpec(SIZES, 2)
+    fleet = ShardedCheckpointWriter(tables, accs, spec,
+                                    directory=str(tmp_path), backend="pipe",
+                                    delta_saves=False, drain_timeout=30.0)
+    fleet.save_full([t + 1 for t in tables], [a + 1 for a in accs], step=1)
+    fleet.fence()
+    fleet.kill_shard(1)
+
+    boom = RuntimeError("spawn refused")
+
+    def failing_spawn(self, *a, **kw):
+        raise boom
+    monkeypatch.setattr(PipeEndpoint, "_spawn", failing_spawn)
+    assert fleet.readmit([t + 2 for t in tables], [a + 2 for a in accs],
+                         step=2) == []
+    assert 1 in fleet.failed                       # still out of the fleet
+    assert fleet.procs[1].error is not None        # and unambiguously so
+    assert fleet.shard_readmissions == 0
+    # routing still drops shard 1's work and serves shard 0
+    nb = fleet.save_full([t + 3 for t in tables], [a + 3 for a in accs],
+                         step=3)
+    assert nb > 0 and fleet.dropped_bytes > 0
+    with pytest.raises(ShardSaveError):
+        fleet.fence()
+    # the retry at the next boundary, with spawn working again, succeeds
+    monkeypatch.undo()
+    assert fleet.readmit([t + 4 for t in tables], [a + 4 for a in accs],
+                         step=4) == [1]
+    fleet.fence()
+    lt, la, _ = fleet.restore_all()
+    for t in range(len(SIZES)):
+        lo, hi = spec.shard_range(t, 0)          # healthy shard: last save
+        np.testing.assert_array_equal(lt[t][lo:hi], (tables[t] + 3)[lo:hi])
+        lo, hi = spec.shard_range(t, 1)          # readmitted: reseed full
+        np.testing.assert_array_equal(lt[t][lo:hi], (tables[t] + 4)[lo:hi])
+    fleet.close()
+
+
+# --------------------------------------------------- socket severance -------
+def test_socket_severed_connection_poisons_only_that_shard(tmp_path):
+    """A network partition (connection cut, server still running) poisons
+    exactly one shard; healthy shards' saves stamp and recovery serves the
+    last stamped state."""
+    tables, accs = make_state()
+    spec = EmbShardSpec(SIZES, 2)
+    fleet = ShardedCheckpointWriter(tables, accs, spec,
+                                    directory=str(tmp_path),
+                                    backend="socket", delta_saves=False,
+                                    drain_timeout=15.0)
+    fleet.save_full([t + 1 for t in tables], [a + 1 for a in accs], step=1)
+    fleet.fence()
+    fleet.procs[1].sever()
+    fleet.save_full([t + 2 for t in tables], [a + 2 for a in accs], step=2)
+    with pytest.raises(ShardSaveError) as ei:
+        fleet.fence()
+    assert sorted(ei.value.shard_errors) == [1]
+    fleet.close()
+    lt, _, _ = ShardedCheckpointWriter.load_latest(
+        str(tmp_path), tables, accs, spec).restore_all()
+    for t, n in enumerate(SIZES):
+        lo, hi = spec.shard_range(t, 0)
+        np.testing.assert_array_equal(lt[t][lo:hi], (tables[t] + 2)[lo:hi])
+        lo, hi = spec.shard_range(t, 1)
+        np.testing.assert_array_equal(lt[t][lo:hi], (tables[t] + 1)[lo:hi])
