@@ -7,9 +7,12 @@ Public API:
   AsyncCheckpointWriter                        — background incremental saves
   ShardedCheckpointWriter, ShardSaveError      — per-shard writer fleet with
                                                  a coordinator fence
+  StaleCoordinatorError                        — this coordinator was
+                                                 superseded by a standby
   ShardTransport, make_transport, TRANSPORTS   — pluggable writer transports
                                                  (inproc / pipe / socket)
-  WriterProcError                              — a shard writer died
+  WriterProcError, StaleEpochError             — a shard writer died / now
+                                                 belongs to a newer epoch
   resolve_run_dir                              — run-versioned CURRENT pointer
   GammaFailureModel, FailureInjector           — failure modeling (§3)
   Emulator                                     — the evaluation framework (§5.1)
@@ -23,9 +26,12 @@ from repro.core.checkpoint import (AsyncApplier, AsyncCheckpointWriter,
                                    CheckpointStore, EmbShardSpec,
                                    resolve_run_dir)
 from repro.core.sharded_checkpoint import (ShardedCheckpointWriter,
-                                           ShardSaveError, load_latest_auto)
+                                           ShardSaveError,
+                                           StaleCoordinatorError,
+                                           load_latest_auto)
 from repro.core.transport import (TRANSPORTS, ShardTransport,
-                                  WriterProcError, make_transport)
+                                  StaleEpochError, WriterProcError,
+                                  make_transport)
 from repro.core.failure import FailureEvent, FailureInjector, GammaFailureModel
 from repro.core.manager import ALL_MODES, CPRManager
 from repro.core.emulator import EmulationResult, Emulator

@@ -81,7 +81,8 @@ class CPRManager:
                  shard_addrs: Optional[list] = None,
                  heartbeat_interval: Optional[float] = None,
                  readmit_backoff: float = 0.0,
-                 transport_options: Optional[dict] = None):
+                 transport_options: Optional[dict] = None,
+                 attach: bool = False):
         assert mode in ALL_MODES, mode
         assert tracker_backend in ("host", "pallas"), tracker_backend
         self.mode = mode
@@ -107,6 +108,13 @@ class CPRManager:
         # fail-stop sticky; readmit_backoff throttles crash-looping shards
         # exponentially; heartbeat_interval starts the proactive
         # dead-writer monitor.
+        # attach=True: instead of spawning a fresh writer fleet, take over
+        # the one the previous coordinator left behind — read the durable
+        # COORDINATOR record in `directory`, claim the next epoch, adopt
+        # still-running shard_server writers (socket) or respawn from the
+        # stamped images (pipe/inproc), and resume fencing exactly at the
+        # last stamped cycle (standby-coordinator failover).
+        self._transport_explicit = transport is not None or writer_procs
         self.transport = normalize_transport(
             transport if transport is not None
             else ("pipe" if writer_procs else "inproc"))
@@ -115,7 +123,8 @@ class CPRManager:
         self.heartbeat_interval = heartbeat_interval
         self.readmit_backoff = readmit_backoff
         self.transport_options = transport_options
-        self.sharded_save = sharded_save or self.writer_procs
+        self.attach = attach
+        self.sharded_save = sharded_save or self.writer_procs or attach
         # a remote-backed fleet is asynchronous by construction (saves
         # hand off to the transport; fence() is the durability point)
         self.async_save = async_save or self.writer_procs
@@ -207,14 +216,32 @@ class CPRManager:
         if self.sharded_save:
             # the sharded fleet is both the store (image, restores, byte
             # accounting) and the writer (fence/close routing)
-            self.store = ShardedCheckpointWriter(
-                tables, accs, self.spec, trainer_state,
-                directory=self.directory, async_save=self.async_save,
-                delta_saves=self.delta_saves, backend=self.transport,
-                addresses=self.shard_addrs,
+            common = dict(
+                async_save=self.async_save, delta_saves=self.delta_saves,
                 heartbeat_interval=self.heartbeat_interval,
                 readmit_backoff=self.readmit_backoff,
                 transport_options=self.transport_options)
+            self.store = None
+            if self.attach and self.directory:
+                try:
+                    # standby takeover: adopt the predecessor's fleet; the
+                    # recorded backend/addresses win unless the caller
+                    # explicitly chose a transport
+                    self.store = ShardedCheckpointWriter.attach(
+                        self.directory, tables, accs, self.spec,
+                        trainer_state=trainer_state,
+                        backend=(self.transport if self._transport_explicit
+                                 else None),
+                        addresses=self.shard_addrs, **common)
+                    self.transport = self.store.backend
+                    self.writer_procs = self.transport != "inproc"
+                except FileNotFoundError:
+                    pass                # nothing to attach to: fresh fleet
+            if self.store is None:
+                self.store = ShardedCheckpointWriter(
+                    tables, accs, self.spec, trainer_state,
+                    directory=self.directory, backend=self.transport,
+                    addresses=self.shard_addrs, **common)
             self.writer = self.store
         else:
             self.store = CheckpointStore(tables, accs, self.spec,
@@ -457,4 +484,7 @@ class CPRManager:
             out["shard_failures"] = sorted(self.shard_failures)
             out["poisoned_shards"] = sorted(self.store.failed)
             out["shard_readmissions"] = self.store.shard_readmissions
+            out["coordinator_epoch"] = self.store.epoch
+            if self.store.attach_report is not None:
+                out["attach"] = self.store.attach_report
         return out

@@ -98,6 +98,14 @@ from repro.core.transport import (DRAIN_TIMEOUT_S, TRANSPORT_ALIASES,
 
 LAYOUT = "sharded-v1"
 
+# The coordinator's durable control state, persisted atomically next to
+# CURRENT: shard registry (writer addresses), monotonic epoch, last stamped
+# cycle + per-shard watermarks, and the re-admission ledger.  A standby
+# coordinator reads it to take over a live writer fleet
+# (ShardedCheckpointWriter.attach); a superseded coordinator reads it to
+# discover it must not stamp.
+COORDINATOR_PTR = "COORDINATOR"
+
 # accepted ``backend=`` names (transports + their legacy aliases)
 BACKENDS = TRANSPORTS + tuple(TRANSPORT_ALIASES)
 
@@ -137,6 +145,57 @@ class ShardSaveError(RuntimeError):
             f"{sorted(self.shard_errors)} failed fail-stop ({names}); "
             f"their saves after the failure were discarded, other shards' "
             f"saves are intact")
+
+
+class StaleCoordinatorError(RuntimeError):
+    """This coordinator's epoch has been superseded (a standby took over
+    the fleet): it must not stamp — its fence refuses before touching the
+    manifest or CURRENT, so the successor's stamps can never be clobbered
+    by a hung-then-resumed predecessor."""
+
+
+def _read_coordinator_state(root_dir: str) -> Optional[dict]:
+    """The durable ``COORDINATOR`` record, or None when the directory has
+    never hosted a coordinator (or predates the failover layout)."""
+    path = os.path.join(root_dir, COORDINATOR_PTR)
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        return json.load(f)
+
+
+def _newest_claim_epoch(root_dir: str) -> int:
+    """The highest ``.epoch-<n>.claim`` marker in ``root_dir`` (0 when
+    none).  Markers are created with O_EXCL at the very first instant of a
+    claim — before any takeover work — so, unlike the COORDINATOR record
+    (written only once the fleet is up), they are a race-free signal that
+    a successor exists."""
+    newest = 0
+    try:
+        names = os.listdir(root_dir)
+    except OSError:
+        return newest
+    for d in names:
+        if d.startswith(".epoch-") and d.endswith(".claim"):
+            try:
+                newest = max(newest, int(d[len(".epoch-"):-len(".claim")]))
+            except ValueError:
+                continue
+    return newest
+
+
+def _last_stamp(chain) -> Tuple[int, Dict[int, int]]:
+    """(cycle, per-shard durable watermark) of the newest stamped cycle
+    across a manifest chain — the consistency point a takeover must land
+    on; ``(0, {})`` when nothing was ever stamped."""
+    cycle, wm = 0, {}
+    for _, m in chain:
+        for e in m["events"]:
+            if e["kind"] == "cycle":
+                cycle = e["cycle"]
+                wm = {int(k): int(v)
+                      for k, v in e.get("shard_seq", {}).items()}
+    return cycle, wm
 
 
 def _stamped_events(chain) -> List[Tuple[str, dict]]:
@@ -211,7 +270,8 @@ class ShardedCheckpointWriter:
                  heartbeat_interval: Optional[float] = None,
                  readmit_backoff: float = 0.0,
                  readmit_backoff_max: float = 60.0,
-                 transport_options: Optional[dict] = None):
+                 transport_options: Optional[dict] = None,
+                 _takeover: Optional[dict] = None):
         assert backend in BACKENDS, backend
         self.spec = spec
         self.n_shards = spec.n_shards
@@ -233,6 +293,13 @@ class ShardedCheckpointWriter:
         self.failed: Dict[int, BaseException] = {}
         self.shard_readmissions = 0
         self._closed = False
+        self._closing = False           # close() has begun: monitor stands
+        #                                 down even if its join timed out
+        # serializes the heartbeat monitor's probe sweeps against the
+        # fence's DRAIN window and against close() — a sweep can never
+        # latch a shard "dead" from the silence of its own mid-drain or
+        # mid-shutdown quiescence (the heartbeat/close race)
+        self._monitor_lock = threading.Lock()
         self._seq = 0
         self._seq_lock = threading.Lock()
         self.cycle = 0
@@ -252,11 +319,48 @@ class ShardedCheckpointWriter:
         self._readmit_not_before = [0.0] * self.n_shards
         self._last_readmit_t = [0.0] * self.n_shards
 
-        # ---- run-versioned directory layout ----
+        # ---- run-versioned directory layout + coordinator epoch claim ----
         self.root_dir = directory
         self.run_dir: Optional[str] = None
         self._current_advanced = False
+        self.epoch = 1                  # monotonic coordinator ownership
+        chain = []
         if directory:
+            # claim the fleet: every restart (plain or takeover) is a new
+            # epoch, so a predecessor that un-hangs finds itself superseded
+            # at its next frame / stamp attempt.  The claim itself is an
+            # O_EXCL marker file, so two simultaneous claimants get
+            # DISTINCT epochs (the lower one fails the ownership check at
+            # its first stamp) instead of racing read-inc-write to the
+            # same number.
+            os.makedirs(directory, exist_ok=True)
+            prior = _read_coordinator_state(directory)
+            self.epoch = (int(prior.get("epoch", 0)) + 1
+                          if prior is not None else 1)
+            self.epoch = max(self.epoch, _newest_claim_epoch(directory) + 1)
+            while True:
+                try:
+                    fd = os.open(
+                        os.path.join(directory,
+                                     f".epoch-{self.epoch}.claim"),
+                        os.O_CREAT | os.O_EXCL | os.O_WRONLY)
+                    os.close(fd)
+                    break
+                except FileExistsError:
+                    self.epoch += 1
+            # bounded accumulation: markers far below the claimed epoch
+            # are dead (claimants always probe upward from the newest)
+            for d in os.listdir(directory):
+                if d.startswith(".epoch-") and d.endswith(".claim"):
+                    try:
+                        n = int(d[len(".epoch-"):-len(".claim")])
+                    except ValueError:
+                        continue
+                    if n < self.epoch - 4:
+                        try:
+                            os.unlink(os.path.join(directory, d))
+                        except OSError:
+                            pass
             chain = manifest_chain(directory, LAYOUT, spec)
             self._seq = max((e.get("seq", 0) for _, m in chain
                              for e in m["events"]), default=0)
@@ -289,12 +393,48 @@ class ShardedCheckpointWriter:
         # successful fetch
         self._img_cache = list(self._init_slices)
 
+        # ---- takeover reconciliation (standby coordinator) ----
+        # Replay each shard's last-*stamped* image from disk: it seeds the
+        # transport (an adopted writer whose durable watermark differs
+        # from the stamp is reseeded with it — the gap of applied-but-
+        # unstamped work is discarded; a fresh spawn starts from it
+        # directly), re-bases the delta hashes, and becomes the restore
+        # cache.  A shard whose stamped files cannot be read (remote-only
+        # storage) is poisoned rather than silently regressed to init.
+        seeds = self._init_slices
+        self._pending_poison: Dict[int, BaseException] = {}
+        self.attach_report: Optional[dict] = None
+        if _takeover is not None:
+            events = _stamped_events(chain)
+            _, stamped_wm = _last_stamp(chain)
+            self._watermarks = [stamped_wm.get(j, 0)
+                                for j in range(self.n_shards)]
+            seeds, seed_ok = [], []
+            for j in range(self.n_shards):
+                try:
+                    seeds.append(self._replay_stamped_slices(j, events))
+                    seed_ok.append(True)
+                except Exception as e:
+                    seeds.append(self._init_slices[j])
+                    seed_ok.append(False)
+                    self._pending_poison[j] = RuntimeError(
+                        f"shard {j}: stamped image replay failed at "
+                        f"takeover: {type(e).__name__}: {e}")
+            self._img_cache = list(seeds)   # seeds already fall back to
+            #                                 init slices where replay failed
+            if self._hashes is not None:
+                for j in range(self.n_shards):
+                    for t, (lo, hi) in enumerate(self.ranges[j]):
+                        self._hashes[t][lo:hi] = row_hash(seeds[j][0][t],
+                                                          seeds[j][1][t])
+
         # ---- the transport + its endpoints ----
         shard_dirs = [os.path.join(self.run_dir, f"shard_{j}")
                       if self.run_dir else None
                       for j in range(self.n_shards)]
         opts = dict(transport_options or {})
         opts.setdefault("fsync_payloads", fsync_payloads)
+        opts.setdefault("epoch", self.epoch)
         if self.backend == "inproc":
             opts.setdefault("async_save", self.async_save)
             opts.setdefault("max_inflight", max_inflight)
@@ -307,10 +447,44 @@ class ShardedCheckpointWriter:
         else:
             if addresses is not None:
                 opts.setdefault("addresses", list(addresses))
-        self.transport = make_transport(self.backend, spec,
-                                        self._init_slices, shard_dirs,
-                                        **opts)
+            if _takeover is not None:
+                # adopt still-running shard_server writers over a fresh
+                # connection instead of respawning the world; pipe/inproc
+                # writers died with the old coordinator process and are
+                # simply respawned from the stamped seeds above
+                opts.setdefault("attach_watermarks", list(self._watermarks))
+                opts.setdefault("attach_seed_ok", seed_ok)
+                if _takeover.get("fallback") is not None:
+                    opts.setdefault("attach_fallback_spawn",
+                                    _takeover["fallback"])
+        self.transport = make_transport(self.backend, spec, seeds,
+                                        shard_dirs, **opts)
         self.endpoints = self.transport.endpoints
+        for j, err in self._pending_poison.items():
+            self.endpoints[j].poison(err)
+            self.failed[j] = self.endpoints[j].error
+        for j, ep in enumerate(self.endpoints):
+            if j not in self.failed and ep.error is not None:
+                self.failed[j] = ep.error          # failed adoption
+        if _takeover is not None:
+            self.shard_readmissions = int(
+                _takeover.get("state", {}).get("readmissions", 0))
+            self.attach_report = {
+                "epoch": self.epoch,
+                "adopted": [j for j, ep in enumerate(self.endpoints)
+                            if ep.adopted],
+                "respawned": [j for j, ep in enumerate(self.endpoints)
+                              if not ep.adopted and j not in self.failed],
+                "poisoned": sorted(self.failed),
+                "reconciled": {j: ep.reconciled
+                               for j, ep in enumerate(self.endpoints)
+                               if ep.reconciled is not None},
+                "cycle": self.cycle,
+            }
+        if self.root_dir:
+            # claim (or re-stamp) the durable coordinator record now that
+            # the fleet is up and socket addresses are known
+            self._persist_coordinator_state()
 
         # ---- heartbeat monitor (proactive dead-writer detection) ----
         self.heartbeat_interval = heartbeat_interval
@@ -408,9 +582,14 @@ class ShardedCheckpointWriter:
         if not any(e.get("shard") == j and e["kind"] in ("full", "partial")
                    for _, e in events):
             return None
-        # replay over the PRISTINE init slices — the live-image cache may
-        # hold post-stamp state (a fetch after unstamped applies), and a
-        # poisoned shard must restore exactly its last stamped image
+        return self._replay_stamped_slices(j, events)
+
+    def _replay_stamped_slices(self, j: int, events):
+        """Shard ``j``'s last-stamped image slices, replayed over the
+        PRISTINE init slices — the live-image cache may hold post-stamp
+        state (a fetch after unstamped applies), and both a poisoned shard
+        and a takeover reconciliation must land exactly on the last
+        stamped image."""
         store = _ShardStore(j, self.spec, self._init_slices[j][0],
                             self._init_slices[j][1], sliced=True)
         _replay_shard(store, j, events)
@@ -419,8 +598,11 @@ class ShardedCheckpointWriter:
             tr_evs = [(d, e) for d, e in events if e["kind"] == "trainer"]
             if tr_evs:
                 d, e = tr_evs[-1]
+                # the shard-0 init trainer image is the structure template
+                # (without one the raw leaf list would come back)
                 trainer = load_trainer_tree(
-                    os.path.join(d, "shard_0", e["file"]), None)
+                    os.path.join(d, "shard_0", e["file"]),
+                    self._init_slices[0][2])
         return store.image_tables, store.image_accs, trainer
 
     def _assemble(self, images=None):
@@ -570,7 +752,22 @@ class ShardedCheckpointWriter:
         is already out of the fleet for every practical purpose: submits
         to it drop immediately."""
         while not self._hb_stop.wait(self.heartbeat_interval):
-            if self._closed:
+            self._probe_sweep()
+            if self._closing or self._closed:
+                return
+
+    def _probe_sweep(self):
+        """One monitor probe sweep, serialized against the fence's DRAIN
+        window and against close() via ``_monitor_lock`` — and a no-op
+        once close() has begun.  Without both guards an aggressive
+        ``heartbeat_interval`` could latch a shard "dead" from the silence
+        of its own mid-drain work, or probe a writer that close() is
+        already shutting down — turning a clean shutdown into a spurious
+        poison and a ``failed_shards`` entry in the final cycle stamp."""
+        if not self._monitor_lock.acquire(blocking=False):
+            return                      # a fence/close owns the fleet now;
+        try:                            # skip the sweep, don't queue on it
+            if self._closing or self._closed:
                 return
             for j, ep in enumerate(self.endpoints):
                 if j not in self.failed and ep.error is None:
@@ -578,6 +775,8 @@ class ShardedCheckpointWriter:
                         ep.probe()
                     except Exception:
                         pass            # a probe failure is not a crash
+        finally:
+            self._monitor_lock.release()
 
     def check_health(self) -> List[int]:
         """One probe sweep on the caller's (trainer) thread: latch dead
@@ -605,32 +804,34 @@ class ShardedCheckpointWriter:
         ack is poisoned here, and the acked events of every shard
         (including ones that died after acking) are returned for stamping.
         """
-        self._drain_token += 1
-        token = self._drain_token
-        pending = []
-        for j, ep in enumerate(self.endpoints):
-            if j in self.failed:
-                continue
-            if ep.begin_drain(token):
-                pending.append(j)
-            else:
-                self.failed[j] = ep.error
-        for j in pending:
-            if not self.endpoints[j].finish_drain(token,
-                                                  self._drain_timeout):
-                self.failed[j] = self.endpoints[j].error
-        drained: List[dict] = []
-        for j, ep in enumerate(self.endpoints):
-            # a dead/poisoned worker may have acked durable applies the
-            # coordinator never pumped — fold them so they are stamped,
-            # whatever the transport
-            ep.pump()
-            evs = ep.collect_applied()
-            drained.extend(evs)
-            for e in evs:
-                self._watermarks[j] = max(self._watermarks[j], e["seq"])
-            self._watermarks[j] = max(self._watermarks[j], ep.durable_seq)
-        return drained
+        with self._monitor_lock:        # monitor stands down for the fence
+            self._drain_token += 1
+            token = self._drain_token
+            pending = []
+            for j, ep in enumerate(self.endpoints):
+                if j in self.failed:
+                    continue
+                if ep.begin_drain(token):
+                    pending.append(j)
+                else:
+                    self.failed[j] = ep.error
+            for j in pending:
+                if not self.endpoints[j].finish_drain(token,
+                                                      self._drain_timeout):
+                    self.failed[j] = self.endpoints[j].error
+            drained: List[dict] = []
+            for j, ep in enumerate(self.endpoints):
+                # a dead/poisoned worker may have acked durable applies the
+                # coordinator never pumped — fold them so they are stamped,
+                # whatever the transport
+                ep.pump()
+                evs = ep.collect_applied()
+                drained.extend(evs)
+                for e in evs:
+                    self._watermarks[j] = max(self._watermarks[j], e["seq"])
+                self._watermarks[j] = max(self._watermarks[j],
+                                          ep.durable_seq)
+            return drained
 
     def _fsync_failed_shards_payloads(self, drained: List[dict]):
         """A poisoned shard never answered this DRAIN, so its acked events'
@@ -684,12 +885,20 @@ class ShardedCheckpointWriter:
             return
         drained = self._drain()
         if self.run_dir is not None:
+            # split-brain guard: a coordinator whose epoch has been
+            # superseded on disk (a standby attached) must never stamp —
+            # refusing HERE, before the manifest or CURRENT is touched,
+            # is what makes the wire-level stale rejections transitive to
+            # STAMP on every transport (a pipe writer only knows its own
+            # coordinator, but that coordinator cannot commit)
+            self._assert_coordinator_ownership()
             drained.sort(key=lambda e: (e["seq"], e["shard"]))
             self._fsync_failed_shards_payloads(drained)
             self._manifest["events"].extend(drained)
             self.cycle += 1
             self._manifest["events"].append({
-                "kind": "cycle", "cycle": self.cycle, "time": time.time(),
+                "kind": "cycle", "cycle": self.cycle, "epoch": self.epoch,
+                "time": time.time(),
                 "shard_seq": {str(j): self._watermarks[j]
                               for j in range(self.n_shards)},
                 "failed_shards": sorted(self.failed)})
@@ -704,6 +913,7 @@ class ShardedCheckpointWriter:
                 # only now may recovery prefer this run over its parent
                 _write_current(self.root_dir, self._manifest["run"])
                 self._current_advanced = True
+            self._persist_coordinator_state()
         # every healthy shard acked past the pending save_full snapshots;
         # poisoned ones will never read them (their queued work was
         # dropped) — release the shm segments / spool files
@@ -716,11 +926,71 @@ class ShardedCheckpointWriter:
         if strict and self.failed:
             raise ShardSaveError(self.failed)
 
+    def _assert_coordinator_ownership(self):
+        """Raise :class:`StaleCoordinatorError` when a newer epoch exists —
+        either in the durable ``COORDINATOR`` record or as a bare
+        ``.epoch-<n>.claim`` marker.  The marker check is what closes the
+        takeover window: a standby drops its O_EXCL marker *before* any
+        adoption/reseed work, so a hung predecessor that un-hangs
+        mid-takeover is already fenced off even though the successor has
+        not yet rewritten the record."""
+        if not self.root_dir:
+            return
+        disk = _read_coordinator_state(self.root_dir)
+        if disk is not None and int(disk.get("epoch", 0)) > self.epoch:
+            raise StaleCoordinatorError(
+                f"coordinator epoch {self.epoch} superseded by epoch "
+                f"{disk['epoch']} (run {disk.get('run')!r}): refusing to "
+                f"stamp — the fleet belongs to the successor")
+        claimed = _newest_claim_epoch(self.root_dir)
+        if claimed > self.epoch:
+            raise StaleCoordinatorError(
+                f"coordinator epoch {self.epoch} superseded by a claim "
+                f"for epoch {claimed}: refusing to stamp — a successor "
+                f"is taking over the fleet")
+
+    def _persist_coordinator_state(self):
+        """Atomically rewrite the ``COORDINATOR`` record (epoch, shard
+        registry, last stamp, re-admission ledger) next to ``CURRENT``.
+        No-op once this epoch has been superseded on disk — a stale
+        coordinator must not clobber its successor's claim.  (The
+        read-check-write here is not atomic, but stamping correctness
+        never rests on this record alone: the race-free claim markers
+        fence a superseded coordinator at ``_assert_coordinator_ownership``
+        even if its in-flight persist regresses the record.)"""
+        if not self.root_dir:
+            return
+        disk = _read_coordinator_state(self.root_dir)
+        if disk is not None and int(disk.get("epoch", 0)) > self.epoch:
+            return
+        if _newest_claim_epoch(self.root_dir) > self.epoch:
+            return
+        state = {
+            "layout": LAYOUT,
+            "epoch": self.epoch,
+            "run": self._manifest["run"],
+            "backend": self.backend,
+            "n_shards": self.n_shards,
+            "table_sizes": list(self.spec.table_sizes),
+            "cycle": self.cycle,
+            "shard_seq": {str(j): self._watermarks[j]
+                          for j in range(self.n_shards)},
+            "addresses": self.transport.addresses,
+            "readmissions": self.shard_readmissions,
+            "readmit_attempts": list(self._readmit_attempts),
+            "failed_shards": sorted(self.failed),
+            "time": time.time(),
+        }
+        atomic_json_dump(os.path.join(self.root_dir, COORDINATOR_PTR),
+                         state)
+
     def close(self):
         """Stamp a final cycle and stop the workers; never raises
         (idempotent)."""
         if self._closed:
             return
+        self._closing = True            # monitor sweeps stand down NOW —
+        #                                 even one that outlives the join
         self._hb_stop.set()
         if self._hb_thread is not None:
             self._hb_thread.join(timeout=2.0)
@@ -801,6 +1071,11 @@ class ShardedCheckpointWriter:
                     self.save_trainer(trainer_state, step=step)
             readmitted.append(j)
         self.shard_readmissions += len(readmitted)
+        if readmitted and self.root_dir:
+            # a respawned auto-spawned socket server binds a new port:
+            # refresh the durable shard registry so a later takeover
+            # attaches to the live fleet, not the dead addresses
+            self._persist_coordinator_state()
         return readmitted
 
     def _note_readmit_attempt(self, j: int, now: float):
@@ -840,6 +1115,78 @@ class ShardedCheckpointWriter:
         images = [self._shard_images(j) for j in range(self.n_shards)]
         tabs, accs = self._assemble(images)
         return tabs, accs, images[0][2]
+
+    # ----------------------------------------------------------- failover --
+    @classmethod
+    def attach(cls, directory: str, tables, accs, spec: EmbShardSpec,
+               trainer_state=None, backend: Optional[str] = None,
+               addresses: Optional[Sequence] = None,
+               **kw) -> "ShardedCheckpointWriter":
+        """Standby-coordinator takeover of a live writer fleet.
+
+        Reads the durable ``COORDINATOR`` record next to ``CURRENT`` (the
+        predecessor's shard registry, epoch, last stamped cycle and
+        re-admission ledger), claims the next **epoch**, and builds a new
+        coordinator that *adopts* the still-running writers instead of
+        respawning the world:
+
+        * **socket**: re-handshake with each registered ``shard_server``
+          (``attach``/``reconcile``): a writer whose durable watermark
+          equals the last stamp is kept in place (no state crosses the
+          wire); a writer with a gap of applied-but-unstamped work is
+          reseeded with the stamped image replayed from disk — the gap is
+          discarded, never resurrected.  A server with no parked session
+          (restarted since) gets a fresh spawn seeded the same way.
+        * **pipe** / **inproc**: the predecessor's writers died with its
+          process; fresh writers are spawned from the stamped images.
+
+        Either way the fleet lands exactly on the last stamped cycle and
+        resumes fencing under the new epoch; the predecessor — should it
+        un-hang — is rejected at every writer frame (socket) and at its
+        next stamp attempt (every transport).  ``tables``/``accs`` are the
+        pristine *initial* values (the disk-replay base), exactly as for
+        :meth:`load_latest`; read the recovered state back with
+        ``restore_all``.  The takeover outcome is in ``attach_report``.
+        """
+        state = _read_coordinator_state(directory)
+        if state is None:
+            raise FileNotFoundError(
+                f"no coordinator state in {directory} (no "
+                f"{COORDINATOR_PTR} record): nothing to attach to — "
+                f"start a fresh coordinator instead")
+        if (int(state.get("n_shards", spec.n_shards)) != spec.n_shards or
+                list(state.get("table_sizes", spec.table_sizes)) !=
+                list(spec.table_sizes)):
+            raise ValueError(
+                f"coordinator state in {directory} is for n_shards="
+                f"{state.get('n_shards')}, table_sizes="
+                f"{state.get('table_sizes')} but the caller's spec has "
+                f"n_shards={spec.n_shards}, "
+                f"table_sizes={list(spec.table_sizes)}")
+        if backend is None:
+            backend = state.get("backend", "inproc")
+        fallback = None
+        if addresses is None:
+            recorded = state.get("addresses")
+            if recorded and any(a is not None for a in recorded):
+                # per-shard: a shard whose address was never recorded
+                # (its endpoint never connected) auto-spawns a loopback
+                # server; the others re-attach to their live writers.
+                # Recorded LOOPBACK servers were owned by (and died with)
+                # the previous coordinator process — if one is gone,
+                # degrade that shard to a fresh auto-spawned writer
+                # seeded with the stamped image rather than poisoning it.
+                # A dead non-loopback (true multi-host) address stays a
+                # poison: silently moving a remote writer's persistence
+                # onto this host would be surprising.
+                addresses = [tuple(a) if a else None for a in recorded]
+                fallback = [a is None or
+                            a[0] in ("127.0.0.1", "localhost", "::1")
+                            for a in addresses]
+        return cls(tables, accs, spec, trainer_state=trainer_state,
+                   directory=directory, backend=backend,
+                   addresses=addresses,
+                   _takeover={"state": state, "fallback": fallback}, **kw)
 
     # --------------------------------------------------------------- disk --
     @classmethod

@@ -42,19 +42,27 @@ per deployment without rewriting the engine:
         can only poison its own shard — it can never stall the trainer.
 
 Wire protocol (logical messages; the pipe carries them as pickled tuples,
-the socket as length-prefixed binary frames via :func:`pack_msg`):
+the socket as length-prefixed binary frames via :func:`pack_msg`).  Every
+coordinator command carries the coordinator **epoch** — the monotonic
+ownership token persisted in the root directory's ``COORDINATOR`` record —
+and a writer rejects any command from an epoch older than the one it last
+adopted (reply ``("stale", ...)``), so a hung-then-resumed coordinator can
+never submit, drain, or (transitively) stamp over its successor:
 
   coordinator -> worker                    worker -> coordinator
   ("spawn", shard, table_sizes, n_shards,  ("ack",     seq, event_dict)
    directory, seed_t, seed_a, seed_tr,     ("error",   seq, err_string)
-   fsync)                [socket only]     ("drained", token, watermark, err)
-  ("full",    seq, step, payload)          ("image",   tables, accs, trainer)
-  ("rows",    seq, step, t, rows, v, a)    ("pong",    token)
-  ("trainer", seq, step, tree)
-  ("drain",   token)
-  ("image",)
-  ("ping",    token)
-  ("close",)
+   fsync, epoch)         [socket only]     ("drained", token, watermark, err)
+  ("full",    epoch, seq, step, payload)   ("image",   tables, accs, trainer)
+  ("rows",    epoch, seq, step, t, r,v,a)  ("pong",    token)
+  ("trainer", epoch, seq, step, tree)      ("stale",   kind, epoch, current)
+  ("drain",   epoch, token)
+  ("image",   epoch)                       coordinator-failover handshake
+  ("ping",    epoch, token)                (socket only; shard_server):
+  ("close",   epoch)                       ("attach-ok", watermark, err)
+  ("attach",  epoch, shard)                ("no-writer",)
+  ("reconcile", epoch, dir, wm,            ("reconciled", watermark)
+   seed_t|None, seed_a|None, seed_tr)
 
 ``save_full`` payloads are one of ``("spool", path)``, ``("shm", name,
 meta)`` or ``("slices", tables, accs)`` — every worker applies them through
@@ -115,6 +123,14 @@ class WriterProcError(RuntimeError):
     """A shard's writer failed: an apply raised inside the worker, the
     process died (crash, OOM-kill, SIGKILL), or the connection to a remote
     writer was lost / timed out."""
+
+
+class StaleEpochError(WriterProcError):
+    """A writer rejected this coordinator's command because it has been
+    adopted by a successor coordinator with a newer epoch.  Fail-stop for
+    the *coordinator*: once latched, this coordinator must not stamp (its
+    fence's ownership check will refuse) — the writer fleet now belongs to
+    the successor."""
 
 
 # =========================================================================
@@ -281,12 +297,21 @@ class SockChannel:
     sender thread may be inside ``sendall`` on the same socket, and
     flipping the socket's timeout/blocking mode under it could truncate an
     in-flight frame and desync the protocol.
+
+    **Partial sends poison the channel.**  Any error out of ``sendall`` —
+    a timeout, a signal, a transient ``OSError`` — may have left a partial
+    frame on the wire; reusing the connection after that would append the
+    next frame mid-body and desynchronize the stream (the peer would
+    decode garbage lengths and read forever).  So the first send failure
+    latches ``_broken`` and severs the socket: every later ``send`` fails
+    fast, and the peer sees EOF instead of a torn stream.
     """
 
     def __init__(self, sock: _socket.socket):
         self._sock = sock
         self._buf = bytearray()
         self._send_lock = threading.Lock()
+        self._broken = False            # partial frame possibly on the wire
         sock.settimeout(None)           # blocking forever; see class doc
         try:
             sock.setsockopt(_socket.IPPROTO_TCP, _socket.TCP_NODELAY, 1)
@@ -295,12 +320,23 @@ class SockChannel:
 
     # ------------------------------------------------------------- send ---
     def send(self, msg):
-        body = pack_msg(msg)
-        try:
-            with self._send_lock:
+        body = pack_msg(msg)            # encode errors leave no bytes sent
+        with self._send_lock:
+            if self._broken:
+                raise BrokenPipeError(
+                    "channel poisoned by an earlier partial send")
+            try:
                 self._sock.sendall(_U64.pack(len(body)) + body)
-        except (BrokenPipeError, ConnectionError, OSError) as e:
-            raise BrokenPipeError(str(e)) from e
+            except Exception as e:      # incl. socket.timeout mid-sendall
+                self._broken = True
+                self._sever()           # peer sees EOF, never a torn frame
+                raise BrokenPipeError(str(e)) from e
+
+    def _sever(self):
+        try:
+            self._sock.shutdown(_socket.SHUT_RDWR)
+        except OSError:
+            pass
 
     # ------------------------------------------------------------- recv ---
     def _frame_len(self) -> Optional[int]:
@@ -352,10 +388,7 @@ class SockChannel:
         return unpack_msg(body)
 
     def close(self):
-        try:
-            self._sock.shutdown(_socket.SHUT_RDWR)
-        except OSError:
-            pass
+        self._sever()
         try:
             self._sock.close()
         except OSError:
@@ -653,77 +686,184 @@ def _apply_full_payload(store: _ShardStore, spec: EmbShardSpec, payload,
 # =========================================================================
 # the unified worker loop (pipe children and socket servers both run this)
 # =========================================================================
+class WriterSession:
+    """One shard writer *incarnation*: the :class:`_ShardStore` plus the
+    protocol state (adopted coordinator epoch, durable watermark, latched
+    apply error) that must outlive any single connection.
+
+    ``shard_server`` parks a session when its coordinator's connection
+    drops (coordinator crash, partition) and a successor coordinator
+    re-adopts it with the ``attach``/``reconcile`` handshake instead of
+    respawning the writer — the pipe transport's child process, whose
+    bootstrap pipe cannot be re-opened by a new process, simply runs one
+    session for its whole life via :func:`serve_shard`.
+
+    Epoch guard: every coordinator command carries the coordinator epoch;
+    a command older than the session's adopted epoch is answered with
+    ``("stale", kind, cmd_epoch, session_epoch)`` and **not executed** —
+    submit, DRAIN and (transitively) STAMP from a superseded coordinator
+    are rejected.  Takeover (:meth:`claim`) additionally bumps a serve
+    *generation* so a still-connected stale coordinator's serve loop exits
+    (after a best-effort stale notification) instead of racing the
+    successor's connection for the store.
+    """
+
+    def __init__(self, shard: int, spec: EmbShardSpec,
+                 directory: Optional[str], seed,
+                 fsync_payloads: bool = True, epoch: int = 0):
+        seed_t, seed_a, seed_tr = seed
+        self.shard = shard
+        self.spec = spec
+        self.store = _ShardStore(shard, spec, seed_t, seed_a,
+                                 directory=directory, sliced=True,
+                                 fsync_payloads=fsync_payloads)
+        self.store.trainer_image = seed_tr
+        self.epoch = epoch
+        self.err: Optional[str] = None
+        self.watermark = 0
+        self.lock = threading.RLock()
+        self.gen = 0                    # bumped on adoption/replacement
+
+    # ------------------------------------------------------- takeover -----
+    def claim(self, epoch: int) -> int:
+        """Adopt this session for a newer coordinator epoch.  Returns the
+        new serve generation; any serve loop holding an older generation
+        exits at its next command instead of touching the store."""
+        with self.lock:
+            self.gen += 1
+            self.epoch = epoch
+            return self.gen
+
+    def evict(self):
+        """Invalidate every live serve loop (the session is being replaced
+        by a fresh spawn)."""
+        with self.lock:
+            self.gen += 1
+
+    def reconcile(self, directory: Optional[str], watermark: int, seed):
+        """Successor-coordinator reconciliation: move the store's persist
+        directory to the new run, reset the durable watermark to the last
+        *stamped* seq, and — when ``seed`` is given — discard the gap by
+        resetting the image to the stamped state (a kept image means the
+        coordinator verified watermark == stamp).  Returns the watermark.
+        """
+        with self.lock:
+            self.store.directory = directory
+            if directory:
+                os.makedirs(directory, exist_ok=True)
+            self.store._pending_fsync = []
+            self.store.applied = []
+            self.watermark = watermark
+            if seed is not None:
+                seed_t, seed_a, seed_tr = seed
+                for t in range(len(self.store.image_tables)):
+                    self.store.image_tables[t][...] = seed_t[t]
+                    self.store.image_accs[t][...] = seed_a[t]
+                self.store.trainer_image = seed_tr
+                self.err = None         # the reseed re-bases a latched err
+            return self.watermark
+
+    # ----------------------------------------------------------- serve ----
+    def serve(self, chan, gen: int) -> str:
+        """Apply loop over one connection.  Returns ``"parked"`` when the
+        peer vanished (the session stays adoptable), ``"closed"`` on a
+        clean close command, ``"superseded"`` when a takeover invalidated
+        this connection's generation.
+
+        Fail-stop: the first apply error is latched and reported; later
+        apply commands are dropped (never applied out of order around the
+        hole) while control commands (drain / image / ping) keep answering
+        so the coordinator can fence.  DRAIN fsyncs the pending payloads
+        before acking, making the returned watermark power-loss-durable.
+        """
+        while True:
+            try:
+                msg = chan.recv()
+            except (EOFError, OSError):
+                return "parked"         # coordinator gone: await adoption
+            try:
+                with self.lock:
+                    if self.gen != gen:
+                        # a successor adopted the session: tell the stale
+                        # coordinator explicitly (it latches StaleEpoch),
+                        # then hand the connection's thread back
+                        try:
+                            chan.send(("stale", "superseded", msg[1]
+                                       if len(msg) > 1 else -1, self.epoch))
+                        except (BrokenPipeError, OSError):
+                            pass
+                        return "superseded"
+                    reply, done = self._handle(msg)
+                if reply is not None:
+                    chan.send(reply)
+                if done:
+                    return "closed"
+            except (BrokenPipeError, OSError):
+                return "parked"         # coordinator gone mid-reply
+
+    def _handle(self, msg):
+        """Execute one command under ``self.lock``; returns (reply, done).
+        Stale-epoch commands are rejected before any effect."""
+        kind = msg[0]
+        cmd_epoch = msg[1] if len(msg) > 1 else self.epoch
+        if isinstance(cmd_epoch, int) and cmd_epoch < self.epoch:
+            return ("stale", kind, cmd_epoch, self.epoch), False
+        if kind == "close":
+            return None, True
+        if kind == "ping":
+            return ("pong", msg[2]), False
+        if kind == "drain":
+            try:
+                self.store.sync_payloads()      # power-loss-true watermark
+            except BaseException as e:
+                if self.err is None:
+                    self.err = f"{type(e).__name__}: {e}"
+            return ("drained", msg[2], self.watermark, self.err), False
+        if kind == "image":
+            # copies, not live refs: the reply is serialized after the
+            # lock is released, and a concurrent takeover reconcile could
+            # otherwise mutate the arrays mid-serialization
+            return ("image", [t.copy() for t in self.store.image_tables],
+                    [a.copy() for a in self.store.image_accs],
+                    self.store.trainer_image), False
+        if self.err is not None:        # fail-stop: drop applies
+            return None, False
+        seq, step = msg[2], msg[3]
+        try:
+            if kind == "full":
+                _apply_full_payload(self.store, self.spec, msg[4], step, seq)
+            elif kind == "rows":
+                table, rows, vals, avs = msg[4:]
+                self.store.apply_rows(table, rows, vals, avs, step, seq)
+            elif kind == "trainer":
+                self.store.apply_trainer(msg[4], step, seq)
+            else:
+                raise ValueError(f"unknown command {kind!r}")
+            self.watermark = seq        # durable at the next DRAIN fsync
+            return ("ack", seq, self.store.applied.pop()), False
+        except BaseException as e:      # latch + report, keep serving
+            self.err = f"{type(e).__name__}: {e}"
+            return ("error", seq, self.err), False
+
+
 def serve_shard(chan, shard: int, spec: EmbShardSpec,
                 directory: Optional[str], seed,
-                fsync_payloads: bool = True):
+                fsync_payloads: bool = True, epoch: int = 0):
     """One shard writer's apply loop over a :class:`PipeChannel` /
-    :class:`SockChannel`.
-
-    ``seed`` is ``(table_slices, acc_slices, trainer_image)`` — only this
-    shard's rows ever cross the transport at spawn.  Fail-stop: the first
-    apply error is latched and reported; later apply commands are dropped
-    (never applied out of order around the hole) while control commands
-    (drain / image / ping) keep answering so the coordinator can fence.
-    DRAIN fsyncs the pending payloads before acking, making the returned
-    watermark power-loss-durable.
-    """
-    seed_t, seed_a, seed_tr = seed
-    store = _ShardStore(shard, spec, seed_t, seed_a, directory=directory,
-                        sliced=True, fsync_payloads=fsync_payloads)
-    store.trainer_image = seed_tr
-    err: Optional[str] = None
-    watermark = 0
-    while True:
-        try:
-            msg = chan.recv()
-        except (EOFError, OSError):
-            return                      # coordinator gone: nothing to ack to
-        kind = msg[0]
-        try:
-            if kind == "close":
-                return
-            if kind == "ping":
-                chan.send(("pong", msg[1]))
-                continue
-            if kind == "drain":
-                try:
-                    store.sync_payloads()   # power-loss-true watermark
-                except BaseException as e:
-                    if err is None:
-                        err = f"{type(e).__name__}: {e}"
-                chan.send(("drained", msg[1], watermark, err))
-                continue
-            if kind == "image":
-                chan.send(("image", store.image_tables, store.image_accs,
-                           store.trainer_image))
-                continue
-            if err is not None:         # fail-stop: drop applies
-                continue
-            seq, step = msg[1], msg[2]
-            try:
-                if kind == "full":
-                    _apply_full_payload(store, spec, msg[3], step, seq)
-                elif kind == "rows":
-                    table, rows, vals, avs = msg[3:]
-                    store.apply_rows(table, rows, vals, avs, step, seq)
-                elif kind == "trainer":
-                    store.apply_trainer(msg[3], step, seq)
-                else:
-                    raise ValueError(f"unknown command {kind!r}")
-                watermark = seq         # durable at the next DRAIN fsync
-                chan.send(("ack", seq, store.applied.pop()))
-            except BaseException as e:  # latch + report, keep serving
-                err = f"{type(e).__name__}: {e}"
-                chan.send(("error", seq, err))
-        except (BrokenPipeError, OSError):
-            return                      # coordinator gone mid-reply
+    :class:`SockChannel` — one :class:`WriterSession` for the connection's
+    whole life.  ``seed`` is ``(table_slices, acc_slices, trainer_image)``
+    — only this shard's rows ever cross the transport at spawn."""
+    session = WriterSession(shard, spec, directory, seed,
+                            fsync_payloads=fsync_payloads, epoch=epoch)
+    session.serve(chan, session.gen)
 
 
 def _pipe_worker_main(conn, shard: int, spec: EmbShardSpec,
-                      directory: Optional[str], seed, fsync_payloads: bool):
+                      directory: Optional[str], seed, fsync_payloads: bool,
+                      epoch: int = 0):
     """Pipe-transport child entry point (numpy-only; never imports jax)."""
     serve_shard(PipeChannel(conn), shard, spec, directory, seed,
-                fsync_payloads)
+                fsync_payloads, epoch=epoch)
 
 
 # =========================================================================
@@ -738,6 +878,12 @@ class ShardEndpoint:
     #: process even after the endpoint is poisoned (inproc: the store
     #: lives here; its image stays frozen at the last successful apply).
     image_survives_failure = False
+
+    #: coordinator epoch carried on this endpoint's frames (remote
+    #: transports); takeover bookkeeping read by ``attach_report``
+    epoch = 0
+    adopted = False
+    reconciled: Optional[str] = None
 
     def __init__(self, shard: int):
         self.shard = shard
@@ -935,8 +1081,11 @@ class RemoteEndpoint(ShardEndpoint):
     from acks.  Accounting is exact only after a fence, like the inproc
     applier.  Subclasses provide the channel, liveness, spawn/respawn."""
 
-    def __init__(self, shard: int):
+    def __init__(self, shard: int, epoch: int = 0):
         super().__init__(shard)
+        self.epoch = epoch              # carried on every outbound frame
+        self.adopted = False            # True when attach() re-used a live
+        self.reconciled = None          # writer: "kept" | "reseeded"
         self.bytes_written = 0          # fed by acks; exact after a fence
         self.save_events = 0
         self._chan = None
@@ -967,6 +1116,13 @@ class RemoteEndpoint(ShardEndpoint):
                 self._exc = WriterProcError(
                     f"shard {self.shard} writer apply failed "
                     f"(seq {msg[1]}): {msg[2]}")
+        elif kind == "stale":
+            if self._exc is None or not isinstance(self._exc,
+                                                   StaleEpochError):
+                self._exc = StaleEpochError(
+                    f"shard {self.shard} writer rejected {msg[1]!r}: "
+                    f"coordinator epoch {msg[2]} superseded by epoch "
+                    f"{msg[3]}")
         elif kind == "pong":
             self._last_pong = (msg[1], time.monotonic())
         return kind
@@ -996,8 +1152,13 @@ class RemoteEndpoint(ShardEndpoint):
                 try:
                     if self._chan.poll(min(remaining, 0.05)):
                         msg = self._chan.recv()
-                        if self._dispatch_reply(msg) == want:
+                        kind = self._dispatch_reply(msg)
+                        if kind == want:
                             return msg
+                        if kind == "stale":
+                            # the writer belongs to a successor now: it
+                            # will never answer this coordinator's command
+                            return None
                     elif not self._alive():
                         # dead — but the stream may still hold buffered
                         # replies the worker sent before dying
@@ -1028,24 +1189,25 @@ class RemoteEndpoint(ShardEndpoint):
         self._chan.send(msg)
 
     def submit_full(self, ref: SnapshotRef, step: int, seq: int):
-        self._send(("full", seq, step, self._full_payload(ref)))
+        self._send(("full", self.epoch, seq, step, self._full_payload(ref)))
 
     def _full_payload(self, ref: SnapshotRef):
         return ref.payload_for(self.shard)
 
     def submit_rows(self, table, rows, values, acc_values, step, seq):
-        self._send(("rows", seq, step, int(table), np.asarray(rows),
-                    np.asarray(values), np.asarray(acc_values)))
+        self._send(("rows", self.epoch, seq, step, int(table),
+                    np.asarray(rows), np.asarray(values),
+                    np.asarray(acc_values)))
 
     def submit_trainer(self, tree, step, seq):
-        self._send(("trainer", seq, step, tree))
+        self._send(("trainer", self.epoch, seq, step, tree))
 
     # ---------------------------------------------------------- drain -----
     def begin_drain(self, token: int) -> bool:
         """Phase-1 broadcast half: enqueue the DRAIN marker.  Returns False
         (and latches) when the worker is already unreachable."""
         try:
-            self._send(("drain", token))
+            self._send(("drain", self.epoch, token))
             return True
         except RuntimeError:
             return False
@@ -1075,7 +1237,7 @@ class RemoteEndpoint(ShardEndpoint):
         """Pull (image_tables, image_accs, trainer_image) back from the
         worker; None when the worker is unreachable."""
         try:
-            self._send(("image",))
+            self._send(("image", self.epoch))
         except RuntimeError:
             return None
         msg = self._recv_until("image", timeout)
@@ -1086,7 +1248,7 @@ class RemoteEndpoint(ShardEndpoint):
     def close(self):
         """Best-effort shutdown; never raises."""
         try:
-            self._send_raw(("close",))
+            self._send_raw(("close", self.epoch))
         except (BrokenPipeError, OSError, RuntimeError):
             pass
         self._teardown(graceful=True)
@@ -1107,8 +1269,8 @@ class PipeEndpoint(RemoteEndpoint):
     def __init__(self, shard: int, spec: EmbShardSpec, seed_tables,
                  seed_accs, trainer_image=None,
                  directory: Optional[str] = None,
-                 fsync_payloads: bool = True):
-        super().__init__(shard)
+                 fsync_payloads: bool = True, epoch: int = 0):
+        super().__init__(shard, epoch=epoch)
         self.spec = spec
         self.directory = directory
         self.fsync_payloads = fsync_payloads
@@ -1123,7 +1285,7 @@ class PipeEndpoint(RemoteEndpoint):
         self.proc = ctx.Process(
             target=_pipe_worker_main,
             args=(child, self.shard, self.spec, self.directory, seed,
-                  self.fsync_payloads),
+                  self.fsync_payloads, self.epoch),
             name=f"cpr-shard-writer-{self.shard}", daemon=True)
         self.proc.start()
         child.close()                   # child's end lives in the child now
@@ -1201,7 +1363,15 @@ class SocketEndpoint(RemoteEndpoint):
     thread: a partitioned or wedged remote writer fills the queue and gets
     poisoned after ``submit_timeout`` — it never blocks the trainer.
     Heartbeats ride the same connection (``ping``/``pong``); a missed pong
-    for ``heartbeat_timeout`` latches the endpoint."""
+    for ``heartbeat_timeout`` latches the endpoint.
+
+    **Coordinator failover:** with ``attach_watermark`` set, the first
+    connection attempts the ``attach`` handshake instead of ``spawn``: a
+    writer session the server parked when the previous coordinator died is
+    adopted (epoch takeover), reconciled against the last stamped
+    watermark (kept in place when they match, reseeded from the provided
+    stamped image otherwise), and resumes serving — without respawning
+    the remote writer or re-shipping its whole state."""
 
     _CLOSE = object()
 
@@ -1212,15 +1382,23 @@ class SocketEndpoint(RemoteEndpoint):
                  fsync_payloads: bool = True,
                  connect_timeout: float = 20.0,
                  submit_timeout: float = SUBMIT_TIMEOUT_S,
-                 heartbeat_timeout: float = HEARTBEAT_TIMEOUT_S):
-        super().__init__(shard)
+                 heartbeat_timeout: float = HEARTBEAT_TIMEOUT_S,
+                 epoch: int = 0,
+                 attach_watermark: Optional[int] = None,
+                 attach_seed_ok: bool = True,
+                 attach_fallback_spawn: bool = False):
+        super().__init__(shard, epoch=epoch)
         self.spec = spec
         self.directory = directory
         self.fsync_payloads = fsync_payloads
         self.address = tuple(address) if address else None
+        self.effective_address: Optional[Tuple[str, int]] = None
         self.connect_timeout = connect_timeout
         self.submit_timeout = submit_timeout
         self.heartbeat_timeout = heartbeat_timeout
+        self._attach_watermark = attach_watermark   # first connect only
+        self._attach_seed_ok = attach_seed_ok
+        self._attach_fallback = attach_fallback_spawn
         self._server_proc = None        # auto-spawned server (owned)
         self._server_ready = None
         self._outq: Optional[queue.Queue] = None
@@ -1228,7 +1406,16 @@ class SocketEndpoint(RemoteEndpoint):
         self._ping_token = 0
         self._ping_sent_at = 0.0
         self._last_pong = (0, 0.0)
-        self._spawn(seed_tables, seed_accs, trainer_image)
+        try:
+            self._spawn(seed_tables, seed_accs, trainer_image)
+        except (WriterProcError, OSError) as e:
+            if attach_watermark is None:
+                raise
+            # a failed adoption poisons this one shard — the successor
+            # coordinator still takes over the rest of the fleet; readmit
+            # can revive the shard at a later boundary
+            self.poison(e if isinstance(e, WriterProcError) else
+                        WriterProcError(f"shard {shard} attach failed: {e}"))
 
     # ------------------------------------------------------------ spawn ---
     def _spawn_server(self) -> Tuple[str, int]:
@@ -1258,13 +1445,34 @@ class SocketEndpoint(RemoteEndpoint):
         addr = self.address
         if addr is None:
             addr = self._spawn_server()
-        sock = _socket.create_connection(addr, timeout=self.connect_timeout)
+        try:
+            sock = _socket.create_connection(addr,
+                                             timeout=self.connect_timeout)
+        except OSError:
+            if not (self._attach_watermark is not None and
+                    self._attach_fallback and self.address is not None):
+                raise
+            # the recorded loopback server died with the previous
+            # coordinator (it owned the process): nothing is left to
+            # adopt, so degrade to a fresh auto-spawned writer seeded
+            # with the stamped image instead of poisoning the shard
+            self.address = None
+            self._attach_watermark = None
+            addr = self._spawn_server()
+            sock = _socket.create_connection(addr,
+                                             timeout=self.connect_timeout)
         chan = SockChannel(sock)
-        chan.send(("spawn", self.shard, list(self.spec.table_sizes),
-                   self.spec.n_shards, self.directory,
-                   [np.asarray(t) for t in seed_tables],
-                   [np.asarray(a) for a in seed_accs],
-                   trainer_image, self.fsync_payloads))
+        seed = ([np.asarray(t) for t in seed_tables],
+                [np.asarray(a) for a in seed_accs], trainer_image)
+        if self._attach_watermark is not None:
+            self._attach(chan, seed)
+            self._attach_watermark = None   # later respawns spawn fresh
+        else:
+            chan.send(("spawn", self.shard, list(self.spec.table_sizes),
+                       self.spec.n_shards, self.directory,
+                       seed[0], seed[1], seed[2], self.fsync_payloads,
+                       self.epoch))
+        self.effective_address = tuple(addr)
         self._chan = chan
         self._outq = queue.Queue(maxsize=SUBMIT_QUEUE_DEPTH)
         self._sender = threading.Thread(
@@ -1274,6 +1482,65 @@ class SocketEndpoint(RemoteEndpoint):
         self._ping_token = 0
         self._ping_sent_at = 0.0
         self._last_pong = (0, time.monotonic())
+
+    def _attach(self, chan: SockChannel, seed):
+        """Coordinator-failover handshake: adopt the parked (or still
+        nominally-connected) writer session on the far side instead of
+        spawning a fresh one.  Falls back to a normal spawn — seeded with
+        the stamped image — when the server has no session for this shard
+        (server restarted, or the writer never existed)."""
+        wm = self._attach_watermark
+        chan.send(("attach", self.epoch, self.shard))
+        reply = self._handshake_recv(chan)
+        if reply[0] == "no-writer":
+            chan.send(("spawn", self.shard, list(self.spec.table_sizes),
+                       self.spec.n_shards, self.directory,
+                       seed[0], seed[1], seed[2], self.fsync_payloads,
+                       self.epoch))
+            return
+        if reply[0] == "stale":
+            raise StaleEpochError(
+                f"shard {self.shard} attach rejected: epoch {self.epoch} "
+                f"superseded by {reply[3]}")
+        if reply[0] != "attach-ok":
+            raise WriterProcError(
+                f"shard {self.shard} attach handshake got {reply[0]!r}")
+        _, writer_wm, writer_err = reply
+        keep = writer_wm == wm and writer_err is None
+        if keep:
+            # the writer's durable watermark is exactly the last stamp:
+            # adopt its image in place, no state crosses the wire
+            chan.send(("reconcile", self.epoch, self.directory, wm,
+                       None, None, None))
+        else:
+            # a gap (applied-but-unstamped work, a lost writer tail, or a
+            # latched apply error): discard it by reseeding the stamped
+            # image — which needs the coordinator-side disk replay
+            if not self._attach_seed_ok:
+                raise WriterProcError(
+                    f"shard {self.shard} writer watermark {writer_wm} != "
+                    f"stamp {wm} and its stamped image could not be "
+                    f"replayed coordinator-side (remote-only storage?)")
+            chan.send(("reconcile", self.epoch, self.directory, wm,
+                       seed[0], seed[1], seed[2]))
+        reply = self._handshake_recv(chan)
+        if reply[0] == "stale":
+            raise StaleEpochError(
+                f"shard {self.shard} reconcile rejected: epoch "
+                f"{self.epoch} superseded by {reply[3]}")
+        if reply[0] != "reconciled":
+            raise WriterProcError(
+                f"shard {self.shard} reconcile got {reply[0]!r}")
+        self.durable_seq = max(self.durable_seq, wm)
+        self.adopted = True
+        self.reconciled = "kept" if keep else "reseeded"
+
+    def _handshake_recv(self, chan: SockChannel):
+        if not chan.poll(self.connect_timeout):
+            raise WriterProcError(
+                f"shard {self.shard} attach handshake timed out "
+                f"({self.connect_timeout:.0f}s)")
+        return chan.recv()
 
     def _sender_loop(self, chan: SockChannel, q: queue.Queue):
         """Drain the outbound queue onto the socket.  ``save_full``
@@ -1286,9 +1553,9 @@ class SocketEndpoint(RemoteEndpoint):
             if item is self._CLOSE:
                 return
             try:
-                if item[0] == "full":       # lazy: (kind, seq, step, ref)
-                    item = ("full", item[1], item[2],
-                            item[3].payload_for(self.shard))
+                if item[0] == "full":   # lazy: (kind, epoch, seq, step, ref)
+                    item = ("full", item[1], item[2], item[3],
+                            item[4].payload_for(self.shard))
                 chan.send(item)
             except (BrokenPipeError, OSError):
                 self._latch("connection lost")
@@ -1297,7 +1564,7 @@ class SocketEndpoint(RemoteEndpoint):
         # ship the ref itself; the sender thread slices + packs (the ref
         # stays pending in the transport until the fence releases it, so
         # it outlives the queue)
-        self._send(("full", seq, step, ref))
+        self._send(("full", self.epoch, seq, step, ref))
 
     # ------------------------------------------------------------ wires ---
     def _alive(self) -> bool:
@@ -1306,6 +1573,8 @@ class SocketEndpoint(RemoteEndpoint):
         return True                     # external server: trust the stream
 
     def _send_raw(self, msg):
+        if self._outq is None:          # attach never connected
+            raise BrokenPipeError("endpoint never connected")
         try:
             self._outq.put(msg, timeout=self.submit_timeout)
         except queue.Full:
@@ -1349,7 +1618,7 @@ class SocketEndpoint(RemoteEndpoint):
             self._ping_token += 1
             self._ping_sent_at = now
             try:
-                self._outq.put_nowait(("ping", self._ping_token))
+                self._outq.put_nowait(("ping", self.epoch, self._ping_token))
             except queue.Full:
                 pass                    # submit back-pressure covers this
 
@@ -1385,6 +1654,7 @@ class SocketEndpoint(RemoteEndpoint):
         on any failure the latch is (re)set and the error re-raised — the
         shard stays poisoned and can retry at the next boundary."""
         self._teardown(graceful=False)
+        self._attach_watermark = None   # re-admission always spawns fresh
         try:
             self._spawn(seed_tables, seed_accs, trainer_image)
         except BaseException as e:
@@ -1417,7 +1687,7 @@ class SocketEndpoint(RemoteEndpoint):
 
     def close(self):
         try:
-            self._send_raw(("close",))
+            self._send_raw(("close", self.epoch))
         except (BrokenPipeError, OSError, RuntimeError):
             pass
         time.sleep(0)                   # let the sender flush the close
@@ -1438,9 +1708,17 @@ class ShardTransport:
     #: fallbacks; the inproc transport's images live in this process
     is_remote = True
 
-    def __init__(self):
+    def __init__(self, epoch: int = 0):
+        self.epoch = epoch
         self.endpoints: List[ShardEndpoint] = []
         self._pending: List[SnapshotRef] = []
+
+    @property
+    def addresses(self) -> Optional[list]:
+        """The effective per-shard writer addresses (socket transport
+        only) — persisted in the coordinator's durable state so a standby
+        coordinator can re-attach to the same writer fleet."""
+        return None
 
     def make_snapshot(self, seq: int, snap_t, snap_a) -> SnapshotRef:
         ref = self._make_snapshot(seq, snap_t, snap_a)
@@ -1467,8 +1745,8 @@ class InprocTransport(ShardTransport):
 
     def __init__(self, spec: EmbShardSpec, seeds, shard_dirs,
                  async_save: bool = True, max_inflight: int = 2,
-                 fsync_payloads: bool = True):
-        super().__init__()
+                 fsync_payloads: bool = True, epoch: int = 0):
+        super().__init__(epoch=epoch)
         self.endpoints = [
             InprocEndpoint(j, spec, seeds[j][0], seeds[j][1],
                            trainer_image=seeds[j][2],
@@ -1486,9 +1764,9 @@ class PipeTransport(ShardTransport):
 
     def __init__(self, spec: EmbShardSpec, seeds, shard_dirs,
                  snapshot: str = "shm", spool_dir: Optional[str] = None,
-                 fsync_payloads: bool = True):
+                 fsync_payloads: bool = True, epoch: int = 0):
         assert snapshot in ("shm", "spool"), snapshot
-        super().__init__()
+        super().__init__(epoch=epoch)
         self.snapshot = snapshot
         self.spool_dir = spool_dir
         self._owned_spool: Optional[str] = None   # mkdtemp'd by us
@@ -1496,7 +1774,7 @@ class PipeTransport(ShardTransport):
             PipeEndpoint(j, spec, seeds[j][0], seeds[j][1],
                          trainer_image=seeds[j][2],
                          directory=shard_dirs[j],
-                         fsync_payloads=fsync_payloads)
+                         fsync_payloads=fsync_payloads, epoch=epoch)
             for j in range(spec.n_shards)]
 
     def _make_snapshot(self, seq, snap_t, snap_a):
@@ -1527,8 +1805,12 @@ class SocketTransport(ShardTransport):
                  fsync_payloads: bool = True,
                  connect_timeout: float = 20.0,
                  submit_timeout: float = SUBMIT_TIMEOUT_S,
-                 heartbeat_timeout: float = HEARTBEAT_TIMEOUT_S):
-        super().__init__()
+                 heartbeat_timeout: float = HEARTBEAT_TIMEOUT_S,
+                 epoch: int = 0,
+                 attach_watermarks: Optional[Sequence[int]] = None,
+                 attach_seed_ok: Optional[Sequence[bool]] = None,
+                 attach_fallback_spawn: Optional[Sequence[bool]] = None):
+        super().__init__(epoch=epoch)
         if addresses is not None and len(addresses) != spec.n_shards:
             raise ValueError(
                 f"socket transport needs one address per shard: got "
@@ -1544,8 +1826,24 @@ class SocketTransport(ShardTransport):
                            fsync_payloads=fsync_payloads,
                            connect_timeout=connect_timeout,
                            submit_timeout=submit_timeout,
-                           heartbeat_timeout=heartbeat_timeout)
+                           heartbeat_timeout=heartbeat_timeout,
+                           epoch=epoch,
+                           attach_watermark=(attach_watermarks[j]
+                                             if attach_watermarks is not None
+                                             else None),
+                           attach_seed_ok=(attach_seed_ok[j]
+                                           if attach_seed_ok is not None
+                                           else True),
+                           attach_fallback_spawn=(
+                               attach_fallback_spawn[j]
+                               if attach_fallback_spawn is not None
+                               else False))
             for j in range(spec.n_shards)]
+
+    @property
+    def addresses(self):
+        return [list(ep.effective_address) if ep.effective_address else None
+                for ep in self.endpoints]
 
     def _make_snapshot(self, seq, snap_t, snap_a):
         return SliceSnapshot(seq, snap_t, snap_a, self._ranges)
@@ -1558,7 +1856,7 @@ def make_transport(name: str, spec: EmbShardSpec, seeds, shard_dirs,
     transport-specific knobs (async_save/max_inflight for inproc,
     snapshot/spool_dir for pipe, addresses/timeouts for socket)."""
     name = normalize_transport(name)
-    common = {k: opts[k] for k in ("fsync_payloads",) if k in opts}
+    common = {k: opts[k] for k in ("fsync_payloads", "epoch") if k in opts}
     if name == "inproc":
         kw = {k: opts[k] for k in ("async_save", "max_inflight")
               if k in opts}
@@ -1567,6 +1865,8 @@ def make_transport(name: str, spec: EmbShardSpec, seeds, shard_dirs,
         kw = {k: opts[k] for k in ("snapshot", "spool_dir") if k in opts}
         return PipeTransport(spec, seeds, shard_dirs, **kw, **common)
     kw = {k: opts[k] for k in ("addresses", "connect_timeout",
-                               "submit_timeout", "heartbeat_timeout")
+                               "submit_timeout", "heartbeat_timeout",
+                               "attach_watermarks", "attach_seed_ok",
+                               "attach_fallback_spawn")
           if k in opts}
     return SocketTransport(spec, seeds, shard_dirs, **kw, **common)

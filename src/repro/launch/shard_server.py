@@ -1,14 +1,24 @@
 """Remote shard-writer host: Emb-PS shard checkpoint writers over TCP.
 
 Runs the same writer apply loop as the in-process / pipe transports
-(``repro.core.transport.serve_shard``), but behind a TCP listener speaking
-the length-prefixed frame protocol — so shard writers on *other hosts*
-join the coordinator's DRAIN/STAMP fence.  The server itself is stateless
-between connections: each accepted connection starts with a ``spawn``
-message carrying the shard id, shard spec, directory and seed image, and
-then becomes one writer incarnation.  Re-admission after a crash or
-partition is simply a fresh connection with a fresh seed — the coordinator
-drives it (``SocketEndpoint.respawn``).
+(``repro.core.transport.WriterSession``), but behind a TCP listener
+speaking the length-prefixed frame protocol — so shard writers on *other
+hosts* join the coordinator's DRAIN/STAMP fence.
+
+**Sessions outlive connections.**  Each accepted connection either
+``spawn``s a fresh writer incarnation or ``attach``es to one the server
+already holds: the server keeps a per-shard session registry, and a
+session whose coordinator connection drops (trainer crash, partition) is
+*parked* — image, durable watermark and latched-error state intact — until
+a successor coordinator adopts it with the ``attach``/``reconcile``
+handshake (``ShardedCheckpointWriter.attach``).  Takeover is guarded by
+the monotonic coordinator **epoch**: an ``attach`` (or ``spawn``) carrying
+an epoch no newer than the session's is answered ``("stale", ...)``, and a
+still-connected stale coordinator's commands are rejected the same way —
+an old coordinator that un-hangs can never submit or drain over its
+successor.  Plain re-admission after a crash or partition by the *same*
+coordinator remains a fresh connection + ``spawn`` with a fresh seed
+(``SocketEndpoint.respawn``).
 
 The server never imports jax: it is numpy + sockets only, so it is cheap
 to start and a trainer-side accelerator wedge cannot corrupt it.
@@ -21,23 +31,120 @@ CLI (one per writer host; the coordinator is pointed at them with
 
 With ``--port 0`` the kernel picks a free port, printed on stdout as
 ``listening on <host>:<port>``.  The per-shard checkpoint directory named
-in the ``spawn`` message is a *server-local* path: in a multi-host fleet,
-point it at storage the recovery job can read (shared fs), or ship the
-shard directories before running ``load_latest`` (docs/recovery.md).
+in the ``spawn`` / ``reconcile`` message is a *server-local* path: in a
+multi-host fleet, point it at storage the recovery job can read (shared
+fs), or ship the shard directories before running ``load_latest``
+(docs/recovery.md).
 """
 from __future__ import annotations
 
 import argparse
 import socket
 import threading
+from typing import Dict, Optional
 
 from repro.core.checkpoint import EmbShardSpec
-from repro.core.transport import SockChannel, serve_shard
+from repro.core.transport import SockChannel, WriterSession
 
 
-def _handle_conn(sock: socket.socket):
-    """One connection == one writer incarnation: read the spawn message,
-    then run the shard apply loop until the peer goes away."""
+class SessionRegistry:
+    """Per-server-process registry of live/parked writer sessions, keyed
+    by shard id.  One host typically serves several shards of one fleet;
+    the registry is what lets a successor coordinator adopt them."""
+
+    def __init__(self):
+        self.lock = threading.Lock()
+        self.sessions: Dict[int, WriterSession] = {}
+
+    def spawn(self, shard: int, session: WriterSession,
+              epoch: int) -> Optional[WriterSession]:
+        """Install a fresh incarnation for ``shard`` (evicting any prior
+        session's serve loops).  Returns None — or the existing session
+        when the spawn is stale (its epoch is older than the session's:
+        a superseded coordinator trying to respawn its lost writer)."""
+        with self.lock:
+            old = self.sessions.get(shard)
+            if old is not None:
+                if old.epoch > epoch:
+                    return old
+                old.evict()
+            self.sessions[shard] = session
+            return None
+
+    def get(self, shard: int) -> Optional[WriterSession]:
+        with self.lock:
+            return self.sessions.get(shard)
+
+
+def _serve_spawn(chan: SockChannel, registry: SessionRegistry, msg):
+    """Handle a ``spawn`` command: fresh writer incarnation (stale spawns
+    from a superseded coordinator are rejected)."""
+    (_, shard, table_sizes, n_shards, directory,
+     seed_t, seed_a, seed_tr, fsync) = msg[:9]
+    epoch = msg[9] if len(msg) > 9 else 0
+    old = registry.get(shard)
+    if old is not None and old.epoch > epoch:
+        # cheap pre-check before materializing the seed store (the
+        # install below re-checks under the registry lock for the race)
+        chan.send(("stale", "spawn", epoch, old.epoch))
+        return
+    spec = EmbShardSpec(table_sizes, n_shards)
+    session = WriterSession(shard, spec, directory,
+                            (seed_t, seed_a, seed_tr),
+                            fsync_payloads=fsync, epoch=epoch)
+    stale = registry.spawn(shard, session, epoch)
+    if stale is not None:
+        chan.send(("stale", "spawn", epoch, stale.epoch))
+        return
+    session.serve(chan, session.gen)
+
+
+def _serve_attach(chan: SockChannel, registry: SessionRegistry, msg):
+    """Handle the coordinator-failover handshake: adopt the shard's
+    session for the (strictly newer) epoch, reconcile it against the last
+    stamp, then serve.  Falls through to a plain spawn when the server
+    holds no session for the shard (server restarted since)."""
+    _, epoch, shard = msg
+    session = registry.get(shard)
+    if session is None:
+        chan.send(("no-writer",))
+        try:
+            follow = chan.recv()
+        except (EOFError, OSError):
+            return
+        if follow[0] == "spawn":
+            _serve_spawn(chan, registry, follow)
+        return
+    with session.lock:
+        if session.epoch >= epoch:
+            chan.send(("stale", "attach", epoch, session.epoch))
+            return
+        gen = session.claim(epoch)
+        wm, err = session.watermark, session.err
+    chan.send(("attach-ok", wm, err))
+    try:
+        rec = chan.recv()
+    except (EOFError, OSError):
+        return                          # adopter vanished mid-handshake
+    if rec[0] != "reconcile" or rec[1] != epoch:
+        return
+    _, _, directory, watermark, seed_t, seed_a, seed_tr = rec
+    seed = None if seed_t is None else (seed_t, seed_a, seed_tr)
+    with session.lock:
+        if session.gen != gen or session.epoch != epoch:
+            # an even newer coordinator claimed the session between our
+            # attach-ok and this reconcile: this adopter is already stale
+            chan.send(("stale", "reconcile", epoch, session.epoch))
+            return
+        wm = session.reconcile(directory, watermark, seed)
+    chan.send(("reconciled", wm))
+    session.serve(chan, gen)
+
+
+def _handle_conn(sock: socket.socket, registry: SessionRegistry):
+    """One connection == one coordinator's view of one shard writer: read
+    the opening ``spawn`` / ``attach``, then run the apply loop until the
+    peer goes away (parking the session) or a successor supersedes it."""
     chan = SockChannel(sock)
     try:
         msg = chan.recv()
@@ -45,13 +152,10 @@ def _handle_conn(sock: socket.socket):
         chan.close()
         return
     try:
-        if msg[0] != "spawn":
-            return
-        (_, shard, table_sizes, n_shards, directory,
-         seed_t, seed_a, seed_tr, fsync) = msg
-        spec = EmbShardSpec(table_sizes, n_shards)
-        serve_shard(chan, shard, spec, directory,
-                    (seed_t, seed_a, seed_tr), fsync_payloads=fsync)
+        if msg[0] == "spawn":
+            _serve_spawn(chan, registry, msg)
+        elif msg[0] == "attach":
+            _serve_attach(chan, registry, msg)
     finally:
         chan.close()
 
@@ -60,7 +164,9 @@ def serve(host: str = "127.0.0.1", port: int = 0, ready_cb=None,
           _accept_forever: bool = True) -> None:
     """Bind, listen, and serve writer connections until killed.  Each
     connection runs in its own thread (a host typically serves several
-    shards of one fleet, plus re-admission reconnects)."""
+    shards of one fleet, plus re-admission reconnects and coordinator
+    takeovers — all sharing this process's session registry)."""
+    registry = SessionRegistry()
     srv = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
     srv.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
     srv.bind((host, port))
@@ -73,7 +179,7 @@ def serve(host: str = "127.0.0.1", port: int = 0, ready_cb=None,
             conn, _ = srv.accept()
         except OSError:
             return
-        t = threading.Thread(target=_handle_conn, args=(conn,),
+        t = threading.Thread(target=_handle_conn, args=(conn, registry),
                              name="cpr-shard-conn", daemon=True)
         t.start()
         if not _accept_forever:         # test hook: serve one connection

@@ -42,7 +42,7 @@ def train(cfg, steps=200, batch=8, seq=128, lr=0.005, mode="cpr-mfu",
           async_save=False, tracker_backend="pallas", sharded_save=False,
           delta_saves=None, n_emb=8, resume=False, writer_procs=False,
           readmit=False, transport=None, shard_addrs=None,
-          heartbeat_interval=None, readmit_backoff=0.0):
+          heartbeat_interval=None, readmit_backoff=0.0, attach=False):
     """Returns (final_params, history dict)."""
     assert cfg.causal and cfg.modality_frontend is None, \
         "LM driver needs a causal text model"
@@ -62,7 +62,7 @@ def train(cfg, steps=200, batch=8, seq=128, lr=0.005, mode="cpr-mfu",
                      writer_procs=writer_procs, readmit=readmit,
                      transport=transport, shard_addrs=shard_addrs,
                      heartbeat_interval=heartbeat_interval,
-                     readmit_backoff=readmit_backoff)
+                     readmit_backoff=readmit_backoff, attach=attach)
     if resume and checkpoint_dir:
         # warm start from the last consistent cycle on disk: embedding rows,
         # their optimizer rows, and the non-embedding trainer tree
@@ -78,6 +78,20 @@ def train(cfg, steps=200, batch=8, seq=128, lr=0.005, mode="cpr-mfu",
     tracker = mgr.tracker_init([params["embed"]])
     mgr.attach_store([params["embed"]], [ostate["acc"]["embed"]],
                      {k: v for k, v in params.items() if k != "embed"})
+    if attach and checkpoint_dir and mgr.sharded_save:
+        # coordinator failover: the store just took over the previous
+        # coordinator's writer fleet at the last stamped cycle — warm the
+        # trainer from it (adopted writers serve their reconciled images;
+        # a poisoned shard falls back to its stamped disk state)
+        r_t, r_a, trainer = mgr.store.restore_all()
+        params = {**params, **(trainer or {}), "embed": jnp.asarray(r_t[0])}
+        ostate = {**ostate,
+                  "acc": {**ostate["acc"], "embed": jnp.asarray(r_a[0])}}
+        rep = mgr.store.attach_report or {}
+        print(f"attached to writer fleet: epoch={mgr.store.epoch} "
+              f"cycle={rep.get('cycle')} adopted={rep.get('adopted')} "
+              f"respawned={rep.get('respawned')} "
+              f"poisoned={rep.get('poisoned')}", flush=True)
     inj = FailureInjector(n_failures, fail_fraction, p.N_emb, p.T_total,
                           seed=seed + 1)
     mgr.set_total_samples(steps * batch)
@@ -194,6 +208,13 @@ def main():
     ap.add_argument("--resume", action="store_true",
                     help="restore the last consistent checkpoint cycle "
                          "from --checkpoint-dir before training")
+    ap.add_argument("--attach", action="store_true",
+                    help="standby-coordinator failover: take over the "
+                         "previous coordinator's writer fleet recorded in "
+                         "--checkpoint-dir/COORDINATOR (adopt running "
+                         "shard_server writers under a new epoch, "
+                         "reconcile to the last stamped cycle) and warm-"
+                         "start the trainer from it; implies sharded save")
     ap.add_argument("--tracker-backend", choices=("host", "pallas"),
                     default="pallas")
     args = ap.parse_args()
@@ -216,6 +237,7 @@ def main():
                     transport=args.transport, shard_addrs=shard_addrs,
                     heartbeat_interval=args.heartbeat_interval,
                     readmit_backoff=args.readmit_backoff,
+                    attach=args.attach,
                     tracker_backend=args.tracker_backend)
     r = hist["report"]
     o = r["overheads"]

@@ -1,0 +1,497 @@
+"""Coordinator-failover crash suite: SIGKILL the *coordinator* (not a
+writer) and assert a standby takes over the live fleet correctly.
+
+The trainer/coordinator runs in a real spawned child process that SIGKILLs
+itself at an instrumented point — mid-``save_full``, mid-DRAIN (after the
+broadcast, before collecting acks), or between DRAIN and STAMP (every
+shard acked, no cycle record written).  The test process then plays the
+standby: ``ShardedCheckpointWriter.attach(directory, ...)`` must land
+**exactly** on the last stamped cycle (applied-but-unstamped gap work is
+discarded, never resurrected; stamped work is never lost), adopt the
+still-running socket writers instead of respawning them, and resume
+fencing under a new epoch — while the dead coordinator's epoch, should a
+stale instance resurface, is rejected by every writer frame (socket) and
+at its next stamp attempt (every transport).
+
+Socket-transport cases use shard servers owned by the *test* process (one
+``shard_server.serve`` thread hosting both shards), so the writer sessions
+survive the coordinator child's death the way a real multi-host fleet's
+writers survive a trainer-node crash.
+
+Marked ``crash``; CI runs these as the crash-matrix ``failover`` leg.
+"""
+import json
+import multiprocessing
+import os
+import signal
+import threading
+import time
+
+import numpy as np
+import pytest
+from hypothesis_compat import given, settings, st
+
+from repro.core import (EmbShardSpec, ShardedCheckpointWriter,
+                        StaleCoordinatorError)
+from repro.core.checkpoint import resolve_run_dir
+from repro.core.sharded_checkpoint import (_read_coordinator_state,
+                                           COORDINATOR_PTR)
+from repro.core.transport import StaleEpochError
+from repro.launch import shard_server
+
+pytestmark = pytest.mark.crash
+
+SIZES = (48, 18)
+DIM = 8
+N_SHARDS = 2
+KILL_POINTS = ("mid-save", "mid-drain", "post-drain")
+
+
+def make_state(sizes=SIZES, d=DIM, seed=0):
+    rng = np.random.default_rng(seed)
+    tables = [rng.normal(size=(n, d)).astype(np.float32) for n in sizes]
+    accs = [np.zeros(n, np.float32) for n in sizes]
+    return tables, accs
+
+
+def start_test_owned_server():
+    """One shard_server thread in the TEST process (it hosts every shard's
+    session), so writer sessions survive the coordinator child's SIGKILL.
+    Returns the bound (host, port)."""
+    ready = threading.Event()
+    addr = {}
+
+    def ready_cb(h, p):
+        addr["hp"] = (h, p)
+        ready.set()
+
+    t = threading.Thread(target=shard_server.serve,
+                         args=("127.0.0.1", 0, ready_cb),
+                         name="cpr-test-shard-server", daemon=True)
+    t.start()
+    assert ready.wait(10.0), "shard server failed to bind"
+    return addr["hp"]
+
+
+def _sigkill_self():
+    os.kill(os.getpid(), signal.SIGKILL)
+
+
+def _coordinator_child_main(root, backend, addrs, kill_point):
+    """The doomed coordinator: stamp v1 as cycle 1, start shipping v2,
+    then SIGKILL itself at ``kill_point`` — v2 must never become the
+    recovery point."""
+    tables, accs = make_state()
+    spec = EmbShardSpec(SIZES, N_SHARDS)
+    fleet = ShardedCheckpointWriter(
+        tables, accs, spec, directory=root, backend=backend,
+        addresses=addrs, delta_saves=False, drain_timeout=30.0)
+    fleet.save_full([t + 1 for t in tables], [a + 1 for a in accs], step=1)
+    fleet.fence()                                  # cycle 1: v1 stamped
+    v2_t = [t + 2 for t in tables]
+    v2_a = [a + 2 for a in accs]
+    if kill_point == "mid-save":
+        fleet.save_full(v2_t, v2_a, step=2)
+        _sigkill_self()
+    if kill_point == "mid-drain":
+        # die after the DRAIN broadcast reached every shard but before any
+        # ack is collected
+        orig = fleet.endpoints[-1].begin_drain
+
+        def begin_and_die(token):
+            orig(token)
+            _sigkill_self()
+        fleet.endpoints[-1].begin_drain = begin_and_die
+    if kill_point == "post-drain":
+        # die with every shard's DRAIN acked (v2 applied + durable on the
+        # writers) but the cycle stamp never written — the acceptance
+        # window: attach() must still land on v1
+        orig_drain = fleet._drain
+
+        def drain_and_die():
+            orig_drain()
+            _sigkill_self()
+        fleet._drain = drain_and_die
+    fleet.save_full(v2_t, v2_a, step=2)
+    time.sleep(0.3)                 # let the writers apply v2 (gap work)
+    fleet.fence()                   # triggers the instrumented kill
+    os._exit(3)                     # never reached
+
+
+def run_doomed_coordinator(root, backend, addrs, kill_point):
+    ctx = multiprocessing.get_context("spawn")
+    # not daemonic: the pipe-transport coordinator spawns writer children
+    proc = ctx.Process(target=_coordinator_child_main,
+                       args=(str(root), backend, addrs, kill_point))
+    proc.start()
+    proc.join(timeout=120.0)
+    if proc.is_alive():
+        proc.kill()
+        proc.join(timeout=10.0)
+        pytest.fail(f"coordinator child hung at kill point {kill_point}")
+    assert proc.exitcode == -signal.SIGKILL, proc.exitcode
+
+
+def assert_exactly_v1(lt, la, tables, accs):
+    for t in range(len(SIZES)):
+        np.testing.assert_array_equal(lt[t], tables[t] + 1)
+        np.testing.assert_array_equal(la[t], accs[t] + 1)
+
+
+@pytest.mark.parametrize("kill_point", KILL_POINTS)
+@pytest.mark.parametrize("backend", ["pipe", "socket"])
+def test_failover_attach_lands_on_last_stamp(tmp_path, backend, kill_point):
+    """Acceptance: coordinator SIGKILL mid-save / mid-DRAIN / between
+    DRAIN and STAMP, then attach() recovers exactly to the last stamped
+    cycle (v1) — the v2 gap is discarded, not resurrected — with socket
+    writers adopted in place (not respawned) and the fleet fencing on
+    under the new epoch."""
+    addrs = None
+    if backend == "socket":
+        hp = start_test_owned_server()
+        addrs = [hp] * N_SHARDS
+    tables, accs = make_state()
+    spec = EmbShardSpec(SIZES, N_SHARDS)
+    run_doomed_coordinator(tmp_path, backend, addrs, kill_point)
+
+    fleet = ShardedCheckpointWriter.attach(
+        str(tmp_path), tables, accs, spec, addresses=addrs,
+        delta_saves=False, drain_timeout=30.0)
+    rep = fleet.attach_report
+    assert rep is not None and rep["poisoned"] == []
+    assert fleet.epoch == 2
+    if backend == "socket":
+        # the live writers were adopted over a re-handshake, not respawned
+        assert rep["adopted"] == list(range(N_SHARDS))
+        assert rep["respawned"] == []
+    else:
+        # pipe writers died with the coordinator process; fresh writers
+        # are seeded from the stamped images
+        assert rep["respawned"] == list(range(N_SHARDS))
+
+    # the takeover image is exactly the last stamp — and agrees with cold
+    # disk recovery (the ground-truth oracle)
+    lt, la, _ = fleet.restore_all()
+    assert_exactly_v1(lt, la, tables, accs)
+    cold = ShardedCheckpointWriter.load_latest(
+        str(tmp_path), tables, accs, spec)
+    ct, ca, _ = cold.restore_all()
+    for t in range(len(SIZES)):
+        np.testing.assert_array_equal(lt[t], ct[t])
+        np.testing.assert_array_equal(la[t], ca[t])
+
+    # the adopted fleet keeps working: a fresh save/fence stamps under the
+    # new epoch and becomes the recovery point
+    fleet.save_full([t + 5 for t in tables], [a + 5 for a in accs], step=5)
+    fleet.fence()
+    assert fleet.failed == {}
+    fleet.close()
+    lt, _, _ = ShardedCheckpointWriter.load_latest(
+        str(tmp_path), tables, accs, spec).restore_all()
+    for t in range(len(SIZES)):
+        np.testing.assert_array_equal(lt[t], tables[t] + 5)
+    # no duplicate events: every stamped (shard, seq) pair is unique
+    run_dir = resolve_run_dir(str(tmp_path))
+    with open(os.path.join(run_dir, "manifest.json")) as f:
+        evs = [e for e in json.load(f)["events"] if e["kind"] != "cycle"]
+    keys = [(e["shard"], e["seq"]) for e in evs]
+    assert len(keys) == len(set(keys))
+
+
+def test_failover_no_gap_adopts_writers_in_place(tmp_path):
+    """A coordinator that dies *between* fences (no in-flight work) leaves
+    writers whose durable watermark equals the stamp: attach keeps their
+    images in place — no seed crosses the wire — and still lands on the
+    stamp."""
+    hp = start_test_owned_server()
+    addrs = [hp] * N_SHARDS
+    tables, accs = make_state()
+    spec = EmbShardSpec(SIZES, N_SHARDS)
+
+    ctx = multiprocessing.get_context("spawn")
+    proc = ctx.Process(target=_quiet_coordinator_child,
+                       args=(str(tmp_path), addrs))
+    proc.start()
+    proc.join(timeout=120.0)
+    assert proc.exitcode == -signal.SIGKILL
+
+    fleet = ShardedCheckpointWriter.attach(
+        str(tmp_path), tables, accs, spec, addresses=addrs,
+        delta_saves=False)
+    rep = fleet.attach_report
+    assert rep["adopted"] == list(range(N_SHARDS))
+    assert rep["reconciled"] == {j: "kept" for j in range(N_SHARDS)}
+    lt, la, _ = fleet.restore_all()
+    assert_exactly_v1(lt, la, tables, accs)
+    fleet.close()
+
+
+def _quiet_coordinator_child(root, addrs):
+    tables, accs = make_state()
+    spec = EmbShardSpec(SIZES, N_SHARDS)
+    fleet = ShardedCheckpointWriter(
+        tables, accs, spec, directory=root, backend="socket",
+        addresses=addrs, delta_saves=False, drain_timeout=30.0)
+    fleet.save_full([t + 1 for t in tables], [a + 1 for a in accs], step=1)
+    fleet.fence()                   # watermark == stamp; then die quietly
+    _sigkill_self()
+
+
+def test_failover_stale_socket_coordinator_rejected_on_every_path(tmp_path):
+    """Split-brain: the old coordinator HANGS (stays connected) while a
+    standby attaches.  When it un-hangs, every writer rejects its frames
+    with a stale-epoch error, and its stamp attempt is refused by the
+    durable epoch check — the successor's cycle stamps survive."""
+    tables, accs = make_state()
+    spec = EmbShardSpec(SIZES, N_SHARDS)
+    old = ShardedCheckpointWriter(tables, accs, spec,
+                                  directory=str(tmp_path), backend="socket",
+                                  delta_saves=False, drain_timeout=10.0)
+    old.save_full([t + 1 for t in tables], [a + 1 for a in accs], step=1)
+    old.fence()                                    # cycle 1 under epoch 1
+    new = ShardedCheckpointWriter.attach(str(tmp_path), tables, accs, spec,
+                                         delta_saves=False,
+                                         drain_timeout=10.0)
+    assert new.epoch == old.epoch + 1
+    assert new.attach_report["adopted"] == list(range(N_SHARDS))
+    # the old coordinator un-hangs: submits are rejected at the writers
+    old.save_full([t + 8 for t in tables], [a + 8 for a in accs], step=8)
+    deadline = time.monotonic() + 10.0
+    while time.monotonic() < deadline:
+        for ep in old.endpoints:
+            ep.pump()
+        if all(ep.error is not None for ep in old.endpoints):
+            break
+        time.sleep(0.05)
+    assert all(isinstance(ep.error, StaleEpochError)
+               for ep in old.endpoints), [ep.error for ep in old.endpoints]
+    # ... and its stamp attempt is refused before touching the manifest
+    with pytest.raises(StaleCoordinatorError):
+        old.fence(strict=False)
+    # the successor is untouched by any of it
+    new.save_full([t + 3 for t in tables], [a + 3 for a in accs], step=3)
+    new.fence()
+    assert new.failed == {}
+    old.close()
+    new.close()
+    lt, _, _ = ShardedCheckpointWriter.load_latest(
+        str(tmp_path), tables, accs, spec).restore_all()
+    for t in range(len(SIZES)):
+        np.testing.assert_array_equal(lt[t], tables[t] + 3)
+
+
+def test_failover_stale_pipe_coordinator_stamp_refused(tmp_path):
+    """Pipe transport: the stale coordinator still owns its own child
+    writers (nothing can adopt a pipe), so the split-brain guard is the
+    durable epoch check — its DRAIN may succeed against its own children,
+    but the STAMP is refused and neither the manifest nor CURRENT moves."""
+    tables, accs = make_state()
+    spec = EmbShardSpec(SIZES, N_SHARDS)
+    old = ShardedCheckpointWriter(tables, accs, spec,
+                                  directory=str(tmp_path), backend="pipe",
+                                  delta_saves=False, drain_timeout=30.0)
+    old.save_full([t + 1 for t in tables], [a + 1 for a in accs], step=1)
+    old.fence()
+    new = ShardedCheckpointWriter.attach(str(tmp_path), tables, accs, spec,
+                                         delta_saves=False,
+                                         drain_timeout=30.0)
+    new.save_full([t + 3 for t in tables], [a + 3 for a in accs], step=3)
+    new.fence()                                    # successor's stamp
+    current_before = open(os.path.join(str(tmp_path), "CURRENT")).read()
+    run_dir = resolve_run_dir(str(tmp_path))
+    manifest_before = open(os.path.join(run_dir, "manifest.json")).read()
+    # the stale coordinator un-hangs, saves to its own writers, and tries
+    # to stamp over the successor
+    old.save_full([t + 9 for t in tables], [a + 9 for a in accs], step=9)
+    with pytest.raises(StaleCoordinatorError):
+        old.fence()
+    assert open(os.path.join(str(tmp_path), "CURRENT")).read() == \
+        current_before
+    assert open(os.path.join(run_dir, "manifest.json")).read() == \
+        manifest_before
+    old.close()
+    new.close()
+    lt, _, _ = ShardedCheckpointWriter.load_latest(
+        str(tmp_path), tables, accs, spec).restore_all()
+    for t in range(len(SIZES)):
+        np.testing.assert_array_equal(lt[t], tables[t] + 3)
+
+
+def test_failover_attach_requires_coordinator_state(tmp_path):
+    tables, accs = make_state()
+    spec = EmbShardSpec(SIZES, N_SHARDS)
+    with pytest.raises(FileNotFoundError):
+        ShardedCheckpointWriter.attach(str(tmp_path), tables, accs, spec)
+
+
+def test_failover_coordinator_state_tracks_fleet(tmp_path):
+    """The durable COORDINATOR record carries the shard registry, epoch,
+    stamp and re-admission ledger a standby needs — and is rewritten
+    atomically at claim, stamp and readmit time."""
+    tables, accs = make_state()
+    spec = EmbShardSpec(SIZES, N_SHARDS)
+    fleet = ShardedCheckpointWriter(tables, accs, spec,
+                                    directory=str(tmp_path),
+                                    backend="socket", delta_saves=False)
+    st = _read_coordinator_state(str(tmp_path))
+    assert st["epoch"] == 1 and st["backend"] == "socket"
+    assert st["cycle"] == 0 and st["n_shards"] == N_SHARDS
+    assert len(st["addresses"]) == N_SHARDS
+    assert all(a is not None for a in st["addresses"])
+    fleet.save_full([t + 1 for t in tables], [a + 1 for a in accs], step=1)
+    fleet.fence()
+    st = _read_coordinator_state(str(tmp_path))
+    assert st["cycle"] == 1
+    assert all(int(v) > 0 for v in st["shard_seq"].values())
+    fleet.kill_shard(1)
+    fleet.fence(strict=False)
+    st = _read_coordinator_state(str(tmp_path))
+    assert st["failed_shards"] == [1]
+    assert fleet.readmit(tables, accs, step=2) == [1]
+    st = _read_coordinator_state(str(tmp_path))
+    assert st["readmissions"] == 1
+    fleet.close()
+    assert os.path.exists(os.path.join(str(tmp_path), COORDINATOR_PTR))
+
+
+# ---------------------------------------------------------------- property --
+def _drive_random_schedule_then_kill(root, addrs, seed):
+    """Child: seeded random save/fence schedule over the socket fleet,
+    then SIGKILL at a seeded point (possibly mid-fence)."""
+    rng = np.random.default_rng(seed)
+    tables, accs = make_state(seed=seed + 1)
+    spec = EmbShardSpec(SIZES, N_SHARDS)
+    fleet = ShardedCheckpointWriter(
+        tables, accs, spec, directory=root, backend="socket",
+        addresses=addrs, delta_saves=False, drain_timeout=30.0)
+    n_ops = int(rng.integers(2, 7))
+    kill_at = int(rng.integers(0, n_ops + 1))
+    for k in range(n_ops):
+        if k == kill_at:
+            _sigkill_self()
+        op = rng.random()
+        if op < 0.4:
+            fleet.fence(strict=False)
+        elif op < 0.7:
+            fleet.save_full([t + k + 1 for t in tables],
+                            [a + k + 1 for a in accs], step=k)
+        else:
+            rows = rng.choice(SIZES[0], size=16, replace=False)
+            fleet.save_rows(0, rows,
+                            rng.normal(size=(16, DIM)).astype(np.float32),
+                            rng.random(16).astype(np.float32), step=k)
+    if kill_at >= n_ops:
+        # kill inside the final fence, after the drain barrier
+        orig = fleet._drain
+        fleet._drain = lambda: (orig(), _sigkill_self())[0]
+    fleet.fence(strict=False)
+    _sigkill_self()
+
+
+def _assert_attach_equals_cold_recovery(root, addrs, seed):
+    run_doomed = multiprocessing.get_context("spawn").Process(
+        target=_drive_random_schedule_then_kill,
+        args=(str(root), addrs, seed))
+    run_doomed.start()
+    run_doomed.join(timeout=120.0)
+    assert run_doomed.exitcode == -signal.SIGKILL
+    tables, accs = make_state(seed=seed + 1)
+    spec = EmbShardSpec(SIZES, N_SHARDS)
+    if _read_coordinator_state(str(root)) is None:
+        return                      # killed before the fleet ever came up
+    fleet = ShardedCheckpointWriter.attach(
+        str(root), tables, accs, spec, addresses=addrs, delta_saves=False)
+    assert fleet.attach_report["poisoned"] == []
+    lt, la, _ = fleet.restore_all()
+    try:
+        cold = ShardedCheckpointWriter.load_latest(
+            str(root), tables, accs, spec)
+        ct, ca, _ = cold.restore_all()
+    except FileNotFoundError:
+        # nothing ever stamped: the takeover image must be the init state
+        ct, ca = tables, accs
+    for t in range(len(SIZES)):
+        np.testing.assert_array_equal(lt[t], ct[t])
+        np.testing.assert_array_equal(la[t], ca[t])
+    # and the fleet still fences forward
+    fleet.save_full([t + 50 for t in tables], [a + 50 for a in accs],
+                    step=50)
+    fleet.fence()
+    assert fleet.failed == {}
+    fleet.close()
+
+
+def test_failover_random_interleavings_fixed_seeds(tmp_path):
+    """Fixed-seed sweep of the interleaving property: whatever the
+    coordinator was doing when it died, attach() must agree exactly with
+    cold disk recovery and keep fencing."""
+    for seed in (1, 2, 3):
+        hp = start_test_owned_server()
+        _assert_attach_equals_cold_recovery(tmp_path / f"s{seed}",
+                                            [hp] * N_SHARDS, seed)
+
+
+@settings(max_examples=3, deadline=None)
+@given(st.integers(0, 10_000))
+def test_failover_random_interleavings_property(seed):
+    """Hypothesis variant (bounded: every example spawns a coordinator
+    child and SIGKILLs it for real)."""
+    import tempfile
+    with tempfile.TemporaryDirectory() as tmp:
+        hp = start_test_owned_server()
+        _assert_attach_equals_cold_recovery(tmp, [hp] * N_SHARDS, seed)
+
+
+def test_failover_attach_after_clean_exit_respawns_loopback(tmp_path):
+    """A previous coordinator that exited cleanly took its auto-spawned
+    loopback servers with it — there is nothing live to adopt.  attach()
+    must degrade those shards to fresh auto-spawned writers seeded with
+    the stamped image (a working fleet at the last stamp), not poison
+    them."""
+    tables, accs = make_state()
+    spec = EmbShardSpec(SIZES, N_SHARDS)
+    f1 = ShardedCheckpointWriter(tables, accs, spec,
+                                 directory=str(tmp_path), backend="socket",
+                                 delta_saves=False)
+    f1.save_full([t + 1 for t in tables], [a + 1 for a in accs], step=1)
+    f1.fence()
+    f1.close()                  # owned loopback servers die here
+    f2 = ShardedCheckpointWriter.attach(str(tmp_path), tables, accs, spec,
+                                        delta_saves=False)
+    rep = f2.attach_report
+    assert rep["poisoned"] == []
+    assert rep["respawned"] == list(range(N_SHARDS))
+    lt, la, _ = f2.restore_all()
+    assert_exactly_v1(lt, la, tables, accs)
+    f2.save_full([t + 7 for t in tables], [a + 7 for a in accs], step=7)
+    f2.fence()                  # the respawned fleet really persists
+    assert f2.failed == {}
+    f2.close()
+    lt, _, _ = ShardedCheckpointWriter.load_latest(
+        str(tmp_path), tables, accs, spec).restore_all()
+    for t in range(len(SIZES)):
+        np.testing.assert_array_equal(lt[t], tables[t] + 7)
+
+
+def test_failover_bare_claim_marker_fences_stamps(tmp_path):
+    """The takeover window: a standby drops its O_EXCL .epoch-<n>.claim
+    marker BEFORE any adoption work, and possibly seconds before it
+    rewrites COORDINATOR.  A predecessor that un-hangs inside that window
+    must already be fenced off the stamp path by the bare marker."""
+    tables, accs = make_state()
+    spec = EmbShardSpec(SIZES, N_SHARDS)
+    old = ShardedCheckpointWriter(tables, accs, spec,
+                                  directory=str(tmp_path), backend="inproc",
+                                  delta_saves=False)
+    old.save_full([t + 1 for t in tables], [a + 1 for a in accs], step=1)
+    old.fence()
+    # a successor has claimed epoch 2 but not yet persisted COORDINATOR
+    open(os.path.join(str(tmp_path), ".epoch-2.claim"), "w").close()
+    old.save_full([t + 9 for t in tables], [a + 9 for a in accs], step=9)
+    with pytest.raises(StaleCoordinatorError):
+        old.fence()
+    # and its state persist must not clobber the successor's claim either
+    st_before = _read_coordinator_state(str(tmp_path))
+    old._persist_coordinator_state()
+    assert _read_coordinator_state(str(tmp_path)) == st_before
+    old.close()

@@ -369,7 +369,7 @@ def test_socket_severed_mid_drain_recovers_to_last_stamp(tmp_path):
     fleet.fence()                                  # cycle 1: both shards
     fleet.save_full([t + 2 for t in tables], [a + 2 for a in accs], step=2)
     # sever concurrently with the drain broadcast/collect
-    t = time.time()
+    t = time.monotonic()
     sever = __import__("threading").Timer(0.01, fleet.procs[1].sever)
     sever.start()
     try:
@@ -380,7 +380,7 @@ def test_socket_severed_mid_drain_recovers_to_last_stamp(tmp_path):
         assert sorted(e.shard_errors) == [1]
     sever.join()
     fleet.close()
-    assert time.time() - t < fleet._drain_timeout + 15.0
+    assert time.monotonic() - t < fleet._drain_timeout + 15.0
     lt, la, _ = ShardedCheckpointWriter.load_latest(
         str(tmp_path), tables, accs, spec).restore_all()
     for tt in range(len(SIZES)):
@@ -483,8 +483,8 @@ def test_acked_events_of_killed_writer_are_stamped(tmp_path):
                     step=2)
     # wait until the worker's ack is sitting unread in the pipe — i.e. the
     # apply is done and persisted — then kill before anything pumps it
-    deadline = time.time() + 15.0
-    while not fleet.procs[0]._conn.poll(0) and time.time() < deadline:
+    deadline = time.monotonic() + 15.0
+    while not fleet.procs[0]._conn.poll(0) and time.monotonic() < deadline:
         time.sleep(0.01)
     assert fleet.procs[0]._conn.poll(0), "ack never arrived"
     sigkill(fleet, 0)

@@ -684,3 +684,66 @@ def test_crash_before_first_fence_preserves_prior_run(tmp_path):
         str(tmp_path), tables, accs, spec).restore_all()
     np.testing.assert_array_equal(lt2[0], tables[0] + 9)
     run2.close()
+
+
+# ------------------------------------------------ manager attach (failover) --
+def test_manager_attach_takes_over_directory(tmp_path):
+    """CPRManager(attach=True): a fresh manager adopts the previous
+    coordinator's directory — next epoch, last stamped image — instead of
+    spawning a new history; the superseded manager cannot stamp again.
+    (Socket-adoption and coordinator-SIGKILL variants live in the crash
+    suite, tests/test_coordinator_failover.py.)"""
+    from repro.core import StaleCoordinatorError
+
+    p = SystemParams(N_emb=2)
+    tables, accs = make_state()
+    mgr1 = CPRManager("cpr", p, SIZES, directory=str(tmp_path),
+                      sharded_save=True, delta_saves=False)
+    mgr1.attach_store(tables, accs)
+    mgr1.set_total_samples(100)
+    mgr1.run_save(mgr1.save_interval, [t + 1 for t in tables],
+                  [a + 1 for a in accs], {}, step=1)     # stamps cycle 1
+    # mgr1's process "dies" (no close); the standby attaches
+    mgr2 = CPRManager("cpr", p, SIZES, directory=str(tmp_path),
+                      attach=True, delta_saves=False)
+    assert mgr2.sharded_save                     # attach implies sharded
+    mgr2.attach_store(tables, accs)
+    assert mgr2.store.epoch == mgr1.store.epoch + 1
+    assert mgr2.store.attach_report is not None
+    rt, ra, _ = mgr2.store.restore_all()
+    for t in range(len(SIZES)):
+        np.testing.assert_array_equal(rt[t], tables[t] + 1)
+    rep = mgr2.report()
+    assert rep["coordinator_epoch"] == 2
+    assert rep["attach"]["poisoned"] == []
+    # the successor fences forward; the stale predecessor cannot stamp
+    mgr2.store.save_full([t + 2 for t in tables], [a + 2 for a in accs],
+                         step=2)
+    mgr2.store.fence()
+    with pytest.raises(StaleCoordinatorError):
+        mgr1.store.fence(strict=False)
+    mgr1.close()                                 # swallowed; never stamps
+    mgr2.close()
+    lt, _, _ = ShardedCheckpointWriter.load_latest(
+        str(tmp_path), tables, accs, EmbShardSpec(SIZES, 2)).restore_all()
+    for t in range(len(SIZES)):
+        np.testing.assert_array_equal(lt[t], tables[t] + 2)
+
+
+def test_manager_attach_on_fresh_directory_starts_fresh(tmp_path):
+    """attach=True with no COORDINATOR record degrades to a normal fresh
+    coordinator (first launch of a standby-enabled job)."""
+    p = SystemParams(N_emb=2)
+    tables, accs = make_state()
+    mgr = CPRManager("cpr", p, SIZES, directory=str(tmp_path), attach=True,
+                     delta_saves=False)
+    mgr.attach_store(tables, accs)
+    assert mgr.store.epoch == 1
+    assert mgr.store.attach_report is None
+    mgr.store.save_full([t + 1 for t in tables], [a + 1 for a in accs],
+                        step=1)
+    mgr.store.fence()
+    mgr.close()
+    lt, _, _ = ShardedCheckpointWriter.load_latest(
+        str(tmp_path), tables, accs, EmbShardSpec(SIZES, 2)).restore_all()
+    np.testing.assert_array_equal(lt[0], tables[0] + 1)

@@ -1,10 +1,12 @@
 """Transport-layer tests: wire codec, channels, snapshot shipping, payload
-fsync, heartbeat liveness, re-admission back-off, and the atomic-respawn
-regression.
+fsync, heartbeat liveness (incl. the close/monitor race), re-admission
+back-off, the atomic-respawn regression, epoch staleness on the wire, and
+partial-send channel poisoning.
 
 Cross-transport behavioral parity (byte-identical manifests/images) lives
 in tests/test_sharded_checkpoint.py; SIGKILL crash injection (pipe workers
-and socket servers) lives in tests/test_crash_recovery.py.
+and socket servers) lives in tests/test_crash_recovery.py; coordinator
+failover/takeover lives in tests/test_coordinator_failover.py.
 """
 import os
 import socket as socket_mod
@@ -17,8 +19,9 @@ import pytest
 from repro.core import EmbShardSpec, ShardedCheckpointWriter, ShardSaveError
 from repro.core.transport import (InprocTransport, PipeEndpoint, ShmSnapshot,
                                   SliceSnapshot, SockChannel, SpoolSnapshot,
-                                  _apply_full_payload, _ShardStore,
-                                  normalize_transport, pack_msg, unpack_msg)
+                                  WriterSession, _apply_full_payload,
+                                  _ShardStore, normalize_transport, pack_msg,
+                                  unpack_msg)
 
 SIZES = (40, 17, 3)
 
@@ -199,8 +202,8 @@ def test_fence_fsyncs_dead_shards_acked_payloads(tmp_path, monkeypatch):
     fleet.save_rows(0, rows, np.full((4, 8), 5.0, np.float32),
                     np.full(4, 5.0, np.float32), step=1)
     # wait until the ack (apply + persist done) is buffered, then kill
-    deadline = time.time() + 15.0
-    while not fleet.procs[0]._conn.poll(0) and time.time() < deadline:
+    deadline = time.monotonic() + 15.0
+    while not fleet.procs[0]._conn.poll(0) and time.monotonic() < deadline:
         time.sleep(0.01)
     assert fleet.procs[0]._conn.poll(0)
     fleet.procs[0].kill()
@@ -231,8 +234,8 @@ def test_heartbeat_detects_dead_pipe_writer_without_a_save(tmp_path):
                                     delta_saves=False,
                                     heartbeat_interval=0.05)
     fleet.procs[1].proc.kill()          # die silently, no latch
-    deadline = time.time() + 10.0
-    while fleet.procs[1].error is None and time.time() < deadline:
+    deadline = time.monotonic() + 10.0
+    while fleet.procs[1].error is None and time.monotonic() < deadline:
         time.sleep(0.02)
     assert fleet.procs[1].error is not None   # latched with no save traffic
     assert "heartbeat" in str(fleet.procs[1].error)
@@ -342,6 +345,170 @@ def test_failed_respawn_leaves_shard_poisoned_not_half_registered(
         lo, hi = spec.shard_range(t, 1)          # readmitted: reseed full
         np.testing.assert_array_equal(lt[t][lo:hi], (tables[t] + 4)[lo:hi])
     fleet.close()
+
+
+# ----------------------------------------------- epoch staleness (wire) -----
+def test_writer_session_rejects_stale_epoch_commands():
+    """Satellite of the failover tentpole, at the wire level: the one
+    worker apply loop every transport runs rejects submit/DRAIN/image from
+    an epoch older than the one it last adopted — so a superseded
+    coordinator cannot apply work or collect a drain ack anywhere."""
+    tables, accs = make_state()
+    spec = EmbShardSpec(SIZES, 1)
+    a, b = socket_mod.socketpair()
+    ca, cb = SockChannel(a), SockChannel(b)
+    session = WriterSession(0, spec, None, (tables, accs, None), epoch=5)
+    t = threading.Thread(target=session.serve, args=(cb, session.gen),
+                         daemon=True)
+    t.start()
+    rows = np.arange(4)
+    vals = np.full((4, 8), 2.0, np.float32)
+    # stale submit: rejected, never applied
+    ca.send(("rows", 4, 1, 0, 0, rows, vals, np.full(4, 2.0, np.float32)))
+    assert ca.poll(5.0)
+    assert ca.recv() == ("stale", "rows", 4, 5)
+    # stale DRAIN: rejected (a stale fence can never collect watermarks)
+    ca.send(("drain", 4, 77))
+    assert ca.poll(5.0)
+    assert ca.recv() == ("stale", "drain", 4, 5)
+    # stale image read: rejected too
+    ca.send(("image", 4))
+    assert ca.poll(5.0)
+    assert ca.recv()[:2] == ("stale", "image")
+    # current-epoch traffic still works, and the stale submit left no mark
+    ca.send(("rows", 5, 1, 0, 0, rows, vals, np.full(4, 2.0, np.float32)))
+    assert ca.poll(5.0)
+    kind, seq, ev = ca.recv()
+    assert kind == "ack" and seq == 1
+    ca.send(("drain", 5, 78))
+    assert ca.poll(5.0)
+    assert ca.recv() == ("drained", 78, 1, None)
+    np.testing.assert_array_equal(session.store.image_tables[0][:4], vals)
+    ca.send(("close", 5))
+    t.join(timeout=5.0)
+    assert not t.is_alive()
+    ca.close()
+    cb.close()
+
+
+# ------------------------------------- partial-send channel poisoning -------
+def test_partial_send_poisons_channel_and_shard(tmp_path):
+    """Satellite bugfix: a timeout that interrupts ``sendall`` mid-frame
+    leaves the connection desynchronized — it must be severed and never
+    reused (reusing it would splice the next frame into the torn one and
+    corrupt the stream).  The shard is poisoned; the fleet fences on."""
+    tables, accs = make_state()
+    spec = EmbShardSpec(SIZES, 2)
+    fleet = ShardedCheckpointWriter(tables, accs, spec,
+                                    directory=str(tmp_path),
+                                    backend="socket", delta_saves=False,
+                                    drain_timeout=15.0)
+    fleet.save_full([t + 1 for t in tables], [a + 1 for a in accs], step=1)
+    fleet.fence()
+    chan = fleet.procs[1]._chan
+    real_sock = chan._sock
+    sendall_calls = {"n": 0}
+
+    class ShortWriteSock:
+        def __getattr__(self, name):
+            return getattr(real_sock, name)
+
+        def sendall(self, data):
+            sendall_calls["n"] += 1
+            real_sock.send(data[:max(1, len(data) // 2)])   # torn frame
+            raise socket_mod.timeout("injected short write")
+
+    chan._sock = ShortWriteSock()
+    rows = np.arange(25, 35)                       # owned by shard 1
+    fleet.save_rows(0, rows, np.full((10, 8), 7.0, np.float32),
+                    np.full(10, 7.0, np.float32), step=2)
+    deadline = time.monotonic() + 10.0             # sender thread latches
+    while fleet.procs[1].error is None and time.monotonic() < deadline:
+        time.sleep(0.02)
+    assert fleet.procs[1].error is not None
+    assert chan._broken
+    n_after_poison = sendall_calls["n"]
+    assert n_after_poison == 1
+    # the poisoned channel hard-fails instead of splicing another frame
+    # after the torn one
+    with pytest.raises(BrokenPipeError):
+        chan.send(("ping", 1, 99))
+    assert sendall_calls["n"] == n_after_poison
+    # one torn channel poisons one shard; the fence stamps the other
+    with pytest.raises(ShardSaveError) as ei:
+        fleet.fence()
+    assert sorted(ei.value.shard_errors) == [1]
+    fleet.close()
+    lt, _, _ = ShardedCheckpointWriter.load_latest(
+        str(tmp_path), tables, accs, spec).restore_all()
+    for t, n in enumerate(SIZES):
+        lo, hi = spec.shard_range(t, 0)
+        np.testing.assert_array_equal(lt[t][lo:hi], (tables[t] + 1)[lo:hi])
+        lo, hi = spec.shard_range(t, 1)
+        np.testing.assert_array_equal(lt[t][lo:hi], (tables[t] + 1)[lo:hi])
+
+
+# ------------------------------------------ heartbeat/close serialization ---
+def test_close_stands_down_heartbeat_monitor(tmp_path):
+    """Satellite bugfix (heartbeat/close race): a monitor sweep that fires
+    once close() has begun — the workers are mid-shutdown and look dead —
+    must be a no-op, not a spurious poison with a ``failed_shards`` entry
+    in the final cycle stamp."""
+    tables, accs = make_state()
+    spec = EmbShardSpec(SIZES, 2)
+    fleet = ShardedCheckpointWriter(tables, accs, spec,
+                                    directory=str(tmp_path), backend="pipe",
+                                    delta_saves=False,
+                                    heartbeat_interval=0.02)
+    fleet.save_full([t + 1 for t in tables], [a + 1 for a in accs], step=1)
+    fleet.close()
+    # simulate the racing monitor thread firing late, exactly as if its
+    # join had timed out mid-sweep: must not latch the (now gone) workers
+    fleet._probe_sweep()
+    assert fleet.failed == {}
+    assert all(ep.error is None for ep in fleet.endpoints)
+    import json
+    from repro.core.checkpoint import resolve_run_dir
+    run_dir = resolve_run_dir(str(tmp_path))
+    with open(os.path.join(run_dir, "manifest.json")) as f:
+        cycles = [e for e in json.load(f)["events"] if e["kind"] == "cycle"]
+    assert cycles and all(c["failed_shards"] == [] for c in cycles)
+
+
+def test_clean_close_under_aggressive_heartbeat(tmp_path):
+    """Close repeatedly under a monitor probing every few milliseconds:
+    the sweep is serialized against the fence/close window, so a clean
+    shutdown never records a poisoned shard."""
+    tables, accs = make_state()
+    spec = EmbShardSpec(SIZES, 2)
+    for k in range(3):
+        fleet = ShardedCheckpointWriter(
+            tables, accs, spec, directory=str(tmp_path / f"r{k}"),
+            backend="pipe", delta_saves=False, heartbeat_interval=0.005)
+        fleet.save_full([t + 1 for t in tables], [a + 1 for a in accs],
+                        step=1)
+        fleet.fence()
+        fleet.close()
+        assert fleet.failed == {}
+
+
+# --------------------------------------------- monotonic-timer invariant ----
+def test_internal_timers_are_monotonic_not_wall_clock():
+    """Satellite bugfix guard: every internal deadline/back-off timer
+    (heartbeat silence, drain deadlines, readmit back-off) must use
+    ``time.monotonic()`` — an NTP step must never expire or extend them.
+    Wall-clock time is allowed only in persisted records (event/cycle
+    timestamps, the COORDINATOR state)."""
+    import inspect
+
+    import repro.core.sharded_checkpoint as sc
+    import repro.core.transport as tr
+    for mod in (tr, sc):
+        for i, line in enumerate(inspect.getsource(mod).splitlines(), 1):
+            if "time.time()" in line:
+                assert '"time"' in line, (
+                    f"{mod.__name__}:{i} uses wall-clock time.time() "
+                    f"outside a persisted record: {line.strip()}")
 
 
 # --------------------------------------------------- socket severance -------
