@@ -27,6 +27,7 @@ BENCHMARKS = [
     ("fig13", "benchmarks.fig13_scalability", {}),
     ("fig14", "benchmarks.fig14_async_save", {}),
     ("fig15", "benchmarks.fig15_sharded_save", {}),
+    ("fig16", "benchmarks.fig16_reshard", {}),
     ("table1", "benchmarks.table1_trackers", {}),
 ]
 
@@ -37,6 +38,7 @@ FAST_OVERRIDES = {
     "fig14": {"max_rows": (20_000,), "events": 3,
               "select_sizes": (50_000,)},
     "fig15": {"max_rows": 8_000, "n_shards": (1, 2, 4), "events": 3},
+    "fig16": {"max_rows": 6_000, "n_ops": 3},
 }
 
 

@@ -9,6 +9,8 @@ Public API:
                                                  a coordinator fence
   StaleCoordinatorError                        — this coordinator was
                                                  superseded by a standby
+  LeaseHeldError, lease_status                 — lease-based coordinator
+                                                 leader election
   ShardTransport, make_transport, TRANSPORTS   — pluggable writer transports
                                                  (inproc / pipe / socket)
   WriterProcError, StaleEpochError             — a shard writer died / now
@@ -25,10 +27,11 @@ from repro.core.overhead import (SystemParams, choose_strategy, expected_pls,
 from repro.core.checkpoint import (AsyncApplier, AsyncCheckpointWriter,
                                    CheckpointStore, EmbShardSpec,
                                    resolve_run_dir)
-from repro.core.sharded_checkpoint import (ShardedCheckpointWriter,
+from repro.core.sharded_checkpoint import (LeaseHeldError,
+                                           ShardedCheckpointWriter,
                                            ShardSaveError,
                                            StaleCoordinatorError,
-                                           load_latest_auto)
+                                           lease_status, load_latest_auto)
 from repro.core.transport import (TRANSPORTS, ShardTransport,
                                   StaleEpochError, WriterProcError,
                                   make_transport)

@@ -56,16 +56,36 @@ import numpy as np
 
 
 class EmbShardSpec:
-    """Row-range partitioning of each table over n_shards virtual Emb PS."""
+    """Row-range partitioning of each table over n_shards virtual Emb PS.
 
-    def __init__(self, table_sizes: Sequence[int], n_shards: int):
+    A spec is one **layout**: the boundaries default to the paper's
+    even-split formula ``floor(j·n/N)``, but may be overridden (e.g. when
+    rebuilding the layout a manifest epoch recorded) — two specs with the
+    same boundaries are interchangeable regardless of how they were built.
+    """
+
+    def __init__(self, table_sizes: Sequence[int], n_shards: int,
+                 boundaries=None):
         self.table_sizes = tuple(table_sizes)
         self.n_shards = n_shards
         # boundaries[t] = array of n_shards+1 row offsets
-        self.boundaries = [
-            np.floor(np.arange(n_shards + 1) * n / n_shards).astype(np.int64)
-            for n in self.table_sizes
-        ]
+        if boundaries is None:
+            self.boundaries = [
+                np.floor(np.arange(n_shards + 1) * n / n_shards)
+                .astype(np.int64)
+                for n in self.table_sizes
+            ]
+        else:
+            self.boundaries = [np.asarray(b, dtype=np.int64)
+                               for b in boundaries]
+            if len(self.boundaries) != len(self.table_sizes):
+                raise ValueError("boundaries/table_sizes length mismatch")
+            for b, n in zip(self.boundaries, self.table_sizes):
+                if (b.shape != (n_shards + 1,) or b[0] != 0 or b[-1] != n
+                        or np.any(np.diff(b) < 0)):
+                    raise ValueError(
+                        f"invalid shard boundaries {b.tolist()} for table of "
+                        f"{n} rows over {n_shards} shards")
 
     def shard_range(self, table: int, shard: int):
         b = self.boundaries[table]
@@ -73,6 +93,23 @@ class EmbShardSpec:
 
     def shard_of_rows(self, table: int, rows: np.ndarray) -> np.ndarray:
         return np.searchsorted(self.boundaries[table], rows, side="right") - 1
+
+    def same_layout(self, other: "EmbShardSpec") -> bool:
+        return (self.table_sizes == other.table_sizes
+                and self.n_shards == other.n_shards
+                and all(np.array_equal(a, b) for a, b in
+                        zip(self.boundaries, other.boundaries)))
+
+    def to_json(self) -> dict:
+        """JSON-serializable layout record (manifest / coordinator state)."""
+        return {"n_shards": self.n_shards,
+                "boundaries": [b.tolist() for b in self.boundaries]}
+
+    @classmethod
+    def from_json(cls, table_sizes: Sequence[int],
+                  obj: dict) -> "EmbShardSpec":
+        return cls(table_sizes, int(obj["n_shards"]),
+                   boundaries=obj.get("boundaries"))
 
 
 # flat-store manifest layout tag; "v2" = event-seq-keyed filenames,
@@ -97,11 +134,17 @@ def snap_host(a):
     return np.array(out) if out is a or isinstance(a, np.ndarray) else out
 
 
-def _read_manifest(directory: str, layout: str, spec: "EmbShardSpec"):
+def _read_manifest(directory: str, layout: str,
+                   spec: Optional["EmbShardSpec"]):
     """Read + validate ``directory``'s manifest against ``layout`` and the
     caller's shard spec; returns None when no manifest exists.  A layout or
     spec mismatch is an error — replaying another layout's (or another
-    N_emb's) files would scatter rows to wrong offsets."""
+    N_emb's) files would scatter rows to wrong offsets.
+
+    ``spec=None`` skips the shard-layout check: callers that replay an
+    event chain crossing **layout epochs** (``sharded-v1`` manifests with
+    resize events) resolve the per-epoch boundaries themselves and validate
+    only the chain's *final* layout against the live spec."""
     path = os.path.join(directory, "manifest.json")
     if not os.path.exists(path):
         return None
@@ -112,6 +155,8 @@ def _read_manifest(directory: str, layout: str, spec: "EmbShardSpec"):
             f"unsupported checkpoint layout {manifest.get('layout')!r} in "
             f"{directory} (expected {layout!r}; pre-v2 checkpoints used "
             f"step-keyed filenames and must be re-created)")
+    if spec is None:
+        return manifest
     if (manifest["n_shards"] != spec.n_shards or
             list(manifest["table_sizes"]) != list(spec.table_sizes)):
         raise ValueError(

@@ -17,6 +17,7 @@ T_save boundary.  PLS bookkeeping per shard uses T_save-boundary events only
 """
 from __future__ import annotations
 
+import threading
 import time
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional
@@ -81,6 +82,7 @@ class CPRManager:
                  shard_addrs: Optional[list] = None,
                  heartbeat_interval: Optional[float] = None,
                  readmit_backoff: float = 0.0,
+                 lease_ttl: Optional[float] = None,
                  transport_options: Optional[dict] = None,
                  attach: bool = False):
         assert mode in ALL_MODES, mode
@@ -122,6 +124,10 @@ class CPRManager:
         self.shard_addrs = shard_addrs
         self.heartbeat_interval = heartbeat_interval
         self.readmit_backoff = readmit_backoff
+        self.lease_ttl = lease_ttl
+        self._resize_thread = None
+        self._resize_box = None
+        self._resize_ctx = None
         self.transport_options = transport_options
         self.attach = attach
         self.sharded_save = sharded_save or self.writer_procs or attach
@@ -220,6 +226,7 @@ class CPRManager:
                 async_save=self.async_save, delta_saves=self.delta_saves,
                 heartbeat_interval=self.heartbeat_interval,
                 readmit_backoff=self.readmit_backoff,
+                lease_ttl=self.lease_ttl,
                 transport_options=self.transport_options)
             self.store = None
             if self.attach and self.directory:
@@ -243,6 +250,10 @@ class CPRManager:
                     directory=self.directory, backend=self.transport,
                     addresses=self.shard_addrs, **common)
             self.writer = self.store
+            # a takeover (or a directory whose chain crossed a resize)
+            # may have adopted a different stamped layout than the
+            # caller configured: follow it on the policy side too
+            self.adopt_layout(self.store.spec)
         else:
             self.store = CheckpointStore(tables, accs, self.spec,
                                          trainer_state,
@@ -264,6 +275,7 @@ class CPRManager:
         error is recorded in ``shard_failures`` (surfaced in ``report()``)
         instead of killing training — the poisoned shard simply recovers
         from its last-good image."""
+        self._join_resize()
         if self.writer is not None:
             try:
                 self.writer.fence()
@@ -272,6 +284,10 @@ class CPRManager:
 
     def close(self):
         """Drain and stop the async writer thread (idempotent)."""
+        try:
+            self._join_resize()
+        except Exception:
+            pass                        # close never raises
         if self.writer is not None:
             self.writer.close()
 
@@ -306,6 +322,8 @@ class CPRManager:
         """
         assert self.store is not None
         t_wall0 = time.perf_counter()
+        self._join_resize()         # a background reshard lands here; the
+        #                             join wait counts as save-blocked time
         saver = self.writer if self.writer is not None else self.store
         nbytes = 0
         is_boundary = (not self.is_priority) or (
@@ -411,12 +429,120 @@ class CPRManager:
                              "boundary": bool(is_boundary)})
         return tracker_state
 
+    # ----------------------------------------------------------- resize ----
+    def resize(self, n_shards: int, t_event: Optional[float] = None,
+               step: int = 0, background: bool = False) -> Optional[dict]:
+        """Online fleet split/merge (``ShardedCheckpointWriter.resize``)
+        plus the policy-side re-base: per-shard PLS mass is remapped by
+        fractional range overlap between the old and new layouts, every
+        recovery point jumps to the reshard stamp (the resize fences a
+        fresh full of every shard into the same atomic cycle), and
+        ``SystemParams`` adopts the new ``N_emb`` so PLS Eq. 3 divides by
+        the live shard count from here on.
+
+        With ``background=True`` the fleet reshard runs on a helper
+        thread while the trainer keeps stepping; the manager joins it at
+        its next store access (at most one cycle boundary away), applies
+        the policy re-base then, and records the trainer-blocked join
+        time in the history event.  Returns None immediately in that
+        mode — the info dict lands in ``reshard_history``/``history``."""
+        if not (self.sharded_save and self.store is not None):
+            raise RuntimeError(
+                "resize requires sharded_save and an attached store")
+        self._join_resize()             # one reshard in flight at a time
+        old_n = self.p.N_emb
+        if background:
+            box = {}
+
+            def work():
+                try:
+                    # non-blocking writer resize: the seed fulls persist
+                    # on the appliers and the layout stamps at the next
+                    # boundary fence (which the joining store access runs)
+                    box["info"] = self.store.resize(int(n_shards),
+                                                    step=step, block=False)
+                except BaseException as e:     # surfaced at the join
+                    box["err"] = e
+            th = threading.Thread(target=work, name="cpr-resize",
+                                  daemon=True)
+            self._resize_thread = th
+            self._resize_box = box
+            self._resize_ctx = (old_n, t_event)
+            th.start()
+            return None
+        info = self.store.resize(int(n_shards), step=step)
+        return self._apply_resize(info, old_n, t_event,
+                                  blocked_s=info["pause_s"])
+
+    def _join_resize(self):
+        """Join a background reshard (no-op when none is in flight) and
+        apply the deferred policy re-base.  Every manager entry point that
+        touches the store calls this first, so the trainer only ever
+        blocks here — the 'at most one cycle boundary' pause."""
+        th = self._resize_thread
+        if th is None:
+            return None
+        t0 = time.perf_counter()
+        th.join()
+        blocked = time.perf_counter() - t0
+        box, ctx = self._resize_box, self._resize_ctx
+        self._resize_thread = self._resize_box = self._resize_ctx = None
+        if "err" in box:
+            raise box["err"]
+        old_n, t_event = ctx
+        return self._apply_resize(box["info"], old_n, t_event,
+                                  blocked_s=blocked)
+
+    def _apply_resize(self, info, old_n, t_event, blocked_s):
+        n_shards = int(info["to"])
+        info = dict(info, trainer_blocked_s=blocked_s)
+        # the reshard stamped a full of EVERY shard: all recovery points
+        # advance to the reshard event
+        t_now = (t_event if t_event is not None
+                 else float(np.max(self.last_cycle_time)))
+        self._rebase_layout(self.store.spec, old_n, n_shards, t_now)
+        self.history.append({"t": t_now, "event": "resize", **info})
+        return info
+
+    def adopt_layout(self, spec) -> None:
+        """Re-base the manager's policy state onto a layout adopted from
+        disk (resume via ``load_latest_auto``) or from a fleet takeover
+        (``attach``) whose chain crossed a resize: the shard count, PLS
+        mass, and per-shard recovery points move to the new boundaries
+        exactly as a live resize would re-base them.  No-op when ``spec``
+        already matches."""
+        if self.spec.same_layout(spec):
+            return
+        self._rebase_layout(spec, self.p.N_emb, int(spec.n_shards),
+                            float(np.max(self.last_cycle_time)))
+
+    def _rebase_layout(self, spec, old_n, n_new, t_now):
+        import dataclasses
+        self.spec = spec
+        self.p = dataclasses.replace(self.p, N_emb=n_new)
+        # PLS mass remap: each new shard inherits every old shard's
+        # accumulated loss in proportion to their fractional row-range
+        # overlap, so total PLS is conserved across the reshard
+        ob = np.arange(old_n + 1) / old_n
+        nb = np.arange(n_new + 1) / n_new
+        new_pls = np.zeros(n_new)
+        for j in range(n_new):
+            for m in range(old_n):
+                ov = min(nb[j + 1], ob[m + 1]) - max(nb[j], ob[m])
+                if ov > 0:
+                    new_pls[j] += (self.pls_by_shard[m] * ov /
+                                   (ob[m + 1] - ob[m]))
+        self.pls_by_shard = new_pls
+        self.last_cycle_time = np.full(n_new, t_now)
+        self.samples_at_cycle = np.full(n_new, float(self.samples_seen))
+
     # --------------------------------------------------------- failures ----
     def on_failure(self, event, tables, accs):
         """Apply a failure.  Returns (tables, accs, info).  For full recovery
         the emulator exploits replay-determinism: state is *not* mutated, only
         time is charged (reverting and re-running the same data reproduces the
         exact pre-failure state, paper §5.1)."""
+        self._join_resize()         # restores need the post-reshard layout
         self.n_failures += 1
         t = event.time
         info = {"time": t, "shards": event.shard_ids, "mode": self.effective_mode}
@@ -431,12 +557,17 @@ class CPRManager:
             return tables, accs, info
         # ---- partial recovery ----
         self.fence()   # restores must observe every enqueued save
-        tables, accs = self.store.restore_shards(tables, accs, event.shard_ids)
+        # failure events may predate a resize (the injector samples shard
+        # ids against the fleet size at schedule time): fold them onto
+        # the live layout
+        shard_ids = sorted({int(j) % self.p.N_emb for j in event.shard_ids})
+        info["shards"] = shard_ids
+        tables, accs = self.store.restore_shards(tables, accs, shard_ids)
         self.ledger.load += self.p.O_load_partial
         self.ledger.resched += self.p.O_res_partial
         # PLS increment (Eq. 3): per failed shard, samples since its last
         # checkpoint cycle / (S_total · N_emb)
-        for j in event.shard_ids:
+        for j in shard_ids:
             inc = (self.samples_seen - self.samples_at_cycle[j]) / \
                 max(self._s_total, 1) / self.p.N_emb
             self.pls += inc
@@ -485,6 +616,9 @@ class CPRManager:
             out["poisoned_shards"] = sorted(self.store.failed)
             out["shard_readmissions"] = self.store.shard_readmissions
             out["coordinator_epoch"] = self.store.epoch
+            out["layout_epoch"] = self.store.layout_epoch
+            if self.store.reshard_history:
+                out["reshard_history"] = list(self.store.reshard_history)
             if self.store.attach_report is not None:
                 out["attach"] = self.store.attach_report
         return out

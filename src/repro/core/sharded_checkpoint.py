@@ -88,11 +88,11 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.core.checkpoint import (EmbShardSpec, _leaves, _new_run_dir,
-                                   _read_manifest, _to_numpy, _write_current,
+                                   _to_numpy, _write_current,
                                    atomic_json_dump, load_trainer_tree,
                                    manifest_chain, snap_host)
 from repro.core.transport import (DRAIN_TIMEOUT_S, TRANSPORT_ALIASES,
-                                  TRANSPORTS, _InlineApplier, _ShardStore,
+                                  TRANSPORTS, _ShardStore,
                                   fsync_path, make_transport,
                                   normalize_transport)
 
@@ -106,8 +106,20 @@ LAYOUT = "sharded-v1"
 # discover it must not stamp.
 COORDINATOR_PTR = "COORDINATOR"
 
+# The coordinator lease (opt-in leader election, ``lease_ttl=``): a small
+# record renewed by the active coordinator at every stamp and heartbeat
+# sweep.  A standby checks it BEFORE claiming an epoch — a losing standby
+# discovers it lost for the price of one file read instead of a full
+# attach() takeover.
+LEASE_PTR = "LEASE"
+
 # accepted ``backend=`` names (transports + their legacy aliases)
 BACKENDS = TRANSPORTS + tuple(TRANSPORT_ALIASES)
+
+# numpy loader indirection: the crash/reconcile tests monkeypatch this to
+# emulate a shard directory the coordinator cannot read (remote-only
+# storage), which drives the rebuild-over-transport reconcile path
+_load_npz = np.load
 
 _FNV_OFFSET = np.uint64(14695981039346656037)
 _FNV_PRIME = np.uint64(1099511628211)
@@ -152,6 +164,27 @@ class StaleCoordinatorError(RuntimeError):
     the fleet): it must not stamp — its fence refuses before touching the
     manifest or CURRENT, so the successor's stamps can never be clobbered
     by a hung-then-resumed predecessor."""
+
+
+class LeaseHeldError(RuntimeError):
+    """The directory's coordinator lease is live: the active coordinator
+    renewed it within its TTL.  A standby that races a healthy leader
+    fails HERE — before claiming an epoch or touching the fleet — instead
+    of discovering the loss after a full takeover."""
+
+
+def lease_status(root_dir: str) -> Optional[dict]:
+    """The ``LEASE`` record with a computed ``held`` flag (``expires`` is
+    still in the future), or None when the directory has no (readable)
+    lease — lease election is opt-in via ``lease_ttl=``."""
+    path = os.path.join(root_dir, LEASE_PTR)
+    try:
+        with open(path) as f:
+            rec = json.load(f)
+    except (OSError, ValueError):
+        return None
+    rec["held"] = float(rec.get("expires", 0)) > time.time()
+    return rec
 
 
 def _read_coordinator_state(root_dir: str) -> Optional[dict]:
@@ -228,7 +261,7 @@ def _replay_shard(store: _ShardStore, j: int,
     if full_idx is not None:
         run_dir, e = evs[full_idx]
         path = os.path.join(run_dir, f"shard_{j}", f"full_e{e['seq']}.npz")
-        with np.load(path) as z:
+        with _load_npz(path) as z:
             for t in range(len(store.image_tables)):
                 store.image_tables[t][...] = z[f"table_{t}"]
                 store.image_accs[t][...] = z[f"acc_{t}"]
@@ -236,11 +269,189 @@ def _replay_shard(store: _ShardStore, j: int,
     for run_dir, e in evs[start:]:
         if e["kind"] != "partial":
             continue
-        with np.load(os.path.join(run_dir, f"shard_{j}", e["file"])) as z:
+        with _load_npz(os.path.join(run_dir, f"shard_{j}", e["file"])) as z:
             t = int(z["table"])
             local = z["rows"] - store.ranges[t][0]
             store.image_tables[t][local] = z["values"]
             store.image_accs[t][local] = z["accs"]
+
+
+# ======================================================================
+# layout epochs (elastic resharding)
+# ======================================================================
+def _spec_from_record(table_sizes, rec: dict) -> EmbShardSpec:
+    """Materialize a layout-epoch record (manifest ``layout_epoch`` field
+    or a stamped ``layout`` event) into a spec."""
+    return EmbShardSpec(table_sizes, int(rec["n_shards"]),
+                        boundaries=rec.get("boundaries"))
+
+
+def _stamped_layout_events(chain) -> List[Tuple[str, dict, EmbShardSpec]]:
+    """Like :func:`_stamped_events`, but layout-epoch aware: a merged
+    ``(run_dir, event, spec)`` list where ``spec`` is the layout epoch
+    that was *active when the event was logged* — the boundaries its
+    shard ids must be re-sliced through.
+
+    Each run contributes its events up to its last ``cycle`` stamp.  A
+    run's starting layout comes from its ``layout_epoch`` manifest record
+    (legacy manifests fall back to the formula layout for the top-level
+    ``n_shards``); stamped ``layout`` events switch the active spec
+    mid-run.  ``layout`` events themselves are included (plan builders
+    need them); image replay skips them."""
+    spec: Optional[EmbShardSpec] = None
+    out: List[Tuple[str, dict, EmbShardSpec]] = []
+    for run_dir, m in chain:
+        sizes = tuple(m["table_sizes"])
+        rec = m.get("layout_epoch")
+        if rec is not None:
+            spec = _spec_from_record(sizes, rec)
+        elif spec is None or tuple(spec.table_sizes) != sizes:
+            spec = EmbShardSpec(sizes, int(m["n_shards"]))
+        evs = m["events"]
+        last = None
+        for i, e in enumerate(evs):
+            if e["kind"] == "cycle":
+                last = i
+        for e in (evs[:last] if last is not None else []):
+            if e["kind"] == "layout":
+                spec = _spec_from_record(sizes, e)
+            out.append((run_dir, e, spec))
+    return out
+
+
+def _final_layout(chain) -> Tuple[Optional[EmbShardSpec], int]:
+    """``(spec, layout_epoch)`` of the newest stamped layout across a
+    manifest chain — the layout the final stamp was taken under, which a
+    restarting coordinator (or ``load_latest`` caller) must match.
+    ``layout`` events only ever reach disk inside the same atomic
+    manifest write as their cycle stamp, so every one on disk counts."""
+    spec: Optional[EmbShardSpec] = None
+    epoch = 1
+    for _, m in chain:
+        sizes = tuple(m["table_sizes"])
+        rec = m.get("layout_epoch")
+        if rec is not None:
+            spec = _spec_from_record(sizes, rec)
+            epoch = max(epoch, int(rec.get("epoch", 1)))
+        elif spec is None:
+            spec = EmbShardSpec(sizes, int(m["n_shards"]))
+        for e in m["events"]:
+            if e["kind"] == "layout":
+                spec = _spec_from_record(sizes, e)
+                epoch = max(epoch, int(e.get("layout_epoch", epoch)))
+    return spec, epoch
+
+
+def _replay_global(chain, tables, accs, trainer_template=None,
+                   tolerant: bool = False):
+    """Cross-epoch replay of every stamped event into the *global*
+    ``tables`` / ``accs`` arrays (mutated in place), re-slicing each
+    event's rows through the layout epoch that was active when it was
+    logged.
+
+    Applied in reverse with per-row fill masks, so each row lands on its
+    newest stamped write exactly once — byte-identical to the legacy
+    per-shard "last full, then later partials" replay for a single-layout
+    chain, but correct across splits/merges (a ``full`` of shard ``j``
+    occupies whatever global offsets shard ``j`` owned *under its own
+    epoch's boundaries*), and it never re-reads history a newer full
+    already buried.
+
+    Returns ``(trainer_image, taint, trainer_bad)``.  ``trainer_image``
+    is None when no stamped trainer event exists.  With ``tolerant``, a
+    file that cannot be read does not raise: the rows whose newest write
+    it held are *tainted* (per-table boolean masks) so the caller knows
+    exactly which current-layout shards are unrecoverable coordinator-
+    side; otherwise ``taint`` is None and read errors propagate."""
+    stream = _stamped_layout_events(chain)
+    taint = ([np.zeros(len(t), bool) for t in tables] if tolerant else None)
+    filled = [np.zeros(len(t), bool) for t in tables]
+    trainer = None
+    trainer_bad = False
+    trainer_done = False
+    for run_dir, e, spec in reversed(stream):
+        kind = e["kind"]
+        if kind == "full":
+            j = e["shard"]
+            need = [t for t in range(len(tables))
+                    if not filled[t][slice(*spec.shard_range(t, j))].all()]
+            if not need:
+                continue
+            path = os.path.join(run_dir, f"shard_{j}",
+                                f"full_e{e['seq']}.npz")
+            try:
+                with _load_npz(path) as z:
+                    for t in need:
+                        lo, hi = spec.shard_range(t, j)
+                        m = ~filled[t][lo:hi]
+                        tables[t][lo:hi][m] = z[f"table_{t}"][m]
+                        accs[t][lo:hi][m] = z[f"acc_{t}"][m]
+                        filled[t][lo:hi] = True
+            except Exception:
+                if not tolerant:
+                    raise
+                for t in need:
+                    lo, hi = spec.shard_range(t, j)
+                    taint[t][lo:hi][~filled[t][lo:hi]] = True
+                    filled[t][lo:hi] = True
+        elif kind == "partial":
+            j = e["shard"]
+            try:
+                with _load_npz(os.path.join(run_dir, f"shard_{j}",
+                                            e["file"])) as z:
+                    t = int(z["table"])
+                    rows = np.asarray(z["rows"])
+                    m = ~filled[t][rows]
+                    tables[t][rows[m]] = np.asarray(z["values"])[m]
+                    accs[t][rows[m]] = np.asarray(z["accs"])[m]
+                    filled[t][rows[m]] = True
+            except Exception:
+                if not tolerant:
+                    raise
+                # the partial's exact rows are unknowable without the
+                # file: conservatively taint the shard's whole epoch range
+                for t in range(len(tables)):
+                    lo, hi = spec.shard_range(t, j)
+                    taint[t][lo:hi][~filled[t][lo:hi]] = True
+                    filled[t][lo:hi] = True
+        elif kind == "trainer" and not trainer_done:
+            trainer_done = True
+            try:
+                trainer = load_trainer_tree(
+                    os.path.join(run_dir, "shard_0", e["file"]),
+                    trainer_template)
+            except Exception:
+                if not tolerant:
+                    raise
+                trainer_bad = True
+    return trainer, taint, trainer_bad
+
+
+def _layout_plan(chain) -> list:
+    """The stamped history as a worker-shippable replay script — the
+    payload of the ``rebuild`` frame (remote-disk reconcile).  Ops match
+    ``transport.replay_plan_into_store``: ``("layout", n, boundaries)``
+    switches the epoch the following shard ids resolve through;
+    ``("full"/"partial", shard, path)`` and ``("trainer", path)`` carry
+    *server-local* absolute paths (the same contract the ``spawn``
+    directory has) — the receiving session replays only its own rows."""
+    plan: list = []
+    cur: Optional[EmbShardSpec] = None
+    for run_dir, e, spec in _stamped_layout_events(chain):
+        if spec is not cur:
+            plan.append(("layout", spec.n_shards,
+                         [b.tolist() for b in spec.boundaries]))
+            cur = spec
+        if e["kind"] == "full":
+            plan.append(("full", int(e["shard"]), os.path.join(
+                run_dir, f"shard_{e['shard']}", f"full_e{e['seq']}.npz")))
+        elif e["kind"] == "partial":
+            plan.append(("partial", int(e["shard"]), os.path.join(
+                run_dir, f"shard_{e['shard']}", e["file"])))
+        elif e["kind"] == "trainer":
+            plan.append(("trainer", os.path.join(
+                run_dir, "shard_0", e["file"])))
+    return plan
 
 
 class ShardedCheckpointWriter:
@@ -270,6 +481,7 @@ class ShardedCheckpointWriter:
                  heartbeat_interval: Optional[float] = None,
                  readmit_backoff: float = 0.0,
                  readmit_backoff_max: float = 60.0,
+                 lease_ttl: Optional[float] = None,
                  transport_options: Optional[dict] = None,
                  _takeover: Optional[dict] = None):
         assert backend in BACKENDS, backend
@@ -311,6 +523,13 @@ class ShardedCheckpointWriter:
         self._hashes = ([row_hash(t, a) for t, a in zip(host_t, host_a)]
                         if delta_saves else None)
         self._watermarks = [0] * self.n_shards   # durable seq per shard
+        self.layout_epoch = 1           # bumped by every stamped resize
+        self.lease_ttl = lease_ttl
+        self.reshard_history: List[dict] = []
+        # coordinator-born events (layout stamps) waiting for the next
+        # fence: merged into the drained worker events and committed in
+        # the SAME atomic manifest write as their cycle record
+        self._pending_manifest_events: List[dict] = []
 
         # ---- readmission back-off (crash-loop throttle) ----
         self.readmit_backoff = readmit_backoff        # base secs; 0 = off
@@ -361,7 +580,29 @@ class ShardedCheckpointWriter:
                             os.unlink(os.path.join(directory, d))
                         except OSError:
                             pass
-            chain = manifest_chain(directory, LAYOUT, spec)
+            # layout validation is cross-epoch aware: runs in the chain
+            # may carry OLDER layouts (pre-resize); only the FINAL stamped
+            # layout must match the caller's spec
+            chain = manifest_chain(directory, LAYOUT, None)
+            if chain:
+                for _, m in chain:
+                    if list(m.get("table_sizes", ())) != \
+                            list(spec.table_sizes):
+                        raise ValueError(
+                            f"manifest in {directory} is for table_sizes="
+                            f"{m.get('table_sizes')} but the caller's "
+                            f"spec has table_sizes="
+                            f"{list(spec.table_sizes)}")
+                final_spec, self.layout_epoch = _final_layout(chain)
+                if final_spec is not None and \
+                        not spec.same_layout(final_spec):
+                    raise ValueError(
+                        f"checkpoint directory {directory} last stamped "
+                        f"a layout with n_shards={final_spec.n_shards} "
+                        f"but the caller's spec has n_shards="
+                        f"{spec.n_shards}: pass the stamped layout "
+                        f"(load_latest_auto / attach adopt it) or "
+                        f"resize() after construction")
             self._seq = max((e.get("seq", 0) for _, m in chain
                              for e in m["events"]), default=0)
             self.cycle = max((e["cycle"] for _, m in chain
@@ -372,6 +613,14 @@ class ShardedCheckpointWriter:
                               "parent": parent,
                               "n_shards": self.n_shards,
                               "table_sizes": list(spec.table_sizes),
+                              "layout_epoch": {
+                                  "epoch": self.layout_epoch,
+                                  "n_shards": self.n_shards,
+                                  "boundaries": [b.tolist()
+                                                 for b in spec.boundaries],
+                                  "parent": (self.layout_epoch - 1
+                                             if self.layout_epoch > 1
+                                             else None)},
                               "events": []}
         self.directory = self.run_dir   # this run's files live here
 
@@ -394,32 +643,55 @@ class ShardedCheckpointWriter:
         self._img_cache = list(self._init_slices)
 
         # ---- takeover reconciliation (standby coordinator) ----
-        # Replay each shard's last-*stamped* image from disk: it seeds the
+        # ONE tolerant cross-epoch replay of the stamped history (layout
+        # changes re-sliced through their own epochs' boundaries), then
+        # per-shard seeds cut under the CURRENT layout: they seed the
         # transport (an adopted writer whose durable watermark differs
-        # from the stamp is reseeded with it — the gap of applied-but-
-        # unstamped work is discarded; a fresh spawn starts from it
-        # directly), re-bases the delta hashes, and becomes the restore
-        # cache.  A shard whose stamped files cannot be read (remote-only
-        # storage) is poisoned rather than silently regressed to init.
+        # from the stamp is reseeded with them — the gap of applied-but-
+        # unstamped work is discarded; a fresh spawn starts from them
+        # directly), re-base the delta hashes, and become the restore
+        # cache.  A shard whose stamped rows the coordinator cannot read
+        # (remote-only storage) is poisoned — except on the socket
+        # transport, where the stamped-event plan is shipped to the
+        # writer so it rebuilds from its OWN local files instead.
         seeds = self._init_slices
         self._pending_poison: Dict[int, BaseException] = {}
+        self._pending_rebuild: Dict[int, list] = {}
         self.attach_report: Optional[dict] = None
         if _takeover is not None:
-            events = _stamped_events(chain)
             _, stamped_wm = _last_stamp(chain)
             self._watermarks = [stamped_wm.get(j, 0)
                                 for j in range(self.n_shards)]
+            g_t, g_a = self._assemble(self._init_slices)
+            g_tr, taint, tr_bad = _replay_global(
+                chain, g_t, g_a, trainer_template=trainer_np,
+                tolerant=True)
+            if g_tr is None:
+                g_tr = trainer_np
             seeds, seed_ok = [], []
+            plan = None
             for j in range(self.n_shards):
-                try:
-                    seeds.append(self._replay_stamped_slices(j, events))
-                    seed_ok.append(True)
-                except Exception as e:
-                    seeds.append(self._init_slices[j])
-                    seed_ok.append(False)
+                bad = any(taint[t][lo:hi].any()
+                          for t, (lo, hi) in enumerate(self.ranges[j]))
+                bad = bad or (j == 0 and tr_bad)
+                seeds.append((
+                    [np.array(g_t[t][lo:hi])
+                     for t, (lo, hi) in enumerate(self.ranges[j])],
+                    [np.array(g_a[t][lo:hi])
+                     for t, (lo, hi) in enumerate(self.ranges[j])],
+                    g_tr if j == 0 else None))
+                seed_ok.append(not bad)
+                if not bad:
+                    continue
+                if self.backend == "socket":
+                    if plan is None:
+                        plan = _layout_plan(chain)
+                    self._pending_rebuild[j] = plan
+                else:
                     self._pending_poison[j] = RuntimeError(
                         f"shard {j}: stamped image replay failed at "
-                        f"takeover: {type(e).__name__}: {e}")
+                        f"takeover: unreadable stamped file(s) cover "
+                        f"its rows")
             self._img_cache = list(seeds)   # seeds already fall back to
             #                                 init slices where replay failed
             if self._hashes is not None:
@@ -454,6 +726,11 @@ class ShardedCheckpointWriter:
                 # simply respawned from the stamped seeds above
                 opts.setdefault("attach_watermarks", list(self._watermarks))
                 opts.setdefault("attach_seed_ok", seed_ok)
+                if self._pending_rebuild:
+                    opts.setdefault(
+                        "attach_rebuild_plans",
+                        [self._pending_rebuild.get(j)
+                         for j in range(self.n_shards)])
                 if _takeover.get("fallback") is not None:
                     opts.setdefault("attach_fallback_spawn",
                                     _takeover["fallback"])
@@ -466,6 +743,22 @@ class ShardedCheckpointWriter:
         for j, ep in enumerate(self.endpoints):
             if j not in self.failed and ep.error is not None:
                 self.failed[j] = ep.error          # failed adoption
+        for j in sorted(self._pending_rebuild):
+            # a shard kept or rebuilt from its own local files holds state
+            # the coordinator never saw: pull its image back to refresh
+            # the restore cache and re-base the delta hashes (the seed we
+            # computed for it was tainted by the unreadable files)
+            if j in self.failed:
+                continue
+            got = self.endpoints[j].fetch_image(self._drain_timeout)
+            if got is None:
+                self.failed[j] = self.endpoints[j].error
+                continue
+            self._img_cache[j] = got
+            if self._hashes is not None:
+                for t, (lo, hi) in enumerate(self.ranges[j]):
+                    self._hashes[t][lo:hi] = row_hash(got[0][t],
+                                                      got[1][t])
         if _takeover is not None:
             self.shard_readmissions = int(
                 _takeover.get("state", {}).get("readmissions", 0))
@@ -485,6 +778,7 @@ class ShardedCheckpointWriter:
             # claim (or re-stamp) the durable coordinator record now that
             # the fleet is up and socket addresses are known
             self._persist_coordinator_state()
+            self._renew_lease()
 
         # ---- heartbeat monitor (proactive dead-writer detection) ----
         self.heartbeat_interval = heartbeat_interval
@@ -571,39 +865,43 @@ class ShardedCheckpointWriter:
         return self._img_cache[j]
 
     def _replay_shard_from_disk(self, j: int):
-        """Shard ``j``'s last-good image per the stamped on-disk history.
-        Events only reach a manifest together with their cycle stamp (one
-        atomic write per fence), and the first stamp advances CURRENT to
-        this run — so the CURRENT-rooted chain always covers everything
-        this writer has stamped.  None when nothing stamped covers the
-        shard yet."""
-        chain = manifest_chain(self.root_dir, LAYOUT, self.spec)
-        events = _stamped_events(chain)
-        if not any(e.get("shard") == j and e["kind"] in ("full", "partial")
-                   for _, e in events):
+        """Shard ``j``'s last-good image per the stamped on-disk history,
+        replayed over the PRISTINE init image — the live-image cache may
+        hold post-stamp state (a fetch after unstamped applies), and a
+        poisoned shard's restore must land exactly on the last stamped
+        image.  The replay is cross-epoch (the chain may span resharding:
+        shard ``j``'s current rows can be covered by events other shard
+        ids logged under older layouts).  Events only reach a manifest
+        together with their cycle stamp (one atomic write per fence), and
+        the first stamp advances CURRENT to this run — so the
+        CURRENT-rooted chain always covers everything this writer has
+        stamped.  None when nothing stamped covers the shard yet."""
+        chain = manifest_chain(self.root_dir, LAYOUT, None)
+        covered = False
+        for _, e, spec in _stamped_layout_events(chain):
+            if e["kind"] not in ("full", "partial"):
+                continue
+            for t, (lo, hi) in enumerate(self.ranges[j]):
+                elo, ehi = spec.shard_range(t, e["shard"])
+                if max(lo, elo) < min(hi, ehi):
+                    covered = True
+                    break
+            if covered:
+                break
+        if not covered:
             return None
-        return self._replay_stamped_slices(j, events)
-
-    def _replay_stamped_slices(self, j: int, events):
-        """Shard ``j``'s last-stamped image slices, replayed over the
-        PRISTINE init slices — the live-image cache may hold post-stamp
-        state (a fetch after unstamped applies), and both a poisoned shard
-        and a takeover reconciliation must land exactly on the last
-        stamped image."""
-        store = _ShardStore(j, self.spec, self._init_slices[j][0],
-                            self._init_slices[j][1], sliced=True)
-        _replay_shard(store, j, events)
-        trainer = self._init_slices[j][2]
-        if j == 0:
-            tr_evs = [(d, e) for d, e in events if e["kind"] == "trainer"]
-            if tr_evs:
-                d, e = tr_evs[-1]
-                # the shard-0 init trainer image is the structure template
-                # (without one the raw leaf list would come back)
-                trainer = load_trainer_tree(
-                    os.path.join(d, "shard_0", e["file"]),
-                    self._init_slices[0][2])
-        return store.image_tables, store.image_accs, trainer
+        g_t, g_a = self._assemble(self._init_slices)
+        # the shard-0 init trainer image is the structure template
+        # (without one the raw leaf list would come back)
+        trainer, _, _ = _replay_global(
+            chain, g_t, g_a, trainer_template=self._init_slices[0][2])
+        if trainer is None:
+            trainer = self._init_slices[0][2]
+        return ([np.array(g_t[t][lo:hi])
+                 for t, (lo, hi) in enumerate(self.ranges[j])],
+                [np.array(g_a[t][lo:hi])
+                 for t, (lo, hi) in enumerate(self.ranges[j])],
+                trainer if j == 0 else None)
 
     def _assemble(self, images=None):
         """Assemble full tables from per-shard image slices.  ``images``
@@ -775,6 +1073,10 @@ class ShardedCheckpointWriter:
                         ep.probe()
                     except Exception:
                         pass            # a probe failure is not a crash
+            try:
+                self._renew_lease()     # stay elected while merely idle
+            except OSError:
+                pass
         finally:
             self._monitor_lock.release()
 
@@ -892,7 +1194,11 @@ class ShardedCheckpointWriter:
             # STAMP on every transport (a pipe writer only knows its own
             # coordinator, but that coordinator cannot commit)
             self._assert_coordinator_ownership()
-            drained.sort(key=lambda e: (e["seq"], e["shard"]))
+            # coordinator-born events (layout stamps) commit in the SAME
+            # atomic write as this cycle; they carry no shard
+            drained.extend(self._pending_manifest_events)
+            self._pending_manifest_events = []
+            drained.sort(key=lambda e: (e["seq"], e.get("shard", -1)))
             self._fsync_failed_shards_payloads(drained)
             self._manifest["events"].extend(drained)
             self.cycle += 1
@@ -914,6 +1220,7 @@ class ShardedCheckpointWriter:
                 _write_current(self.root_dir, self._manifest["run"])
                 self._current_advanced = True
             self._persist_coordinator_state()
+            self._renew_lease()
         # every healthy shard acked past the pending save_full snapshots;
         # poisoned ones will never read them (their queued work was
         # dropped) — release the shm segments / spool files
@@ -972,6 +1279,8 @@ class ShardedCheckpointWriter:
             "backend": self.backend,
             "n_shards": self.n_shards,
             "table_sizes": list(self.spec.table_sizes),
+            "layout_epoch": self.layout_epoch,
+            "boundaries": [b.tolist() for b in self.spec.boundaries],
             "cycle": self.cycle,
             "shard_seq": {str(j): self._watermarks[j]
                           for j in range(self.n_shards)},
@@ -983,6 +1292,40 @@ class ShardedCheckpointWriter:
         }
         atomic_json_dump(os.path.join(self.root_dir, COORDINATOR_PTR),
                          state)
+
+    # ------------------------------------------------- lease (election) --
+    def _renew_lease(self):
+        """Refresh the coordinator lease (opt-in via ``lease_ttl``):
+        called at claim, at every stamp, and from the heartbeat sweep so
+        an idle-but-alive coordinator stays elected.  Never renews over a
+        newer epoch's lease — a superseded coordinator lets its claim
+        lapse instead of fighting the successor."""
+        if not (self.root_dir and self.lease_ttl) or self._closed:
+            return
+        cur = lease_status(self.root_dir)
+        if cur is not None and int(cur.get("epoch", 0)) > self.epoch:
+            return
+        atomic_json_dump(os.path.join(self.root_dir, LEASE_PTR), {
+            "epoch": self.epoch, "run": self._manifest["run"],
+            "ttl": self.lease_ttl,
+            "expires": time.time() + self.lease_ttl,
+            "time": time.time()})
+
+    def _release_lease(self):
+        """Clean shutdown: expire the lease NOW so a standby need not
+        wait out the TTL before taking over."""
+        if not (self.root_dir and self.lease_ttl):
+            return
+        cur = lease_status(self.root_dir)
+        if cur is not None and int(cur.get("epoch", 0)) > self.epoch:
+            return
+        try:
+            atomic_json_dump(os.path.join(self.root_dir, LEASE_PTR), {
+                "epoch": self.epoch, "run": self._manifest["run"],
+                "ttl": self.lease_ttl, "expires": 0.0,
+                "time": time.time()})
+        except OSError:
+            pass
 
     def close(self):
         """Stamp a final cycle and stop the workers; never raises
@@ -998,6 +1341,7 @@ class ShardedCheckpointWriter:
             self.fence(strict=False)
         except Exception:
             pass
+        self._release_lease()
         self._closed = True
         self.transport.close()
 
@@ -1116,11 +1460,138 @@ class ShardedCheckpointWriter:
         tabs, accs = self._assemble(images)
         return tabs, accs, images[0][2]
 
+    # ------------------------------------------------- elastic resharding --
+    def resize(self, n_shards: int, step: int = 0,
+               addresses: Optional[Sequence] = None,
+               block: bool = True) -> dict:
+        """Online split/merge of the writer fleet (a new **layout epoch**),
+        inside one fence window — the trainer pauses for this call and
+        nothing else; no restart, no full-run rollback.
+
+        Protocol: (1) ``fence`` lands the fleet on a stamped cycle under
+        the OLD layout — the rollback point a crash mid-reshard recovers
+        to; (2) the stamped global image is collected (remote donors
+        stream their own row ranges over the peer-transfer ``export``
+        frames; shard 0 also ships the trainer replica; dead or local
+        shards fall back to the coordinator-side image); (3) the
+        transport resharding swap: retained writers swap their store to
+        the new boundaries *in place* (``reshard`` frames — session and
+        connection survive), growth shards spawn fresh, surplus writers
+        retire; (4) coordinator state re-bases: ranges, delta hashes,
+        watermarks, restore caches, re-admission ledger; (5) a full of
+        every new shard is enqueued and the next fence commits **layout
+        event + seed fulls + cycle stamp in ONE atomic manifest write** —
+        recovery either sees the whole new epoch or none of it.
+
+        Returns an info dict (``from``/``to``/``layout_epoch``/
+        ``pause_s``/``moved_bytes``/``cycle``), also appended to
+        ``reshard_history``.  Raises :class:`ShardSaveError` if any
+        resized writer failed (the healthy ones were stamped)."""
+        if self._closed:
+            raise RuntimeError("cannot resize a closed writer")
+        new_spec = EmbShardSpec(self.spec.table_sizes, int(n_shards))
+        if new_spec.same_layout(self.spec):
+            return {"from": self.n_shards, "to": self.n_shards,
+                    "layout_epoch": self.layout_epoch, "pause_s": 0.0,
+                    "moved_bytes": 0, "cycle": self.cycle}
+        t0 = time.perf_counter()
+        # (1) stamp the old layout: the crash rollback point
+        self.fence(strict=False)
+        # (2) collect the stamped global image from the donors
+        n_tables = len(self.spec.table_sizes)
+        moved = 0
+        images = []
+        for j in range(self.n_shards):
+            got = None
+            if (j != 0 and self.transport.is_remote and
+                    j not in self.failed and
+                    self.endpoints[j].error is None):
+                try:
+                    got = self.endpoints[j].export_rows(
+                        [self.ranges[j][t] for t in range(n_tables)],
+                        timeout=self._drain_timeout)
+                except NotImplementedError:
+                    got = None
+            img = ((got[0], got[1], None) if got is not None
+                   else self._shard_images(j))
+            images.append(img)
+            moved += sum(np.asarray(a).nbytes
+                         for part in img[:2] for a in part)
+        g_t, g_a = self._assemble(images)
+        g_tr = images[0][2]
+        # (3) pristine init image re-cut under the NEW layout: the
+        # disk-replay base and the resized fleet's spawn seeds
+        init_t, init_a = self._assemble(self._init_slices)
+        init_tr = self._init_slices[0][2]
+        new_n = new_spec.n_shards
+        new_ranges = [[new_spec.shard_range(t, j)
+                       for t in range(n_tables)] for j in range(new_n)]
+        new_seeds = [
+            ([np.array(init_t[t][lo:hi])
+              for t, (lo, hi) in enumerate(new_ranges[j])],
+             [np.array(init_a[t][lo:hi])
+              for t, (lo, hi) in enumerate(new_ranges[j])],
+             init_tr if j == 0 else None)
+            for j in range(new_n)]
+        new_dirs = [os.path.join(self.run_dir, f"shard_{j}")
+                    if self.run_dir else None for j in range(new_n)]
+        # the monitor stands down for the swap (a probe mid-reshard
+        # would mistake a writer's store swap for silence)
+        with self._monitor_lock:
+            self.transport.resize_fleet(new_spec, new_seeds, new_dirs,
+                                        addresses=addresses)
+            self.endpoints = self.transport.endpoints
+        # (4) re-base every piece of per-shard coordinator state
+        old_n = self.n_shards
+        self.spec = new_spec
+        self.n_shards = new_n
+        self.ranges = new_ranges
+        self._init_slices = new_seeds
+        self._img_cache = [
+            ([np.array(g_t[t][lo:hi])
+              for t, (lo, hi) in enumerate(new_ranges[j])],
+             [np.array(g_a[t][lo:hi])
+              for t, (lo, hi) in enumerate(new_ranges[j])],
+             g_tr if j == 0 else None)
+            for j in range(new_n)]
+        self._watermarks = [0] * new_n
+        self.failed = {j: ep.error for j, ep in enumerate(self.endpoints)
+                       if ep.error is not None}
+        self._readmit_attempts = [0] * new_n
+        self._readmit_not_before = [0.0] * new_n
+        self._last_readmit_t = [0.0] * new_n
+        if self._hashes is not None:
+            self._hashes = [row_hash(t, a) for t, a in zip(g_t, g_a)]
+        self.layout_epoch += 1
+        if self.run_dir is not None:
+            self._manifest["n_shards"] = new_n
+            self._pending_manifest_events.append({
+                "kind": "layout", "seq": self._next_seq(),
+                "layout_epoch": self.layout_epoch, "n_shards": new_n,
+                "boundaries": [b.tolist() for b in new_spec.boundaries],
+                "parent": self.layout_epoch - 1})
+        # (5) seed fulls for every resized shard, then ONE atomic stamp.
+        # With ``block=False`` the stamping fence rides the next natural
+        # cycle boundary instead: the appliers persist the seeds in the
+        # background and the caller's pause ends at the enqueue — a crash
+        # before that fence recovers to the pre-reshard stamp of step (1).
+        self.save_full(g_t, g_a, trainer_state=g_tr, step=step)
+        if block:
+            self.fence(strict=False)
+        info = {"from": old_n, "to": new_n,
+                "layout_epoch": self.layout_epoch,
+                "pause_s": time.perf_counter() - t0,
+                "moved_bytes": int(moved), "cycle": self.cycle}
+        self.reshard_history.append(info)
+        if block and self.failed:
+            raise ShardSaveError(self.failed)
+        return info
+
     # ----------------------------------------------------------- failover --
     @classmethod
     def attach(cls, directory: str, tables, accs, spec: EmbShardSpec,
                trainer_state=None, backend: Optional[str] = None,
-               addresses: Optional[Sequence] = None,
+               addresses: Optional[Sequence] = None, force: bool = False,
                **kw) -> "ShardedCheckpointWriter":
         """Standby-coordinator takeover of a live writer fleet.
 
@@ -1148,21 +1619,40 @@ class ShardedCheckpointWriter:
         :meth:`load_latest`; read the recovered state back with
         ``restore_all``.  The takeover outcome is in ``attach_report``.
         """
+        lease = lease_status(directory)
+        if not force and lease is not None and lease.get("held"):
+            raise LeaseHeldError(
+                f"coordinator epoch {lease.get('epoch')} holds a live "
+                f"lease on {directory} (expires in "
+                f"{float(lease.get('expires', 0)) - time.time():.1f}s): "
+                f"the active coordinator is alive — this standby lost "
+                f"the election (pass force=True to take over anyway)")
         state = _read_coordinator_state(directory)
         if state is None:
             raise FileNotFoundError(
                 f"no coordinator state in {directory} (no "
                 f"{COORDINATOR_PTR} record): nothing to attach to — "
                 f"start a fresh coordinator instead")
-        if (int(state.get("n_shards", spec.n_shards)) != spec.n_shards or
-                list(state.get("table_sizes", spec.table_sizes)) !=
-                list(spec.table_sizes)):
+        if list(state.get("table_sizes", spec.table_sizes)) != \
+                list(spec.table_sizes):
+            raise ValueError(
+                f"coordinator state in {directory} is for table_sizes="
+                f"{state.get('table_sizes')} but the caller's spec has "
+                f"table_sizes={list(spec.table_sizes)}")
+        state_n = int(state.get("n_shards", spec.n_shards))
+        if state.get("boundaries") is not None:
+            # adopt the fleet's stamped layout epoch wholesale: a resize
+            # since this standby was configured changed the boundaries,
+            # and the takeover must reconcile under the layout the fleet
+            # actually runs — not the standby's stale construction spec
+            spec = EmbShardSpec(spec.table_sizes, state_n,
+                                boundaries=state["boundaries"])
+        elif state_n != spec.n_shards:
             raise ValueError(
                 f"coordinator state in {directory} is for n_shards="
-                f"{state.get('n_shards')}, table_sizes="
-                f"{state.get('table_sizes')} but the caller's spec has "
-                f"n_shards={spec.n_shards}, "
-                f"table_sizes={list(spec.table_sizes)}")
+                f"{state_n} but the caller's spec has n_shards="
+                f"{spec.n_shards} (and the legacy record carries no "
+                f"boundaries to adopt)")
         if backend is None:
             backend = state.get("backend", "inproc")
         fallback = None
@@ -1196,29 +1686,50 @@ class ShardedCheckpointWriter:
 
         The run the atomic ``CURRENT`` pointer designates is the recovery
         root; its manifest chains to prior runs via ``parent``.  Only
-        events logged *before* each run's last ``cycle`` stamp are replayed
-        — files persisted after the last coordinator fence may cover some
-        shards but not others and are ignored.  Each shard then replays
-        independently, strictly in manifest event order, from its last full
-        event onward; the trainer replica comes from the newest stamped
-        trainer event.  Returns a sync-mode in-memory writer holding the
-        image (use ``restore_all`` / ``restore_shards``).
+        events logged *before* each run's last ``cycle`` stamp are
+        replayed — files persisted after the last coordinator fence may
+        cover some shards but not others and are ignored.  The replay is
+        **cross-epoch**: a chain that spans resharding is replayed by
+        re-slicing each event's rows through the layout epoch that was
+        active when it was logged (``layout_epoch`` manifest records and
+        stamped ``layout`` events), so each global row lands on its
+        newest stamped write regardless of which shard id owned it at the
+        time; the trainer replica comes from the newest stamped trainer
+        event.  Only the FINAL stamped layout must match ``spec`` —
+        ``load_latest_auto`` adopts it automatically.  Returns a
+        sync-mode in-memory writer holding the image (use ``restore_all``
+        / ``restore_shards``).
         """
-        chain = manifest_chain(directory, LAYOUT, spec)
+        chain = manifest_chain(directory, LAYOUT, None)
         if not chain:
             raise FileNotFoundError(
                 f"no loadable checkpoint run in {directory} "
                 f"(no CURRENT pointer or manifest.json)")
-        events = _stamped_events(chain)
+        for _, m in chain:
+            if list(m.get("table_sizes", ())) != list(spec.table_sizes):
+                raise ValueError(
+                    f"manifest in {directory} is for table_sizes="
+                    f"{m.get('table_sizes')} but the caller's spec has "
+                    f"table_sizes={list(spec.table_sizes)}")
+        final_spec, _ = _final_layout(chain)
+        if final_spec is not None and not spec.same_layout(final_spec):
+            raise ValueError(
+                f"manifest in {directory} last stamped a layout with "
+                f"n_shards={final_spec.n_shards} but the caller's spec "
+                f"has n_shards={spec.n_shards}: older layouts crossed "
+                f"by the chain replay transparently, but the FINAL "
+                f"layout must match (load_latest_auto adopts it)")
+        g_t = [np.array(np.asarray(t)) for t in tables]
+        g_a = [np.array(np.asarray(a)) for a in accs]
+        trainer, _, _ = _replay_global(chain, g_t, g_a,
+                                       trainer_template=trainer_state)
         out = cls(tables, accs, spec, trainer_state=None, directory=None,
                   async_save=False, delta_saves=False, backend="inproc")
         for j, store in enumerate(out.stores):
-            _replay_shard(store, j, events)
-        tr_evs = [(d, e) for d, e in events if e["kind"] == "trainer"]
-        if tr_evs:
-            d, e = tr_evs[-1]
-            out.stores[0].trainer_image = load_trainer_tree(
-                os.path.join(d, "shard_0", e["file"]), trainer_state)
+            for t, (lo, hi) in enumerate(out.ranges[j]):
+                store.image_tables[t][...] = g_t[t][lo:hi]
+                store.image_accs[t][...] = g_a[t][lo:hi]
+        out.stores[0].trainer_image = trainer
         return out
 
 
@@ -1226,8 +1737,10 @@ def load_latest_auto(directory: str, tables, accs, spec: EmbShardSpec,
                      trainer_state=None):
     """Dispatch on the manifest layout: sharded fleet vs flat store.  The
     run-versioned ``CURRENT`` pointer (or a legacy top-level manifest) is
-    resolved first.  Returns an object exposing ``restore_all`` /
-    ``restore_shards``."""
+    resolved first.  For a sharded fleet whose chain crossed a resize, the
+    FINAL stamped layout epoch is **adopted** — the caller's ``spec`` only
+    pins the table sizes, not the shard count the fleet last ran with.
+    Returns an object exposing ``restore_all`` / ``restore_shards``."""
     from repro.core.checkpoint import CheckpointStore, resolve_run_dir
     run_dir = resolve_run_dir(directory)
     if run_dir is None:
@@ -1235,7 +1748,14 @@ def load_latest_auto(directory: str, tables, accs, spec: EmbShardSpec,
             f"no loadable checkpoint run in {directory}")
     with open(os.path.join(run_dir, "manifest.json")) as f:
         layout = json.load(f).get("layout")
-    loader = (ShardedCheckpointWriter if layout == LAYOUT
-              else CheckpointStore)
-    return loader.load_latest(directory, tables, accs, spec,
-                              trainer_state=trainer_state)
+    if layout == LAYOUT:
+        final_spec, _ = _final_layout(manifest_chain(directory, LAYOUT,
+                                                     None))
+        if (final_spec is not None and
+                tuple(final_spec.table_sizes) == tuple(spec.table_sizes)
+                and not spec.same_layout(final_spec)):
+            spec = final_spec
+        return ShardedCheckpointWriter.load_latest(
+            directory, tables, accs, spec, trainer_state=trainer_state)
+    return CheckpointStore.load_latest(directory, tables, accs, spec,
+                                       trainer_state=trainer_state)

@@ -64,6 +64,25 @@ never submit, drain, or (transitively) stamp over its successor:
   ("reconcile", epoch, dir, wm,            ("reconciled", watermark)
    seed_t|None, seed_a|None, seed_tr)
 
+Elastic-fleet (online split/merge) peer-transfer frames — issued inside a
+fence window by ``ShardedCheckpointWriter.resize`` and by the takeover
+remote-disk reconcile path:
+
+  ("export",  epoch, ranges)               ("rows-out", shard, tabs, accs)
+      donor read: ship the rows of the writer's image overlapping the
+      requested global ``[lo, hi)`` ranges (one pair per table).
+  ("reshard", epoch, table_sizes,          ("resharded", shard, watermark)
+   n_shards, boundaries, dir,
+   seed_t, seed_a, seed_tr)
+      receiver rebuild: swap the session's store to the new layout epoch
+      (the session and its connection survive the resize); the stamped
+      image follows as a normal ``full`` save.
+  ("rebuild", epoch, dir, wm,              ("rebuilt", watermark)
+   seed_t, seed_a, seed_tr, plan)
+      remote-disk reconcile: reset to the init seed, then replay the
+      shipped stamped-event ``plan`` from the *writer's* local files
+      (used when the coordinator cannot read the shard's directory).
+
 ``save_full`` payloads are one of ``("spool", path)``, ``("shm", name,
 meta)`` or ``("slices", tables, accs)`` — every worker applies them through
 the same :class:`_ShardStore`, so manifests and images are byte-identical
@@ -88,7 +107,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.core.checkpoint import (AsyncApplier, EmbShardSpec, _leaves,
-                                   save_trainer_tree)
+                                   load_trainer_tree, save_trainer_tree)
 
 # Default seconds the coordinator waits for a shard's DRAIN ack before
 # declaring the writer dead.  Generous: a healthy worker only has bounded
@@ -683,6 +702,61 @@ def _apply_full_payload(store: _ShardStore, spec: EmbShardSpec, payload,
     raise ValueError(f"unknown save_full payload kind {kind!r}")
 
 
+def replay_plan_into_store(store: _ShardStore, plan) -> None:
+    """Worker-side cross-epoch replay, restricted to the store's rows.
+
+    ``plan`` is the stamped-event script a coordinator ships with the
+    ``rebuild`` frame when it cannot read this shard's directory itself
+    (remote disk): an ordered list of ops
+
+      * ``("layout", n_shards, boundaries)`` — switch the active layout
+        epoch the following events' shard ids are resolved through,
+      * ``("full", shard, path)`` — a full event of ``shard`` *under the
+        active layout*; only the rows overlapping our ranges are applied,
+      * ``("partial", shard, path)`` — a partial event (global row ids;
+        rows outside our ranges are dropped),
+      * ``("trainer", path)`` — trainer replica (applied on shard 0).
+
+    Paths are server-local (shared fs in a multi-host fleet — the same
+    contract the ``spawn`` directory already has).  The caller resets the
+    image to the init seed first; replaying every stamped event in
+    manifest order then reproduces exactly the stamped image.
+    """
+    active: Optional[EmbShardSpec] = None
+    sizes = store.spec.table_sizes
+    for op in plan:
+        kind = op[0]
+        if kind == "layout":
+            active = EmbShardSpec(sizes, int(op[1]), boundaries=op[2])
+        elif kind == "full":
+            jj, path = int(op[1]), op[2]
+            with np.load(path) as z:
+                for t, (slo, shi) in enumerate(store.ranges):
+                    lo, hi = active.shard_range(t, jj)
+                    a, b = max(lo, slo), min(hi, shi)
+                    if a < b:
+                        store.image_tables[t][a - slo:b - slo] = \
+                            z[f"table_{t}"][a - lo:b - lo]
+                        store.image_accs[t][a - slo:b - slo] = \
+                            z[f"acc_{t}"][a - lo:b - lo]
+        elif kind == "partial":
+            with np.load(op[2]) as z:
+                t = int(z["table"])
+                rows = np.asarray(z["rows"])
+                slo, shi = store.ranges[t]
+                keep = (rows >= slo) & (rows < shi)
+                if np.any(keep):
+                    store.image_tables[t][rows[keep] - slo] = \
+                        np.asarray(z["values"])[keep]
+                    store.image_accs[t][rows[keep] - slo] = \
+                        np.asarray(z["accs"])[keep]
+        elif kind == "trainer":
+            if store.shard == 0:
+                store.trainer_image = load_trainer_tree(op[1], None)
+        else:
+            raise ValueError(f"unknown rebuild-plan op {kind!r}")
+
+
 # =========================================================================
 # the unified worker loop (pipe children and socket servers both run this)
 # =========================================================================
@@ -826,6 +900,70 @@ class WriterSession:
             return ("image", [t.copy() for t in self.store.image_tables],
                     [a.copy() for a in self.store.image_accs],
                     self.store.trainer_image), False
+        if kind == "export":
+            # reshard donor read: the rows of our image overlapping the
+            # requested global [lo, hi) ranges, one pair per table
+            t_out, a_out = [], []
+            for t, r in enumerate(msg[2]):
+                lo, hi = int(r[0]), int(r[1])
+                slo, shi = self.store.ranges[t]
+                a, b = max(lo, slo), min(hi, shi)
+                if a < b:
+                    t_out.append(self.store.image_tables[t]
+                                 [a - slo:b - slo].copy())
+                    a_out.append(self.store.image_accs[t]
+                                 [a - slo:b - slo].copy())
+                else:
+                    t_out.append(self.store.image_tables[t][:0].copy())
+                    a_out.append(self.store.image_accs[t][:0].copy())
+            return ("rows-out", self.shard, t_out, a_out), False
+        if kind == "reshard":
+            # receiver rebuild for an online fleet resize: swap the store
+            # to the new layout epoch, keeping the session (and its
+            # connection, counters, watermark) alive.  The store is seeded
+            # with pristine init slices; the stamped image follows as a
+            # normal full save, so a previously latched error is cleared —
+            # the post-reshard state is fully determined by that seed.
+            try:
+                _, _, sizes, n_sh, bounds, directory, s_t, s_a, s_tr = msg
+                spec = EmbShardSpec(sizes, int(n_sh), boundaries=bounds)
+                old = self.store
+                store = _ShardStore(self.shard, spec, s_t, s_a,
+                                    directory=directory, sliced=True,
+                                    fsync_payloads=old.fsync_payloads)
+                store.trainer_image = s_tr
+                store.bytes_written = old.bytes_written
+                store.save_events = old.save_events
+                self.store = store
+                self.spec = spec
+                self.err = None
+                return ("resharded", self.shard, self.watermark), False
+            except BaseException as e:
+                self.err = f"{type(e).__name__}: {e}"
+                return ("error", -1, self.err), False
+        if kind == "rebuild":
+            # remote-disk reconcile: reset to the shipped init seed, then
+            # replay the stamped-event plan from OUR local files (the
+            # coordinator could not read this shard's directory).  Clears
+            # a latched error like a reconcile reseed does.
+            try:
+                _, _, directory, watermark, s_t, s_a, s_tr, plan = msg
+                self.store.directory = directory
+                if directory:
+                    os.makedirs(directory, exist_ok=True)
+                self.store._pending_fsync = []
+                self.store.applied = []
+                for t in range(len(self.store.image_tables)):
+                    self.store.image_tables[t][...] = s_t[t]
+                    self.store.image_accs[t][...] = s_a[t]
+                self.store.trainer_image = s_tr
+                replay_plan_into_store(self.store, plan)
+                self.watermark = watermark
+                self.err = None
+                return ("rebuilt", self.watermark), False
+            except BaseException as e:
+                self.err = f"{type(e).__name__}: {e}"
+                return ("error", -1, self.err), False
         if self.err is not None:        # fail-stop: drop applies
             return None, False
         seq, step = msg[2], msg[3]
@@ -930,6 +1068,22 @@ class ShardEndpoint:
         Never blocks the caller for long."""
 
     def fetch_image(self, timeout: float):
+        raise NotImplementedError
+
+    def export_rows(self, ranges, timeout: float = DRAIN_TIMEOUT_S):
+        """Reshard donor read: the writer's image rows overlapping the
+        global ``[lo, hi)`` ``ranges`` (one pair per table).  Returns
+        ``(table_slices, acc_slices)`` or None when the writer is
+        unreachable (the caller falls back to disk replay)."""
+        raise NotImplementedError
+
+    def reshard(self, spec: EmbShardSpec, seed, directory,
+                timeout: float = DRAIN_TIMEOUT_S):
+        """Swap the writer's store to a new layout epoch in place (the
+        writer keeps its shard id, connection and counters).  ``seed`` is
+        ``(table_slices, acc_slices, trainer_image)`` under the NEW
+        layout.  Raises on failure — the transport then replaces the
+        endpoint with a fresh spawn."""
         raise NotImplementedError
 
     def kill(self):
@@ -1057,6 +1211,37 @@ class InprocEndpoint(ShardEndpoint):
     def fetch_image(self, timeout: float):
         return (self.store.image_tables, self.store.image_accs,
                 self.store.trainer_image)
+
+    def export_rows(self, ranges, timeout: float = DRAIN_TIMEOUT_S):
+        if self.error is not None:
+            return None
+        out_t, out_a = [], []
+        for t, (lo, hi) in enumerate(ranges):
+            slo, shi = self.store.ranges[t]
+            a, b = max(int(lo), slo), min(int(hi), shi)
+            if a < b:
+                out_t.append(self.store.image_tables[t][a - slo:b - slo]
+                             .copy())
+                out_a.append(self.store.image_accs[t][a - slo:b - slo]
+                             .copy())
+            else:
+                out_t.append(self.store.image_tables[t][:0].copy())
+                out_a.append(self.store.image_accs[t][:0].copy())
+        return out_t, out_a
+
+    def reshard(self, spec: EmbShardSpec, seed, directory,
+                timeout: float = DRAIN_TIMEOUT_S):
+        self.applier.fence()            # raises on a latched apply error
+        old = self.store
+        store = _ShardStore(self.shard, spec, seed[0], seed[1],
+                            directory=directory, sliced=True,
+                            fsync_payloads=old.fsync_payloads)
+        store.trainer_image = seed[2]
+        # the store carries the accounting (remote endpoints count acks
+        # instead): carry it across the swap so resize doesn't reset it
+        store.bytes_written = old.bytes_written
+        store.save_events = old.save_events
+        self.store = store
 
     # ----------------------------------------------------------- admin ----
     def kill(self):
@@ -1245,6 +1430,32 @@ class RemoteEndpoint(ShardEndpoint):
             return None
         return list(msg[1]), list(msg[2]), msg[3]
 
+    def export_rows(self, ranges, timeout: float = DRAIN_TIMEOUT_S):
+        try:
+            self._send(("export", self.epoch,
+                        [[int(lo), int(hi)] for lo, hi in ranges]))
+        except RuntimeError:
+            return None
+        msg = self._recv_until("rows-out", timeout)
+        if msg is None:
+            return None
+        return list(msg[2]), list(msg[3])
+
+    def reshard(self, spec: EmbShardSpec, seed, directory,
+                timeout: float = DRAIN_TIMEOUT_S):
+        self._send(("reshard", self.epoch, list(spec.table_sizes),
+                    spec.n_shards, [b.tolist() for b in spec.boundaries],
+                    directory,
+                    [np.asarray(t) for t in seed[0]],
+                    [np.asarray(a) for a in seed[1]], seed[2]))
+        msg = self._recv_until("resharded", timeout)
+        if msg is None or self._exc is not None:
+            raise WriterProcError(
+                f"shard {self.shard} writer reshard failed"
+            ) from self._exc
+        self.spec = spec
+        self.directory = directory
+
     def close(self):
         """Best-effort shutdown; never raises."""
         try:
@@ -1386,7 +1597,8 @@ class SocketEndpoint(RemoteEndpoint):
                  epoch: int = 0,
                  attach_watermark: Optional[int] = None,
                  attach_seed_ok: bool = True,
-                 attach_fallback_spawn: bool = False):
+                 attach_fallback_spawn: bool = False,
+                 attach_rebuild_plan=None):
         super().__init__(shard, epoch=epoch)
         self.spec = spec
         self.directory = directory
@@ -1399,6 +1611,7 @@ class SocketEndpoint(RemoteEndpoint):
         self._attach_watermark = attach_watermark   # first connect only
         self._attach_seed_ok = attach_seed_ok
         self._attach_fallback = attach_fallback_spawn
+        self._rebuild_plan = attach_rebuild_plan    # remote-disk reconcile
         self._server_proc = None        # auto-spawned server (owned)
         self._server_ready = None
         self._outq: Optional[queue.Queue] = None
@@ -1471,7 +1684,8 @@ class SocketEndpoint(RemoteEndpoint):
             chan.send(("spawn", self.shard, list(self.spec.table_sizes),
                        self.spec.n_shards, self.directory,
                        seed[0], seed[1], seed[2], self.fsync_payloads,
-                       self.epoch))
+                       self.epoch,
+                       [b.tolist() for b in self.spec.boundaries]))
         self.effective_address = tuple(addr)
         self._chan = chan
         self._outq = queue.Queue(maxsize=SUBMIT_QUEUE_DEPTH)
@@ -1496,7 +1710,21 @@ class SocketEndpoint(RemoteEndpoint):
             chan.send(("spawn", self.shard, list(self.spec.table_sizes),
                        self.spec.n_shards, self.directory,
                        seed[0], seed[1], seed[2], self.fsync_payloads,
-                       self.epoch))
+                       self.epoch,
+                       [b.tolist() for b in self.spec.boundaries]))
+            if self._rebuild_plan is not None:
+                # the seed we just spawned with is only the init image
+                # (the stamped one was unreadable coordinator-side): have
+                # the fresh writer replay the stamped plan from its disk
+                chan.send(("rebuild", self.epoch, self.directory, wm,
+                           seed[0], seed[1], seed[2], self._rebuild_plan))
+                reply = self._handshake_recv(chan)
+                if reply[0] != "rebuilt":
+                    raise WriterProcError(
+                        f"shard {self.shard} spawn-rebuild got "
+                        f"{reply[0]!r}: {reply[1:]}")
+                self.durable_seq = max(self.durable_seq, wm)
+                self.reconciled = "rebuilt"
             return
         if reply[0] == "stale":
             raise StaleEpochError(
@@ -1512,6 +1740,26 @@ class SocketEndpoint(RemoteEndpoint):
             # adopt its image in place, no state crosses the wire
             chan.send(("reconcile", self.epoch, self.directory, wm,
                        None, None, None))
+        elif self._rebuild_plan is not None:
+            # the stamped image could not be replayed coordinator-side
+            # (unreadable shard directory / remote disk): reset the writer
+            # to the init seed and have it replay the stamped plan from
+            # its OWN local files instead of poisoning the shard
+            chan.send(("rebuild", self.epoch, self.directory, wm,
+                       seed[0], seed[1], seed[2], self._rebuild_plan))
+            reply = self._handshake_recv(chan)
+            if reply[0] == "stale":
+                raise StaleEpochError(
+                    f"shard {self.shard} rebuild rejected: epoch "
+                    f"{self.epoch} superseded by {reply[3]}")
+            if reply[0] != "rebuilt":
+                raise WriterProcError(
+                    f"shard {self.shard} rebuild got {reply[0]!r}: "
+                    f"{reply[1:]}")
+            self.durable_seq = max(self.durable_seq, wm)
+            self.adopted = True
+            self.reconciled = "rebuilt"
+            return
         else:
             # a gap (applied-but-unstamped work, a lost writer tail, or a
             # latched apply error): discard it by reseeding the stamped
@@ -1733,6 +1981,54 @@ class ShardTransport:
             ref.release()
         self._pending = []
 
+    # ------------------------------------------------------ fleet resize --
+    def _spawn_endpoint(self, shard: int, spec: EmbShardSpec, seed,
+                        shard_dir, address=None) -> ShardEndpoint:
+        raise NotImplementedError
+
+    def resize_fleet(self, spec: EmbShardSpec, seeds, shard_dirs,
+                     addresses: Optional[Sequence] = None):
+        """Rebuild the endpoint fleet for a new layout epoch (called by
+        ``ShardedCheckpointWriter.resize`` inside a fence window, after the
+        old layout was stamped).  Retained shards (``j < min(old, new)``)
+        are resharded *in place* — session, connection and counters survive
+        — falling back to a fresh spawn when the in-place swap fails;
+        growth shards are spawned fresh; surplus shards are closed.
+        ``seeds[j]`` are pristine init slices under the NEW layout (the
+        stamped image follows as a normal full save)."""
+        old = self.endpoints
+        new_n = spec.n_shards
+        keep = min(len(old), new_n)
+        eps: List[ShardEndpoint] = []
+        for j in range(keep):
+            ep = old[j]
+            ok = False
+            if ep.error is None:
+                try:
+                    ep.reshard(spec, seeds[j], shard_dirs[j])
+                    ok = True
+                except Exception:
+                    pass                # fall through to a fresh spawn
+            if not ok:
+                try:
+                    ep.close()
+                except Exception:
+                    pass
+                ep = self._spawn_endpoint(
+                    j, spec, seeds[j], shard_dirs[j],
+                    address=(addresses[j] if addresses else None))
+            eps.append(ep)
+        for j in range(keep, new_n):    # growth: fresh receivers
+            eps.append(self._spawn_endpoint(
+                j, spec, seeds[j], shard_dirs[j],
+                address=(addresses[j] if addresses else None)))
+        for ep in old[new_n:]:          # shrink: retire surplus donors
+            try:
+                ep.close()
+            except Exception:
+                pass
+        self.endpoints = eps
+
     def close(self):
         for ep in self.endpoints:
             ep.close()
@@ -1747,13 +2043,19 @@ class InprocTransport(ShardTransport):
                  async_save: bool = True, max_inflight: int = 2,
                  fsync_payloads: bool = True, epoch: int = 0):
         super().__init__(epoch=epoch)
+        self.async_save = async_save
+        self.max_inflight = max_inflight
+        self.fsync_payloads = fsync_payloads
         self.endpoints = [
-            InprocEndpoint(j, spec, seeds[j][0], seeds[j][1],
-                           trainer_image=seeds[j][2],
-                           directory=shard_dirs[j], async_save=async_save,
-                           max_inflight=max_inflight,
-                           fsync_payloads=fsync_payloads)
+            self._spawn_endpoint(j, spec, seeds[j], shard_dirs[j])
             for j in range(spec.n_shards)]
+
+    def _spawn_endpoint(self, shard, spec, seed, shard_dir, address=None):
+        return InprocEndpoint(shard, spec, seed[0], seed[1],
+                              trainer_image=seed[2], directory=shard_dir,
+                              async_save=self.async_save,
+                              max_inflight=self.max_inflight,
+                              fsync_payloads=self.fsync_payloads)
 
     def _make_snapshot(self, seq, snap_t, snap_a):
         return InlineSnapshot(seq, snap_t, snap_a)
@@ -1769,13 +2071,17 @@ class PipeTransport(ShardTransport):
         super().__init__(epoch=epoch)
         self.snapshot = snapshot
         self.spool_dir = spool_dir
+        self.fsync_payloads = fsync_payloads
         self._owned_spool: Optional[str] = None   # mkdtemp'd by us
         self.endpoints = [
-            PipeEndpoint(j, spec, seeds[j][0], seeds[j][1],
-                         trainer_image=seeds[j][2],
-                         directory=shard_dirs[j],
-                         fsync_payloads=fsync_payloads, epoch=epoch)
+            self._spawn_endpoint(j, spec, seeds[j], shard_dirs[j])
             for j in range(spec.n_shards)]
+
+    def _spawn_endpoint(self, shard, spec, seed, shard_dir, address=None):
+        return PipeEndpoint(shard, spec, seed[0], seed[1],
+                            trainer_image=seed[2], directory=shard_dir,
+                            fsync_payloads=self.fsync_payloads,
+                            epoch=self.epoch)
 
     def _make_snapshot(self, seq, snap_t, snap_a):
         if self.snapshot == "shm":
@@ -1809,15 +2115,18 @@ class SocketTransport(ShardTransport):
                  epoch: int = 0,
                  attach_watermarks: Optional[Sequence[int]] = None,
                  attach_seed_ok: Optional[Sequence[bool]] = None,
-                 attach_fallback_spawn: Optional[Sequence[bool]] = None):
+                 attach_fallback_spawn: Optional[Sequence[bool]] = None,
+                 attach_rebuild_plans: Optional[Sequence] = None):
         super().__init__(epoch=epoch)
         if addresses is not None and len(addresses) != spec.n_shards:
             raise ValueError(
                 f"socket transport needs one address per shard: got "
                 f"{len(addresses)} for n_shards={spec.n_shards}")
-        self._ranges = [[spec.shard_range(t, j)
-                         for t in range(len(spec.table_sizes))]
-                        for j in range(spec.n_shards)]
+        self.fsync_payloads = fsync_payloads
+        self.connect_timeout = connect_timeout
+        self.submit_timeout = submit_timeout
+        self.heartbeat_timeout = heartbeat_timeout
+        self._ranges = self._ranges_for(spec)
         self.endpoints = [
             SocketEndpoint(j, spec, seeds[j][0], seeds[j][1],
                            trainer_image=seeds[j][2],
@@ -1837,8 +2146,34 @@ class SocketTransport(ShardTransport):
                            attach_fallback_spawn=(
                                attach_fallback_spawn[j]
                                if attach_fallback_spawn is not None
-                               else False))
+                               else False),
+                           attach_rebuild_plan=(
+                               attach_rebuild_plans[j]
+                               if attach_rebuild_plans is not None
+                               else None))
             for j in range(spec.n_shards)]
+
+    @staticmethod
+    def _ranges_for(spec: EmbShardSpec):
+        return [[spec.shard_range(t, j)
+                 for t in range(len(spec.table_sizes))]
+                for j in range(spec.n_shards)]
+
+    def _spawn_endpoint(self, shard, spec, seed, shard_dir, address=None):
+        return SocketEndpoint(shard, spec, seed[0], seed[1],
+                              trainer_image=seed[2], directory=shard_dir,
+                              address=address,
+                              fsync_payloads=self.fsync_payloads,
+                              connect_timeout=self.connect_timeout,
+                              submit_timeout=self.submit_timeout,
+                              heartbeat_timeout=self.heartbeat_timeout,
+                              epoch=self.epoch)
+
+    def resize_fleet(self, spec, seeds, shard_dirs, addresses=None):
+        # the per-shard slice ranges feed every later SliceSnapshot: swap
+        # them before any endpoint exists under the new layout
+        self._ranges = self._ranges_for(spec)
+        super().resize_fleet(spec, seeds, shard_dirs, addresses=addresses)
 
     @property
     def addresses(self):
@@ -1867,6 +2202,7 @@ def make_transport(name: str, spec: EmbShardSpec, seeds, shard_dirs,
     kw = {k: opts[k] for k in ("addresses", "connect_timeout",
                                "submit_timeout", "heartbeat_timeout",
                                "attach_watermarks", "attach_seed_ok",
-                               "attach_fallback_spawn")
+                               "attach_fallback_spawn",
+                               "attach_rebuild_plans")
           if k in opts}
     return SocketTransport(spec, seeds, shard_dirs, **kw, **common)

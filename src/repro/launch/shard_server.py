@@ -20,6 +20,16 @@ successor.  Plain re-admission after a crash or partition by the *same*
 coordinator remains a fresh connection + ``spawn`` with a fresh seed
 (``SocketEndpoint.respawn``).
 
+Sessions are also **donor/receiver endpoints for online fleet resize**
+(``ShardedCheckpointWriter.resize``): inside a fence window the
+coordinator streams row ranges out of donors with ``export`` frames,
+swaps each retained session's store to the new layout epoch with a
+``reshard`` frame (session and connection survive the resize), and ships
+the stamped image back as a normal ``full`` save.  A coordinator that
+cannot read a shard's directory at takeover sends ``rebuild`` instead of
+``reconcile`` — the session then replays the shipped stamped-event plan
+from its *own* local files (see ``repro.core.transport`` for the frames).
+
 The server never imports jax: it is numpy + sockets only, so it is cheap
 to start and a trainer-side accelerator wedge cannot corrupt it.
 
@@ -82,13 +92,14 @@ def _serve_spawn(chan: SockChannel, registry: SessionRegistry, msg):
     (_, shard, table_sizes, n_shards, directory,
      seed_t, seed_a, seed_tr, fsync) = msg[:9]
     epoch = msg[9] if len(msg) > 9 else 0
+    boundaries = msg[10] if len(msg) > 10 else None
     old = registry.get(shard)
     if old is not None and old.epoch > epoch:
         # cheap pre-check before materializing the seed store (the
         # install below re-checks under the registry lock for the race)
         chan.send(("stale", "spawn", epoch, old.epoch))
         return
-    spec = EmbShardSpec(table_sizes, n_shards)
+    spec = EmbShardSpec(table_sizes, n_shards, boundaries=boundaries)
     session = WriterSession(shard, spec, directory,
                             (seed_t, seed_a, seed_tr),
                             fsync_payloads=fsync, epoch=epoch)
@@ -126,18 +137,26 @@ def _serve_attach(chan: SockChannel, registry: SessionRegistry, msg):
         rec = chan.recv()
     except (EOFError, OSError):
         return                          # adopter vanished mid-handshake
-    if rec[0] != "reconcile" or rec[1] != epoch:
+    if rec[0] not in ("reconcile", "rebuild") or rec[1] != epoch:
         return
-    _, _, directory, watermark, seed_t, seed_a, seed_tr = rec
-    seed = None if seed_t is None else (seed_t, seed_a, seed_tr)
     with session.lock:
         if session.gen != gen or session.epoch != epoch:
             # an even newer coordinator claimed the session between our
             # attach-ok and this reconcile: this adopter is already stale
-            chan.send(("stale", "reconcile", epoch, session.epoch))
+            chan.send(("stale", rec[0], epoch, session.epoch))
             return
-        wm = session.reconcile(directory, watermark, seed)
-    chan.send(("reconciled", wm))
+        if rec[0] == "rebuild":
+            # remote-disk reconcile: the adopter could not read this
+            # shard's directory coordinator-side, so it ships the stamped
+            # event plan and the session replays it from its OWN local
+            # files (the same command the serve loop accepts)
+            reply, _ = session._handle(rec)
+        else:
+            _, _, directory, watermark, seed_t, seed_a, seed_tr = rec
+            seed = None if seed_t is None else (seed_t, seed_a, seed_tr)
+            wm = session.reconcile(directory, watermark, seed)
+            reply = ("reconciled", wm)
+    chan.send(reply)
     session.serve(chan, gen)
 
 

@@ -42,7 +42,8 @@ def train(cfg, steps=200, batch=8, seq=128, lr=0.005, mode="cpr-mfu",
           async_save=False, tracker_backend="pallas", sharded_save=False,
           delta_saves=None, n_emb=8, resume=False, writer_procs=False,
           readmit=False, transport=None, shard_addrs=None,
-          heartbeat_interval=None, readmit_backoff=0.0, attach=False):
+          heartbeat_interval=None, readmit_backoff=0.0, attach=False,
+          resize_at=None, lease_ttl=None):
     """Returns (final_params, history dict)."""
     assert cfg.causal and cfg.modality_frontend is None, \
         "LM driver needs a causal text model"
@@ -62,7 +63,8 @@ def train(cfg, steps=200, batch=8, seq=128, lr=0.005, mode="cpr-mfu",
                      writer_procs=writer_procs, readmit=readmit,
                      transport=transport, shard_addrs=shard_addrs,
                      heartbeat_interval=heartbeat_interval,
-                     readmit_backoff=readmit_backoff, attach=attach)
+                     readmit_backoff=readmit_backoff, attach=attach,
+                     lease_ttl=lease_ttl)
     if resume and checkpoint_dir:
         # warm start from the last consistent cycle on disk: embedding rows,
         # their optimizer rows, and the non-embedding trainer tree
@@ -75,6 +77,10 @@ def train(cfg, steps=200, batch=8, seq=128, lr=0.005, mode="cpr-mfu",
         params = {**params, **(trainer or {}), "embed": jnp.asarray(r_t[0])}
         ostate = {**ostate,
                   "acc": {**ostate["acc"], "embed": jnp.asarray(r_a[0])}}
+        if mgr.sharded_save and getattr(loaded, "spec", None) is not None:
+            # the chain may have crossed a live resize: run under the
+            # layout it last stamped, not the CLI's --n-emb
+            mgr.adopt_layout(loaded.spec)
     tracker = mgr.tracker_init([params["embed"]])
     mgr.attach_store([params["embed"]], [ostate["acc"]["embed"]],
                      {k: v for k, v in params.items() if k != "embed"})
@@ -131,6 +137,16 @@ def train(cfg, steps=200, batch=8, seq=128, lr=0.005, mode="cpr-mfu",
                 (mgr.ledger.save_blocked_s - blocked0)
             mgr.wall_time_scale = i / max(train_wall, 1e-9)
         t_prev, t_sim = t_sim, t_sim + 1.0
+        if resize_at and i in resize_at:
+            # live fleet resize under traffic: the reshard overlaps
+            # training compute and the trainer joins it at the next save
+            # boundary — no restart, at most one boundary's pause
+            mgr.resize(resize_at[i], t_event=t_sim, step=i,
+                       background=True)
+            print(f"step {i:5d} resizing writer fleet -> "
+                  f"{resize_at[i]} shards (reshard overlaps training)",
+                  flush=True)
+            history["events"].append(("resize", i, resize_at[i]))
         for t_ev in mgr.due_saves(t_sim):
             tracker = mgr.run_save(
                 t_ev, [params["embed"]], [ostate["acc"]["embed"]], tracker,
@@ -215,10 +231,31 @@ def main():
                          "shard_server writers under a new epoch, "
                          "reconcile to the last stamped cycle) and warm-"
                          "start the trainer from it; implies sharded save")
+    ap.add_argument("--resize-at", action="append", default=None,
+                    metavar="STEP:N",
+                    help="live-resize the writer fleet to N shards at "
+                         "training step STEP (repeatable, or one comma-"
+                         "separated list; requires --sharded-save): the "
+                         "coordinator fences, streams rows between "
+                         "writers, and stamps a new layout epoch without "
+                         "restarting training")
+    ap.add_argument("--lease-ttl", type=float, default=None,
+                    help="coordinator lease TTL in seconds: the active "
+                         "coordinator renews a LEASE file in the "
+                         "checkpoint dir each cycle; a standby's --attach "
+                         "is refused while the lease is live (election "
+                         "guard against split-brain takeover)")
     ap.add_argument("--tracker-backend", choices=("host", "pallas"),
                     default="pallas")
     args = ap.parse_args()
     cfg = build_cfg(args)
+    resize_at = None
+    if args.resize_at:
+        resize_at = {}
+        for item in args.resize_at:
+            for part in item.split(","):
+                step_s, n_s = part.split(":")
+                resize_at[int(step_s)] = int(n_s)
     shard_addrs = None
     if args.shard_servers:
         shard_addrs = []
@@ -237,7 +274,8 @@ def main():
                     transport=args.transport, shard_addrs=shard_addrs,
                     heartbeat_interval=args.heartbeat_interval,
                     readmit_backoff=args.readmit_backoff,
-                    attach=args.attach,
+                    attach=args.attach, resize_at=resize_at,
+                    lease_ttl=args.lease_ttl,
                     tracker_backend=args.tracker_backend)
     r = hist["report"]
     o = r["overheads"]

@@ -1,0 +1,682 @@
+"""Elastic writer-fleet tests: online shard split/merge, layout-epoch
+manifests, lease-based leader election, and remote-disk rebuild.
+
+Covers the elastic PR's acceptance contract: a split (2 -> 4) followed by
+a merge (4 -> 3) under continuous save traffic restores via
+``load_latest`` byte-identical to a single-layout oracle store fed the
+same schedule; cross-epoch replay re-slices stamped events through each
+layout epoch's boundaries; ``attach`` adopts a post-reshard layout a
+standby's spec predates; crash-mid-reshard atomicity (the layout event
+and its seed fulls stamp in one atomic manifest write or not at all —
+in-process abort here, coordinator SIGKILL in the crash-marked
+``test_elastic_*`` legs); ``CPRManager.resize`` PLS/recovery-point
+remapping; lease election (a live lease refuses a standby ``attach``
+until expiry or ``force``); and the rebuild handshake for a coordinator
+that cannot read a shard's directory.  A hypothesis property drives
+random save/fence/split/merge/kill interleavings to the replay oracle.
+"""
+import json
+import multiprocessing
+import os
+import signal
+import threading
+import time
+
+import numpy as np
+import pytest
+from hypothesis_compat import given, settings, st
+
+from repro.core import (CheckpointStore, CPRManager, EmbShardSpec,
+                        LeaseHeldError, ShardedCheckpointWriter,
+                        SystemParams, lease_status, load_latest_auto,
+                        resolve_run_dir)
+from repro.core import sharded_checkpoint as sc
+from repro.launch import shard_server
+
+SIZES = (40, 17, 3)
+DIM = 8
+
+
+def make_state(sizes=SIZES, d=DIM, seed=0):
+    rng = np.random.default_rng(seed)
+    tables = [rng.normal(size=(n, d)).astype(np.float32) for n in sizes]
+    accs = [np.zeros(n, np.float32) for n in sizes]
+    return tables, accs
+
+
+def trainer_tree(v=0.0):
+    return {"bottom": [np.full((3, 2), v, np.float32)],
+            "top": [np.full(4, v + 1, np.float32)]}
+
+
+def _traffic(savers, state_t, state_a, rng, n_ops, step0=0):
+    """Drive ``n_ops`` of mixed full/partial/trainer traffic into every
+    saver, mutating the shared oracle ``state_t``/``state_a`` in place."""
+    for k in range(step0, step0 + n_ops):
+        if rng.random() < 0.3:
+            for t in range(len(SIZES)):
+                state_t[t] = state_t[t] + np.float32(rng.normal())
+                state_a[t] = state_a[t] + np.float32(abs(rng.normal()))
+            tr = trainer_tree(float(k))
+            for s in savers:
+                s.save_full(state_t, state_a, tr, step=k)
+        else:
+            t = int(rng.integers(len(SIZES)))
+            rows = rng.choice(SIZES[t],
+                              size=int(rng.integers(1, SIZES[t] + 1)),
+                              replace=False)
+            vals = rng.normal(size=(rows.size, DIM)).astype(np.float32)
+            avs = rng.random(rows.size).astype(np.float32)
+            state_t[t] = np.array(state_t[t])
+            state_a[t] = np.array(state_a[t])
+            state_t[t][rows] = vals
+            state_a[t][rows] = avs
+            for s in savers:
+                s.save_rows(t, rows, vals, avs, step=k)
+
+
+# ------------------------------------------------- split/merge oracle ------
+@pytest.mark.parametrize("backend", ["inproc", "pipe", "socket"])
+def test_split_then_merge_matches_single_layout_oracle(tmp_path, backend):
+    """Acceptance: split 2 -> 4 then merge 4 -> 3 under continuous save
+    traffic; the live images after every epoch, and cold ``load_latest``
+    over the cross-epoch chain, are byte-identical to a flat single-layout
+    store fed the exact same schedule."""
+    tables, accs = make_state()
+    spec = EmbShardSpec(SIZES, 2)
+    oracle = CheckpointStore([t.copy() for t in tables],
+                             [a.copy() for a in accs],
+                             EmbShardSpec(SIZES, 1),
+                             trainer_state=trainer_tree())
+    fleet = ShardedCheckpointWriter(
+        [t.copy() for t in tables], [a.copy() for a in accs], spec,
+        trainer_state=trainer_tree(), directory=str(tmp_path),
+        backend=backend, delta_saves=True, drain_timeout=30.0)
+    rng = np.random.default_rng(5)
+    state_t = [t.copy() for t in tables]
+    state_a = [a.copy() for a in accs]
+
+    _traffic([fleet, oracle], state_t, state_a, rng, 6)
+    info = fleet.resize(4, step=6)
+    assert (info["from"], info["to"]) == (2, 4)
+    assert info["layout_epoch"] == 2
+    _traffic([fleet, oracle], state_t, state_a, rng, 6, step0=7)
+    info = fleet.resize(3, step=13)
+    assert (info["from"], info["to"]) == (4, 3)
+    assert info["layout_epoch"] == 3
+    _traffic([fleet, oracle], state_t, state_a, rng, 6, step0=14)
+    fleet.fence()
+    for t in range(len(SIZES)):
+        np.testing.assert_array_equal(fleet.image_tables[t],
+                                      oracle.image_tables[t])
+        np.testing.assert_array_equal(fleet.image_accs[t],
+                                      oracle.image_accs[t])
+    assert fleet.reshard_history == [h for h in fleet.reshard_history
+                                     if h["pause_s"] >= 0.0]
+    fleet.close()
+
+    # cold recovery replays the cross-epoch chain to the same bytes
+    loaded = ShardedCheckpointWriter.load_latest(
+        str(tmp_path), tables, accs, EmbShardSpec(SIZES, 3),
+        trainer_state=trainer_tree())
+    lt, la, ltr = loaded.restore_all()
+    for t in range(len(SIZES)):
+        np.testing.assert_array_equal(lt[t], oracle.image_tables[t])
+        np.testing.assert_array_equal(la[t], oracle.image_accs[t])
+    np.testing.assert_array_equal(ltr["top"][0],
+                                  oracle.trainer_image["top"][0])
+
+
+def test_resize_same_layout_is_noop(tmp_path):
+    tables, accs = make_state()
+    fleet = ShardedCheckpointWriter(tables, accs, EmbShardSpec(SIZES, 2),
+                                    directory=str(tmp_path))
+    cycles = fleet.cycle
+    info = fleet.resize(2)
+    assert info["from"] == info["to"] == 2
+    assert info["moved_bytes"] == 0 and fleet.cycle == cycles
+    assert fleet.layout_epoch == 1 and fleet.reshard_history == []
+    fleet.close()
+
+
+def test_layout_epoch_stamped_in_manifest(tmp_path):
+    """The manifest carries the run's starting layout epoch; a mid-run
+    resize appends a stamped ``layout`` event chaining to its parent, and
+    the durable COORDINATOR record adopts the new boundaries."""
+    tables, accs = make_state()
+    fleet = ShardedCheckpointWriter(tables, accs, EmbShardSpec(SIZES, 2),
+                                    directory=str(tmp_path),
+                                    delta_saves=False)
+    fleet.save_full([t + 1 for t in tables], [a + 1 for a in accs], step=1)
+    fleet.fence()
+    fleet.resize(3, step=2)
+    run_dir = resolve_run_dir(str(tmp_path))
+    with open(os.path.join(run_dir, "manifest.json")) as f:
+        m = json.load(f)
+    assert m["layout_epoch"]["epoch"] == 1
+    assert m["layout_epoch"]["n_shards"] == 2
+    lay = [e for e in m["events"] if e["kind"] == "layout"]
+    assert len(lay) == 1
+    assert lay[0]["n_shards"] == 3 and lay[0]["parent"] == 1
+    assert lay[0]["layout_epoch"] == 2
+    assert len(lay[0]["boundaries"]) == len(SIZES)
+    # the layout event is stamped: a cycle record follows it
+    evs = m["events"]
+    k = evs.index(lay[0])
+    assert any(e["kind"] == "cycle" for e in evs[k:])
+    state = sc._read_coordinator_state(str(tmp_path))
+    assert state["n_shards"] == 3 and state["layout_epoch"] == 2
+    assert state["boundaries"] is not None
+    fleet.close()
+
+
+def test_load_latest_rejects_stale_layout_and_auto_adopts(tmp_path):
+    """``load_latest`` with a spec that predates the final stamped layout
+    refuses (the caller's shard math would be wrong), while
+    ``load_latest_auto`` adopts the final layout from the chain."""
+    tables, accs = make_state()
+    fleet = ShardedCheckpointWriter(tables, accs, EmbShardSpec(SIZES, 2),
+                                    directory=str(tmp_path))
+    fleet.save_full([t + 1 for t in tables], [a + 1 for a in accs], step=1)
+    fleet.fence()
+    fleet.resize(4, step=2)
+    fleet.close()
+    with pytest.raises(ValueError, match="n_shards"):
+        ShardedCheckpointWriter.load_latest(str(tmp_path), tables, accs,
+                                            EmbShardSpec(SIZES, 2))
+    loaded = load_latest_auto(str(tmp_path), tables, accs,
+                              EmbShardSpec(SIZES, 2))
+    assert loaded.spec.n_shards == 4
+    lt, _, _ = loaded.restore_all()
+    for t in range(len(SIZES)):
+        np.testing.assert_array_equal(lt[t], tables[t] + 1)
+
+
+def test_attach_adopts_post_reshard_layout(tmp_path):
+    """A standby whose spec predates a resize must adopt the layout epoch
+    recorded in COORDINATOR instead of failing or mis-slicing."""
+    tables, accs = make_state()
+    fleet = ShardedCheckpointWriter(tables, accs, EmbShardSpec(SIZES, 2),
+                                    directory=str(tmp_path),
+                                    delta_saves=False)
+    fleet.save_full([t + 1 for t in tables], [a + 1 for a in accs], step=1)
+    fleet.fence()
+    fleet.resize(3, step=2)
+    fleet.save_full([t + 2 for t in tables], [a + 2 for a in accs], step=3)
+    fleet.fence()
+    fleet.close()
+    standby = ShardedCheckpointWriter.attach(
+        str(tmp_path), tables, accs, EmbShardSpec(SIZES, 2))
+    assert standby.n_shards == 3 and standby.spec.n_shards == 3
+    assert standby.attach_report["poisoned"] == []
+    lt, la, _ = standby.restore_all()
+    for t in range(len(SIZES)):
+        np.testing.assert_array_equal(lt[t], tables[t] + 2)
+        np.testing.assert_array_equal(la[t], accs[t] + 2)
+    # the adopted fleet keeps fencing under the adopted layout
+    standby.save_full([t + 5 for t in tables], [a + 5 for a in accs],
+                      step=5)
+    standby.fence()
+    assert standby.failed == {}
+    standby.close()
+
+
+def test_failed_swap_aborts_resize_and_keeps_old_layout(tmp_path):
+    """A transport swap that fails outright aborts the resize before any
+    layout event exists: the fleet keeps running — and stamping — under
+    the old boundaries, and disk never sees the new epoch."""
+    tables, accs = make_state()
+    fleet = ShardedCheckpointWriter(tables, accs, EmbShardSpec(SIZES, 2),
+                                    directory=str(tmp_path),
+                                    delta_saves=False)
+    fleet.save_full([t + 1 for t in tables], [a + 1 for a in accs], step=1)
+    fleet.fence()                                  # the rollback point
+
+    def boom(*a, **kw):
+        raise RuntimeError("swap failed")
+
+    fleet.transport.resize_fleet = boom
+    with pytest.raises(RuntimeError, match="swap failed"):
+        fleet.resize(4, step=2)
+    assert fleet.n_shards == 2 and fleet.layout_epoch == 1
+    # the un-resized fleet keeps working under the old layout
+    fleet.save_full([t + 2 for t in tables], [a + 2 for a in accs], step=3)
+    fleet.fence()
+    assert fleet.failed == {}
+    fleet.close()
+    loaded = ShardedCheckpointWriter.load_latest(
+        str(tmp_path), tables, accs, EmbShardSpec(SIZES, 2))
+    assert loaded.spec.n_shards == 2
+    lt, _, _ = loaded.restore_all()
+    for t in range(len(SIZES)):
+        np.testing.assert_array_equal(lt[t], tables[t] + 2)
+
+
+# -------------------------------------------------------- manager wiring ---
+def test_manager_resize_remaps_pls_and_recovery_points(tmp_path):
+    p = SystemParams(T_total=100.0, T_fail=50.0, N_emb=2)
+    mgr = CPRManager("cpr-mfu", p, SIZES, directory=str(tmp_path),
+                     sharded_save=True)
+    tables, accs = make_state()
+    mgr.attach_store(tables, accs, trainer_tree())
+    mgr.set_total_samples(100)
+    mgr.samples_seen = 10
+    tr = mgr.tracker_init(tables)
+    mgr.run_save(1.0, tables, accs, tr, trainer_tree(), step=1)
+    mgr.pls_by_shard[:] = [0.3, 0.1]               # uneven, to watch remap
+    total = float(np.sum(mgr.pls_by_shard))
+    info = mgr.resize(4, t_event=2.0, step=2)
+    assert info["from"] == 2 and info["to"] == 4
+    assert mgr.p.N_emb == 4 and mgr.store.n_shards == 4
+    assert len(mgr.pls_by_shard) == 4
+    # the fractional-overlap remap conserves total PLS
+    np.testing.assert_allclose(np.sum(mgr.pls_by_shard), total, rtol=1e-6)
+    # every new shard's recovery point is the reshard's stamped full
+    np.testing.assert_array_equal(mgr.last_cycle_time, np.full(4, 2.0))
+    np.testing.assert_array_equal(mgr.samples_at_cycle, np.full(4, 10.0))
+    info = mgr.resize(3, t_event=3.0, step=3)
+    assert info["to"] == 3 and len(mgr.pls_by_shard) == 3
+    rep = mgr.report()
+    assert rep["layout_epoch"] == 3
+    assert [h["to"] for h in rep["reshard_history"]] == [4, 3]
+    # failure events sampled against the old fleet size fold onto the
+    # live layout instead of indexing out of range
+    from repro.core import FailureEvent
+    ev = FailureEvent(time=4.0, shard_ids=(3,), fraction=0.25)
+    _, _, finfo = mgr.on_failure(ev, [t.copy() for t in tables],
+                                 [a.copy() for a in accs])
+    assert finfo["shards"] == [0]
+    mgr.close()
+
+
+def test_manager_background_resize_joins_at_next_boundary(tmp_path):
+    """``background=True`` returns immediately; the reshard lands (and the
+    policy re-base applies) at the manager's next store access, and the
+    history event records the trainer-blocked join time."""
+    p = SystemParams(T_total=100.0, T_fail=50.0, N_emb=2)
+    mgr = CPRManager("cpr-mfu", p, SIZES, directory=str(tmp_path),
+                     sharded_save=True)
+    tables, accs = make_state()
+    mgr.attach_store(tables, accs, trainer_tree())
+    mgr.set_total_samples(100)
+    mgr.samples_seen = 10
+    tr = mgr.tracker_init(tables)
+    mgr.run_save(1.0, tables, accs, tr, trainer_tree(), step=1)
+    assert mgr.resize(4, t_event=2.0, step=2, background=True) is None
+    assert mgr._resize_thread is not None
+    # trainer keeps stepping here; the next save boundary joins + applies
+    mgr.run_save(3.0, tables, accs, tr, trainer_tree(), step=3)
+    assert mgr._resize_thread is None
+    assert mgr.p.N_emb == 4 and mgr.store.n_shards == 4
+    ev = [h for h in mgr.history if h["event"] == "resize"]
+    assert len(ev) == 1 and ev[0]["to"] == 4
+    assert "trainer_blocked_s" in ev[0]
+    # a failure delivered mid-reshard also joins before restoring
+    mgr.resize(3, t_event=4.0, step=4, background=True)
+    from repro.core import FailureEvent
+    fev = FailureEvent(time=5.0, shard_ids=(3,), fraction=0.25)
+    _, _, finfo = mgr.on_failure(fev, [t.copy() for t in tables],
+                                 [a.copy() for a in accs])
+    assert mgr.p.N_emb == 3 and finfo["shards"] == [0]
+    rep = mgr.report()
+    assert rep["layout_epoch"] == 3
+    assert [h["to"] for h in rep["reshard_history"]] == [4, 3]
+    mgr.close()
+
+
+def test_manager_adopt_layout_on_resume(tmp_path):
+    """A fresh manager resuming a chain that crossed a resize adopts the
+    final stamped layout (``adopt_layout``) instead of failing the writer
+    construction against its CLI-configured shard count."""
+    p = SystemParams(T_total=100.0, T_fail=50.0, N_emb=2)
+    mgr = CPRManager("cpr-mfu", p, SIZES, directory=str(tmp_path),
+                     sharded_save=True)
+    tables, accs = make_state()
+    mgr.attach_store(tables, accs, trainer_tree())
+    mgr.set_total_samples(100)
+    tr = mgr.tracker_init(tables)
+    mgr.run_save(1.0, tables, accs, tr, trainer_tree(), step=1)
+    mgr.resize(3, t_event=2.0, step=2)
+    mgr.close()
+
+    mgr2 = CPRManager("cpr-mfu", p, SIZES, directory=str(tmp_path),
+                      sharded_save=True)
+    zt, za = make_state(seed=99)
+    loaded = load_latest_auto(str(tmp_path), zt, za, mgr2.spec,
+                              trainer_state=trainer_tree())
+    r_t, r_a, _ = loaded.restore_all()
+    mgr2.adopt_layout(loaded.spec)
+    assert mgr2.p.N_emb == 3 and len(mgr2.pls_by_shard) == 3
+    mgr2.attach_store(r_t, r_a, trainer_tree())     # ctor accepts layout
+    assert mgr2.store.n_shards == 3
+    for a, b in zip(r_t, tables):
+        np.testing.assert_array_equal(a, b)
+    mgr2.close()
+
+
+# ----------------------------------------------------------- lease election -
+def test_lease_blocks_standby_attach_until_force(tmp_path):
+    tables, accs = make_state()
+    fleet = ShardedCheckpointWriter(tables, accs, EmbShardSpec(SIZES, 2),
+                                    directory=str(tmp_path),
+                                    delta_saves=False, lease_ttl=60.0)
+    fleet.save_full([t + 1 for t in tables], [a + 1 for a in accs], step=1)
+    fleet.fence()
+    rec = lease_status(str(tmp_path))
+    assert rec is not None and rec["held"] and rec["epoch"] == 1
+    with pytest.raises(LeaseHeldError):
+        ShardedCheckpointWriter.attach(str(tmp_path), tables, accs,
+                                       EmbShardSpec(SIZES, 2))
+    # an operator-forced takeover overrides the live lease...
+    usurper = ShardedCheckpointWriter.attach(
+        str(tmp_path), tables, accs, EmbShardSpec(SIZES, 2), force=True,
+        lease_ttl=60.0)
+    assert usurper.epoch == 2
+    assert lease_status(str(tmp_path))["epoch"] == 2
+    lt, _, _ = usurper.restore_all()
+    np.testing.assert_array_equal(lt[0], tables[0] + 1)
+    # ...and the superseded coordinator's close cannot release the
+    # usurper's lease out from under it
+    fleet.close()
+    assert lease_status(str(tmp_path))["held"]
+    assert lease_status(str(tmp_path))["epoch"] == 2
+    usurper.close()
+
+
+def test_expired_lease_admits_standby(tmp_path):
+    tables, accs = make_state()
+    fleet = ShardedCheckpointWriter(tables, accs, EmbShardSpec(SIZES, 2),
+                                    directory=str(tmp_path),
+                                    delta_saves=False, lease_ttl=0.05)
+    fleet.save_full([t + 1 for t in tables], [a + 1 for a in accs], step=1)
+    fleet.fence()
+    deadline = time.time() + 5.0
+    while lease_status(str(tmp_path))["held"] and time.time() < deadline:
+        time.sleep(0.02)                # the hung coordinator stops renewing
+    assert not lease_status(str(tmp_path))["held"]
+    standby = ShardedCheckpointWriter.attach(
+        str(tmp_path), tables, accs, EmbShardSpec(SIZES, 2))
+    assert standby.epoch == 2
+    standby.close()
+    fleet.close()
+
+
+def test_clean_close_expires_lease(tmp_path):
+    tables, accs = make_state()
+    fleet = ShardedCheckpointWriter(tables, accs, EmbShardSpec(SIZES, 2),
+                                    directory=str(tmp_path), lease_ttl=60.0)
+    fleet.save_full([t + 1 for t in tables], [a + 1 for a in accs], step=1)
+    fleet.fence()
+    assert lease_status(str(tmp_path))["held"]
+    fleet.close()
+    rec = lease_status(str(tmp_path))
+    assert rec is not None and not rec["held"]
+    # an immediate successor needs no force and no TTL wait
+    standby = ShardedCheckpointWriter.attach(
+        str(tmp_path), tables, accs, EmbShardSpec(SIZES, 2))
+    standby.close()
+
+
+# ------------------------------------------------- remote-disk reconcile ---
+def _start_test_owned_server():
+    ready = threading.Event()
+    addr = {}
+
+    def ready_cb(h, p):
+        addr["hp"] = (h, p)
+        ready.set()
+
+    t = threading.Thread(target=shard_server.serve,
+                         args=("127.0.0.1", 0, ready_cb),
+                         name="cpr-test-shard-server", daemon=True)
+    t.start()
+    assert ready.wait(10.0), "shard server failed to bind"
+    return addr["hp"]
+
+
+def _gapped_coordinator_child(root, addrs):
+    tables, accs = make_state()
+    spec = EmbShardSpec(SIZES, 2)
+    fleet = ShardedCheckpointWriter(
+        tables, accs, spec, directory=root, backend="socket",
+        addresses=addrs, delta_saves=False, drain_timeout=30.0)
+    fleet.save_full([t + 1 for t in tables], [a + 1 for a in accs], step=1)
+    fleet.fence()                                  # cycle 1: the stamp
+    fleet.save_full([t + 2 for t in tables], [a + 2 for a in accs], step=2)
+    time.sleep(0.3)                                # unstamped gap work
+    os.kill(os.getpid(), signal.SIGKILL)
+
+
+@pytest.mark.crash
+def test_attach_rebuilds_unreadable_shard_from_writer_local_disk(
+        tmp_path, monkeypatch):
+    """Remote-disk reconcile: the standby cannot read shard 1's payload
+    files (remote disk), so instead of poisoning the shard it ships the
+    stamped replay plan over the transport and the writer rebuilds the
+    stamped image from its OWN local files."""
+    hp = _start_test_owned_server()
+    addrs = [hp, hp]
+    proc = multiprocessing.get_context("spawn").Process(
+        target=_gapped_coordinator_child, args=(str(tmp_path), addrs))
+    proc.start()
+    proc.join(timeout=120.0)
+    assert proc.exitcode == -signal.SIGKILL
+
+    real_load = sc._load_npz
+
+    def deny_shard_1(path, *a, **kw):
+        if "shard_1" in str(path):
+            raise OSError(f"remote disk unreadable: {path}")
+        return real_load(path, *a, **kw)
+
+    monkeypatch.setattr(sc, "_load_npz", deny_shard_1)
+    tables, accs = make_state()
+    fleet = ShardedCheckpointWriter.attach(
+        str(tmp_path), tables, accs, EmbShardSpec(SIZES, 2),
+        addresses=addrs, delta_saves=False)
+    rep = fleet.attach_report
+    assert rep["poisoned"] == []
+    assert rep["reconciled"][1] == "rebuilt"
+    # the rebuilt fleet serves exactly the last stamp, v1 — the v2 gap the
+    # dead coordinator left on the writers is discarded everywhere
+    lt, la, _ = fleet.restore_all()
+    for t in range(len(SIZES)):
+        np.testing.assert_array_equal(lt[t], tables[t] + 1)
+        np.testing.assert_array_equal(la[t], accs[t] + 1)
+    fleet.save_full([t + 7 for t in tables], [a + 7 for a in accs], step=7)
+    fleet.fence()
+    assert fleet.failed == {}
+    fleet.close()
+
+
+# ------------------------------------------------------ crash-mid-reshard --
+def _resharding_coordinator_child(root, kill_point):
+    tables, accs = make_state()
+    spec = EmbShardSpec(SIZES, 2)
+    fleet = ShardedCheckpointWriter(
+        tables, accs, spec, directory=root, backend="pipe",
+        delta_saves=False, drain_timeout=30.0)
+    fleet.save_full([t + 1 for t in tables], [a + 1 for a in accs], step=1)
+    fleet.fence()                       # cycle 1: the pre-reshard stamp
+
+    def die():
+        os.kill(os.getpid(), signal.SIGKILL)
+
+    if kill_point == "post-swap":
+        # die after the fleet swapped to the new layout, before any seed
+        orig = fleet.transport.resize_fleet
+
+        def swap_and_die(*a, **kw):
+            orig(*a, **kw)
+            die()
+        fleet.transport.resize_fleet = swap_and_die
+    else:                               # "pre-stamp"
+        # die with every seed full applied + acked on the new writers but
+        # the layout event + cycle never written: the widest window
+        orig_fence = fleet.fence
+        calls = {"n": 0}
+
+        def fence_and_die(strict=True):
+            calls["n"] += 1
+            if calls["n"] >= 2:         # resize's stamping fence
+                fleet._drain()
+                die()
+            return orig_fence(strict=strict)
+        fleet.fence = fence_and_die
+    fleet.resize(4, step=2)
+    os._exit(3)                         # never reached
+
+
+@pytest.mark.crash
+@pytest.mark.parametrize("kill_point", ["post-swap", "pre-stamp"])
+def test_elastic_sigkill_mid_reshard_lands_on_pre_reshard_stamp(
+        tmp_path, kill_point):
+    """Acceptance (crash leg): SIGKILL the coordinator inside the reshard
+    window — after the fleet swap, or after the seed fulls drained but
+    before the stamp.  ``load_latest`` must land exactly on the last
+    stamped PRE-reshard cycle under the old boundaries; the half-born
+    layout epoch must be invisible."""
+    proc = multiprocessing.get_context("spawn").Process(
+        target=_resharding_coordinator_child,
+        args=(str(tmp_path), kill_point))
+    proc.start()
+    proc.join(timeout=120.0)
+    if proc.is_alive():
+        proc.kill()
+        proc.join(timeout=10.0)
+        pytest.fail(f"reshard child hung at {kill_point}")
+    assert proc.exitcode == -signal.SIGKILL
+    tables, accs = make_state()
+    loaded = ShardedCheckpointWriter.load_latest(
+        str(tmp_path), tables, accs, EmbShardSpec(SIZES, 2))
+    assert loaded.spec.n_shards == 2
+    lt, la, _ = loaded.restore_all()
+    for t in range(len(SIZES)):
+        np.testing.assert_array_equal(lt[t], tables[t] + 1)
+        np.testing.assert_array_equal(la[t], accs[t] + 1)
+    # the chain's final stamped layout is still epoch 1 / 2 shards
+    run_dir = resolve_run_dir(str(tmp_path))
+    with open(os.path.join(run_dir, "manifest.json")) as f:
+        m = json.load(f)
+    assert not any(e["kind"] == "layout" for e in m["events"])
+
+
+# ---------------------------------------------------------------- property --
+def _drive_elastic_interleaving(root, seed, n_ops, backend="inproc"):
+    """One random save/fence/split/merge/kill interleaving; after the
+    final readmit + fence every shard's image, and cold recovery, must
+    exact-match the oracle state."""
+    state_t, state_a = make_state(seed=seed + 1)
+    state_t = [np.asarray(t) for t in state_t]
+    state_a = [np.asarray(a) for a in state_a]
+    spec = EmbShardSpec(SIZES, 2)
+    fleet = ShardedCheckpointWriter(
+        [t.copy() for t in state_t], [a.copy() for a in state_a], spec,
+        directory=str(root), backend=backend, delta_saves=True,
+        drain_timeout=30.0)
+    rng = np.random.default_rng(seed)
+    for k in range(n_ops):
+        op = rng.random()
+        if op < 0.12:                               # writer death
+            fleet.kill_shard(int(rng.integers(fleet.n_shards)))
+        elif op < 0.27:                             # cycle boundary
+            fleet.fence(strict=False)
+        elif op < 0.45:                             # split or merge
+            if fleet.failed:                        # operators readmit first
+                fleet.fence(strict=False)
+                fleet.readmit(state_t, state_a, step=k)
+                fleet.fence(strict=False)
+            if not fleet.failed:
+                fleet.resize(int(rng.integers(1, 5)), step=k)
+        elif op < 0.7:                              # full of new state
+            for t in range(len(SIZES)):
+                state_t[t] = state_t[t] + np.float32(rng.normal())
+                state_a[t] = state_a[t] + np.float32(abs(rng.normal()))
+            fleet.save_full(state_t, state_a, step=k)
+        else:                                       # partial new rows
+            t = int(rng.integers(len(SIZES)))
+            rows = rng.choice(SIZES[t],
+                              size=int(rng.integers(1, SIZES[t] + 1)),
+                              replace=False)
+            vals = rng.normal(size=(rows.size, DIM)).astype(np.float32)
+            avs = rng.random(rows.size).astype(np.float32)
+            state_t[t][rows] = vals
+            state_a[t][rows] = avs
+            fleet.save_rows(t, rows, vals, avs, step=k)
+    fleet.fence(strict=False)
+    fleet.readmit(state_t, state_a, step=n_ops)
+    fleet.fence(strict=False)
+    assert fleet.failed == {}
+    for t in range(len(SIZES)):
+        np.testing.assert_array_equal(fleet.image_tables[t], state_t[t])
+        np.testing.assert_array_equal(fleet.image_accs[t], state_a[t])
+    final_n = fleet.n_shards
+    fleet.close()
+    init_t, init_a = make_state(seed=seed + 1)
+    lt, la, _ = ShardedCheckpointWriter.load_latest(
+        str(root), init_t, init_a,
+        EmbShardSpec(SIZES, final_n)).restore_all()
+    for t in range(len(SIZES)):
+        np.testing.assert_array_equal(lt[t], state_t[t])
+        np.testing.assert_array_equal(la[t], state_a[t])
+
+
+def test_elastic_interleavings_fixed_seeds(tmp_path):
+    """Fixed-seed sweep of the elastic interleaving property, so the
+    contract is exercised even without hypothesis installed."""
+    for seed in (1, 2, 3):
+        _drive_elastic_interleaving(tmp_path / f"s{seed}", seed, n_ops=12)
+
+
+@settings(max_examples=5, deadline=None)
+@given(st.integers(0, 10_000), st.integers(4, 14))
+def test_elastic_interleavings_property(seed, n_ops):
+    """Hypothesis variant: random save/fence/split/merge/kill schedules
+    converge to the replay oracle (bounded example count: every resize is
+    a real fleet swap + reseed)."""
+    import tempfile
+    with tempfile.TemporaryDirectory() as tmp:
+        _drive_elastic_interleaving(tmp, seed, n_ops)
+
+
+@pytest.mark.crash
+def test_elastic_interleavings_with_real_sigkill(tmp_path):
+    """The same property over the pipe transport with REAL writer-process
+    SIGKILLs in the op mix (the crash-matrix ``elastic`` leg)."""
+    for seed in (4, 5):
+        root = tmp_path / f"s{seed}"
+        state_t, state_a = make_state(seed=seed + 1)
+        state_t = [np.asarray(t) for t in state_t]
+        state_a = [np.asarray(a) for a in state_a]
+        fleet = ShardedCheckpointWriter(
+            [t.copy() for t in state_t], [a.copy() for a in state_a],
+            EmbShardSpec(SIZES, 2), directory=str(root), backend="pipe",
+            delta_saves=False, drain_timeout=30.0)
+        rng = np.random.default_rng(seed)
+        for k in range(10):
+            op = rng.random()
+            if op < 0.15:
+                j = int(rng.integers(fleet.n_shards))
+                os.kill(fleet.procs[j].pid, signal.SIGKILL)
+            elif op < 0.3:
+                fleet.fence(strict=False)
+            elif op < 0.5:
+                # a SIGKILL is only *discovered* at a boundary: fence
+                # first, then readmit any latched deaths before resizing
+                fleet.fence(strict=False)
+                if fleet.failed:
+                    fleet.readmit(state_t, state_a, step=k)
+                    fleet.fence(strict=False)
+                if not fleet.failed:
+                    fleet.resize(int(rng.integers(1, 5)), step=k)
+            else:
+                for t in range(len(SIZES)):
+                    state_t[t] = state_t[t] + np.float32(rng.normal())
+                fleet.save_full(state_t, state_a, step=k)
+        fleet.fence(strict=False)
+        fleet.readmit(state_t, state_a, step=99)
+        fleet.fence(strict=False)
+        assert fleet.failed == {}
+        for t in range(len(SIZES)):
+            np.testing.assert_array_equal(fleet.image_tables[t], state_t[t])
+        fleet.close()
