@@ -1,0 +1,12 @@
+"""Static + runtime invariant analysis for the CPR writer fleet.
+
+``python -m repro.analysis`` runs the AST checkers (durability
+ordering, time sources, lock discipline, epoch threading, exception
+hygiene) over the ``repro`` package and exits non-zero on any
+unsuppressed finding.  ``repro.analysis.lockorder`` is the opt-in
+runtime lock-order sanitizer wired into the test suite via
+``CPR_LOCK_SANITIZER=1`` (tests/conftest.py).  See docs/analysis.md.
+"""
+from repro.analysis.core import (CHECKERS, Checker, Finding, Report,  # noqa: F401
+                                 Source, default_root, load_baseline,
+                                 register, run_analysis, write_baseline)

@@ -1,0 +1,67 @@
+"""CLI for the invariant linter: ``python -m repro.analysis``.
+
+Exit status 0 iff every finding is suppressed (``# lint: allow[...]``)
+or baselined; 1 otherwise.  ``--write-baseline`` grandfathers the
+current unsuppressed findings so the rule can land before the cleanup.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from repro.analysis import core
+from repro.analysis import rules as _rules  # noqa: F401  (registers checkers)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="CPR invariant linter (see docs/analysis.md)")
+    ap.add_argument("--rule", action="append", metavar="NAME",
+                    help="run only this rule (repeatable; default: all)")
+    ap.add_argument("--root", default=None,
+                    help="tree to scan (default: the repro package)")
+    ap.add_argument("--baseline", default=None, metavar="PATH",
+                    help="JSON findings baseline to subtract")
+    ap.add_argument("--write-baseline", default=None, metavar="PATH",
+                    help="write current unsuppressed findings as a "
+                         "baseline and exit 0")
+    ap.add_argument("--json", action="store_true", dest="as_json",
+                    help="machine-readable report on stdout")
+    ap.add_argument("--list-rules", action="store_true")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for name in sorted(core.CHECKERS):
+            print(f"{name}: {core.CHECKERS[name].description}")
+        return 0
+
+    try:
+        report = core.run_analysis(root=args.root, rules=args.rule,
+                                   baseline=args.baseline)
+    except ValueError as e:
+        print(f"error: {e}", file=sys.stderr)
+        return 2
+
+    if args.write_baseline:
+        core.write_baseline(report, args.write_baseline)
+        print(f"wrote {len(report.baseline_records())} baseline record(s) "
+              f"to {args.write_baseline}")
+        return 0
+
+    if args.as_json:
+        json.dump(report.to_json(), sys.stdout, indent=2)
+        print()
+    else:
+        for f in report.findings:
+            print(f.render())
+        bad = len(report.unsuppressed)
+        print(f"{report.files_scanned} file(s), "
+              f"{len(report.findings)} finding(s), "
+              f"{bad} unsuppressed")
+    return 0 if report.ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

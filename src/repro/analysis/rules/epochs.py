@@ -1,0 +1,140 @@
+"""epoch-threading rule: every frame carries the epoch; no protocol drift.
+
+The coordinator-epoch fence (docs/recovery.md) only works if *every*
+coordinator→worker frame carries the coordinator epoch where the worker
+expects it: command frames at index 1 (``WriterSession._handle`` reads
+``msg[1]``), ``spawn`` in its keyword slot.  A frame constructed without
+the epoch is invisible to the stale-coordinator guard — a superseded
+coordinator could keep writing through it after a takeover.
+
+Two checks, both over tuple-literal frames constructed inside classes
+whose name ends with ``Endpoint`` (the coordinator-side senders):
+
+* **epoch field** — every command frame's index-1 element (``spawn``:
+  any element) must reference an ``epoch`` attribute/name;
+* **protocol drift** — every constructed frame kind must be handled
+  somewhere outside the Endpoint classes (the worker dispatch:
+  ``WriterSession._handle``, ``shard_server``), and every kind a
+  ``*Session`` dispatch handles must still have a constructor.  Adding
+  a frame type on one side only is exactly the bug this catches.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterator, List, Sequence, Set, Tuple
+
+from repro.analysis.core import Checker, Finding, Source, names_in, register
+
+SEND_FUNCS = {"_send", "_send_raw", "send", "put", "put_nowait"}
+
+
+def _kind_of(tup: ast.Tuple):
+    if tup.elts and isinstance(tup.elts[0], ast.Constant) \
+            and isinstance(tup.elts[0].value, str):
+        return tup.elts[0].value
+    return None
+
+
+def _mentions_epoch(node: ast.AST) -> bool:
+    return any("epoch" in n for n in names_in(node))
+
+
+@register
+class EpochThreadingChecker(Checker):
+    name = "epoch-threading"
+    description = ("coordinator frames carry the epoch at index 1; frame "
+                   "kinds stay in sync with the worker dispatch tables")
+
+    def __init__(self):
+        # kind -> [(relpath, lineno, epoch_ok)]
+        self.sent: Dict[str, List[Tuple[str, int, bool]]] = {}
+        # kind -> [(relpath, lineno)], split by dispatch locality
+        self.handled: Set[str] = set()
+        self.session_handled: Dict[str, List[Tuple[str, int]]] = {}
+
+    def check(self, src: Source) -> Iterator[Finding]:
+        for node in ast.walk(src.tree):
+            if isinstance(node, ast.Call):
+                self._collect_send(src, node)
+            elif isinstance(node, ast.Compare):
+                self._collect_handled(src, node)
+        return iter(())
+
+    # -- frame constructors (coordinator side) --------------------------
+    def _collect_send(self, src: Source, call: ast.Call):
+        if not (isinstance(call.func, ast.Attribute)
+                and call.func.attr in SEND_FUNCS and call.args
+                and isinstance(call.args[0], ast.Tuple)):
+            return
+        cls = src.enclosing(call, ast.ClassDef)
+        if cls is None or not cls.name.endswith("Endpoint"):
+            return
+        tup = call.args[0]
+        kind = _kind_of(tup)
+        if kind is None:
+            return
+        if kind == "spawn":
+            epoch_ok = any(_mentions_epoch(e) for e in tup.elts)
+        else:
+            epoch_ok = len(tup.elts) >= 2 and _mentions_epoch(tup.elts[1])
+        self.sent.setdefault(kind, []).append(
+            (src.relpath, call.lineno, epoch_ok))
+
+    # -- dispatch tables (worker side) ----------------------------------
+    def _collect_handled(self, src: Source, cmp: ast.Compare):
+        left = cmp.comparators and cmp.left
+        is_kind_expr = (
+            (isinstance(left, ast.Name) and left.id in ("kind",))
+            or (isinstance(left, ast.Subscript)
+                and isinstance(left.slice, ast.Constant)
+                and left.slice.value == 0))
+        if not is_kind_expr or len(cmp.ops) != 1:
+            return
+        if not isinstance(cmp.ops[0], (ast.Eq, ast.In, ast.NotIn)):
+            return
+        rhs = cmp.comparators[0]
+        kinds: List[str] = []
+        if isinstance(rhs, ast.Constant) and isinstance(rhs.value, str):
+            kinds = [rhs.value]
+        elif isinstance(rhs, (ast.Tuple, ast.List, ast.Set)):
+            kinds = [e.value for e in rhs.elts
+                     if isinstance(e, ast.Constant)
+                     and isinstance(e.value, str)]
+        if not kinds:
+            return
+        cls = src.enclosing(cmp, ast.ClassDef)
+        if cls is not None and cls.name.endswith("Endpoint"):
+            return      # coordinator-side reply dispatch, not the workers
+        self.handled.update(kinds)
+        if cls is not None and "Session" in cls.name:
+            for k in kinds:
+                self.session_handled.setdefault(k, []).append(
+                    (src.relpath, cmp.lineno))
+
+    # -- cross-file reconciliation --------------------------------------
+    def finalize(self, sources: Sequence[Source]) -> Iterator[Finding]:
+        for kind, sites in sorted(self.sent.items()):
+            for relpath, lineno, epoch_ok in sites:
+                if not epoch_ok:
+                    yield Finding(
+                        rule=self.name, path=relpath, line=lineno,
+                        message=(f"frame {kind!r} constructed without the "
+                                 f"coordinator epoch at index 1: the "
+                                 f"stale-coordinator guard cannot fence "
+                                 f"this command"))
+                if kind not in self.handled:
+                    yield Finding(
+                        rule=self.name, path=relpath, line=lineno,
+                        message=(f"frame kind {kind!r} is constructed but "
+                                 f"no worker dispatch handles it: protocol "
+                                 f"drift between transport and "
+                                 f"shard_server"))
+        for kind, sites in sorted(self.session_handled.items()):
+            if kind in self.sent:
+                continue
+            for relpath, lineno in sites:
+                yield Finding(
+                    rule=self.name, path=relpath, line=lineno,
+                    message=(f"dispatch handles frame kind {kind!r} but no "
+                             f"endpoint constructs it: dead protocol arm "
+                             f"or a renamed frame left behind"))

@@ -286,6 +286,8 @@ class CPRManager:
         """Drain and stop the async writer thread (idempotent)."""
         try:
             self._join_resize()
+        # lint: allow[exception-hygiene] close() never raises; a resize
+        # error is already latched in shard_failures by _join_resize
         except Exception:
             pass                        # close never raises
         if self.writer is not None:

@@ -330,7 +330,7 @@ class SockChannel:
         self._sock = sock
         self._buf = bytearray()
         self._send_lock = threading.Lock()
-        self._broken = False            # partial frame possibly on the wire
+        self._broken = False        # guarded by: _send_lock
         sock.settimeout(None)           # blocking forever; see class doc
         try:
             sock.setsockopt(_socket.IPPROTO_TCP, _socket.TCP_NODELAY, 1)
@@ -792,11 +792,11 @@ class WriterSession:
                                  directory=directory, sliced=True,
                                  fsync_payloads=fsync_payloads)
         self.store.trainer_image = seed_tr
-        self.epoch = epoch
-        self.err: Optional[str] = None
-        self.watermark = 0
+        self.epoch = epoch              # guarded by: lock
+        self.err: Optional[str] = None  # guarded by: lock
+        self.watermark = 0              # guarded by: lock
         self.lock = threading.RLock()
-        self.gen = 0                    # bumped on adoption/replacement
+        self.gen = 0                    # guarded by: lock (adoption bump)
 
     # ------------------------------------------------------- takeover -----
     def claim(self, epoch: int) -> int:
@@ -875,7 +875,7 @@ class WriterSession:
             except (BrokenPipeError, OSError):
                 return "parked"         # coordinator gone mid-reply
 
-    def _handle(self, msg):
+    def _handle(self, msg):         # holds: lock
         """Execute one command under ``self.lock``; returns (reply, done).
         Stale-epoch commands are rejected before any effect."""
         kind = msg[0]
@@ -1275,7 +1275,7 @@ class RemoteEndpoint(ShardEndpoint):
         self.save_events = 0
         self._chan = None
         self._io_lock = threading.RLock()
-        self._last_activity = time.monotonic()
+        self._last_activity = time.monotonic()  # guarded by: _io_lock
 
     # ------------------------------------------------------ liveness ------
     def _alive(self) -> bool:
@@ -1287,7 +1287,7 @@ class RemoteEndpoint(ShardEndpoint):
                 f"shard {self.shard} writer {why}")
 
     # --------------------------------------------------------- pump -------
-    def _dispatch_reply(self, msg) -> str:
+    def _dispatch_reply(self, msg) -> str:  # holds: _io_lock
         """Fold one worker reply into parent-side state; returns its kind."""
         self._last_activity = time.monotonic()
         kind = msg[0]
@@ -1855,6 +1855,9 @@ class SocketEndpoint(RemoteEndpoint):
         answered = self._last_pong[0] >= self._ping_token
         if (not answered and self._ping_sent_at and
                 now - self._ping_sent_at > self.heartbeat_timeout and
+                # lint: allow[lock-discipline] deliberately lock-free read:
+                # worst case is one extra ping before latching, never a
+                # false latch (activity timestamps only move forward)
                 now - self._last_activity > self.heartbeat_timeout):
             # no pong AND no other reply either: the link (or worker) is
             # truly silent.  A worker busy inside one long apply keeps
@@ -2007,11 +2010,15 @@ class ShardTransport:
                 try:
                     ep.reshard(spec, seeds[j], shard_dirs[j])
                     ok = True
+                # lint: allow[exception-hygiene] recovery IS the handler:
+                # a failed in-place reshard falls through to a fresh spawn
                 except Exception:
                     pass                # fall through to a fresh spawn
             if not ok:
                 try:
                     ep.close()
+                # lint: allow[exception-hygiene] closing a writer we are
+                # about to replace; its successor spawn is the recovery
                 except Exception:
                     pass
                 ep = self._spawn_endpoint(
@@ -2025,6 +2032,8 @@ class ShardTransport:
         for ep in old[new_n:]:          # shrink: retire surplus donors
             try:
                 ep.close()
+            # lint: allow[exception-hygiene] retiring surplus donors after
+            # their rows were exported; nothing left to surface
             except Exception:
                 pass
         self.endpoints = eps

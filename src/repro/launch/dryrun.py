@@ -127,9 +127,18 @@ def _dp_size(mesh):
     return sizes.get("data", 1) * sizes.get("pod", 1)
 
 
+def _cost_dict(compiled) -> dict:
+    # cost_analysis() returns a per-computation list of dicts on older
+    # jax releases and a flat dict on newer ones
+    ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return dict(ca)
+
+
 def run_pair(arch: str, shape_name: str, multi_pod: bool, probes: bool,
              out_dir: str):
-    t0 = time.time()
+    t0 = time.monotonic()               # duration timer, not a timestamp
     runs, variant, reason = applicable(arch, shape_name)
     mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
     rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
@@ -167,7 +176,7 @@ def run_pair(arch: str, shape_name: str, multi_pod: bool, probes: bool,
                  getattr(mem, "generated_code_size_in_bytes", 0))
     rec.update({
         "status": "ok",
-        "compile_s": round(time.time() - t0, 1),
+        "compile_s": round(time.monotonic() - t0, 1),
         "memory": {
             "argument_bytes": getattr(mem, "argument_size_in_bytes", 0),
             "output_bytes": getattr(mem, "output_size_in_bytes", 0),
@@ -176,8 +185,7 @@ def run_pair(arch: str, shape_name: str, multi_pod: bool, probes: bool,
             "fits_16GiB": bool(mem_bytes <= CHIP_HBM_BYTES),
         },
         "collectives_full_hlo": coll_full,   # scan body counted once
-        "cost_analysis_raw": {k: v for k, v in
-                              (compiled.cost_analysis() or {}).items()
+        "cost_analysis_raw": {k: v for k, v in _cost_dict(compiled).items()
                               if k in ("flops", "bytes accessed")},
     })
 
@@ -187,11 +195,11 @@ def run_pair(arch: str, shape_name: str, multi_pod: bool, probes: bool,
         n_reps = cfg.num_layers // P_len
         rem = cfg.num_layers - n_reps * P_len
         l1, c1 = lower_one(probe_cfg(cfg, 1), shape_name, mesh, probe=True)
-        ca1 = c1.cost_analysis() or {}
+        ca1 = _cost_dict(c1)
         cl1 = R.collective_bytes(c1.as_text())
         if n_reps >= 2 or rem:
             l2, c2 = lower_one(probe_cfg(cfg, 2), shape_name, mesh, probe=True)
-            ca2 = c2.cost_analysis() or {}
+            ca2 = _cost_dict(c2)
             cl2 = R.collective_bytes(c2.as_text())
         else:
             ca2, cl2 = ca1, cl1
@@ -199,7 +207,7 @@ def run_pair(arch: str, shape_name: str, multi_pod: bool, probes: bool,
                               R.analytic_model_flops(cfg, shp))
         rec["roofline"] = terms.as_dict()
         rec["probe_cost"] = {"p1": ca1, "p2": ca2, "coll1": cl1, "coll2": cl2}
-    rec["wall_s"] = round(time.time() - t0, 1)
+    rec["wall_s"] = round(time.monotonic() - t0, 1)
     return rec
 
 

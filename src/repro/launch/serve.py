@@ -39,7 +39,7 @@ def serve(cfg, requests, batch=8, gen=32, greedy=True, seed=0):
     completions = {}
     queue = list(enumerate(requests))
     stats = {"tokens": 0, "steps": 0, "refills": 0}
-    t0 = time.time()
+    t0 = time.monotonic()           # duration timer, not a timestamp
     while queue:
         # ---- pack up to `batch` requests ----
         active = queue[:batch]
@@ -69,7 +69,7 @@ def serve(cfg, requests, batch=8, gen=32, greedy=True, seed=0):
                     stats["tokens"] += 1
         for b, (rid, _) in enumerate(active):
             completions[rid] = out[b][:gen]
-    stats["wall_s"] = time.time() - t0
+    stats["wall_s"] = time.monotonic() - t0
     stats["tok_per_s"] = stats["tokens"] / max(stats["wall_s"], 1e-9)
     return completions, stats
 

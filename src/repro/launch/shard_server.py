@@ -64,7 +64,7 @@ class SessionRegistry:
 
     def __init__(self):
         self.lock = threading.Lock()
-        self.sessions: Dict[int, WriterSession] = {}
+        self.sessions: Dict[int, WriterSession] = {}  # guarded by: lock
 
     def spawn(self, shard: int, session: WriterSession,
               epoch: int) -> Optional[WriterSession]:

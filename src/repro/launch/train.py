@@ -123,17 +123,17 @@ def train(cfg, steps=200, batch=8, seq=128, lr=0.005, mode="cpr-mfu",
 
     history = {"loss": [], "events": []}
     t_sim = 0.0
-    t0 = time.time()
+    t0 = time.monotonic()           # duration timer, not a timestamp
     for i, b in enumerate(ds.batches(batch, seq, loop=True)):
         if i >= steps:
             break
         params, ostate, tracker, loss = step_fn(params, ostate, tracker, b)
         mgr.samples_seen += batch
         if i == 0:      # step 0 is jit compile; time the steady-state rate
-            t_steady = time.time()
+            t_steady = time.monotonic()
             blocked0 = mgr.ledger.save_blocked_s
         else:           # exclude time already blocked inside save events
-            train_wall = (time.time() - t_steady) - \
+            train_wall = (time.monotonic() - t_steady) - \
                 (mgr.ledger.save_blocked_s - blocked0)
             mgr.wall_time_scale = i / max(train_wall, 1e-9)
         t_prev, t_sim = t_sim, t_sim + 1.0
@@ -164,7 +164,8 @@ def train(cfg, steps=200, batch=8, seq=128, lr=0.005, mode="cpr-mfu",
         if i % log_every == 0 or i == steps - 1:
             history["loss"].append((i, float(loss)))
             print(f"step {i:5d} loss {float(loss):.4f} "
-                  f"({(time.time() - t0) / (i + 1):.2f}s/step)", flush=True)
+                  f"({(time.monotonic() - t0) / (i + 1):.2f}s/step)",
+                  flush=True)
     mgr.fence()   # drain in-flight async saves before reporting
     history["report"] = mgr.report()
     mgr.close()

@@ -1,0 +1,41 @@
+"""Shared test fixtures: opt-in runtime lock-order sanitizer.
+
+With ``CPR_LOCK_SANITIZER=1`` every ``threading.Lock``/``RLock``
+constructed from repro source is wrapped by
+``repro.analysis.lockorder.LockOrderSanitizer``; the acquisition-order
+graph accumulates across the whole session and every test asserts it is
+still acyclic, so the crash/failover/reshard suites double as deadlock
+detectors (one crash-injection CI leg runs with this enabled).
+
+The patch happens at conftest import time, before any test module
+constructs a writer fleet.
+"""
+import os
+
+import pytest
+
+_SANITIZER = None
+if os.environ.get("CPR_LOCK_SANITIZER"):
+    from repro.analysis.lockorder import LockOrderSanitizer
+    _SANITIZER = LockOrderSanitizer()
+    _SANITIZER.install()
+
+
+@pytest.fixture(autouse=True)
+def _lock_order_acyclic():
+    """Fail the first test whose workload completes an acquisition-order
+    cycle (the graph is cumulative, so the last test covers the suite)."""
+    yield
+    if _SANITIZER is not None:
+        _SANITIZER.assert_acyclic()
+
+
+def pytest_terminal_summary(terminalreporter):
+    if _SANITIZER is not None:
+        edges = _SANITIZER.edges()
+        sites = {s for edge in edges for s in edge}
+        terminalreporter.write_line(
+            f"lock-order sanitizer: {len(sites)} lock site(s), "
+            f"{len(edges)} ordered edge(s), "
+            f"{_SANITIZER.tracked_constructions} tracked construction(s); "
+            f"acquisition graph acyclic")
