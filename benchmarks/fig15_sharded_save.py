@@ -140,6 +140,54 @@ def _bench_readmit(sizes, d, n_shards, directory):
     return readmit_ms, ok
 
 
+def _bench_bytes_lost(sizes, d, n_shards, directory, parity_group_size):
+    """How many bytes of trained state a shard-writer crash costs.
+
+    Stamp a full cycle, drift every row (saved but NOT stamped — the
+    drain is a ``quiesce``, deliberately no fence), SIGKILL one writer,
+    then restore its shard.  Under stamped-replay the shard rolls back
+    to the stamp, so every drifted byte in its range is lost; under
+    parity-reconstruct (``parity_group_size > 0``) the image is rebuilt
+    from surviving peers' data+parity, so the loss is zero.  Returns
+    ``(bytes_lost, image_matches_oracle, reconstructions)`` where the
+    oracle is the trainer's current (post-drift) state."""
+    tables, accs = _state(sizes, d)
+    spec = EmbShardSpec(sizes, n_shards)
+    writer = ShardedCheckpointWriter(
+        [t.copy() for t in tables], [a.copy() for a in accs], spec,
+        directory=directory, backend="pipe", delta_saves=True,
+        parity_group_size=parity_group_size)
+    writer.save_full(tables, accs, step=0)
+    writer.fence()                          # stamp T0
+    rng = np.random.default_rng(7)
+    for t, n in enumerate(sizes):           # post-stamp drift, all shards
+        rows = np.arange(n)
+        tables[t] = tables[t] + rng.normal(size=tables[t].shape) \
+            .astype(np.float32)
+        accs[t] = accs[t] + 1.0
+        writer.save_rows(t, rows, tables[t], accs[t], step=1)
+    writer.quiesce()     # applied everywhere, stamped nowhere
+    victim = n_shards - 1                   # never a parity holder here
+    writer.kill_shard(victim)
+    rt = [t.copy() for t in tables]
+    ra = [a.copy() for a in accs]
+    rt, ra = writer.restore_shards(rt, ra, [victim])
+    lost = 0
+    exact = True
+    for t in range(len(sizes)):
+        lo, hi = writer.ranges[victim][t]
+        if hi <= lo:
+            continue
+        lost += int(np.count_nonzero(rt[t][lo:hi] != tables[t][lo:hi])) * 4
+        lost += int(np.count_nonzero(ra[t][lo:hi] != accs[t][lo:hi])) * 4
+        exact = exact and \
+            np.array_equal(rt[t][lo:hi], tables[t][lo:hi]) and \
+            np.array_equal(ra[t][lo:hi], accs[t][lo:hi])
+    recon = writer.parity_reconstructions
+    writer.close()
+    return lost, exact, recon
+
+
 def _bench_delta(sizes, d, n_shards, r, changed_frac):
     tables, accs = _state(sizes, d)
     spec = EmbShardSpec(sizes, n_shards)
@@ -162,7 +210,7 @@ def _bench_delta(sizes, d, n_shards, r, changed_frac):
 
 
 def run(max_rows=20_000, n_shards=(1, 2, 4, 8), events=4, r=0.125,
-        changed_frac=0.1):
+        changed_frac=0.1, lost_shards=None):
     cfg = scaled(DLRM_KAGGLE, max_rows=max_rows)
     sizes, d = cfg.table_sizes, cfg.emb_dim
     total = sum(sizes)
@@ -229,6 +277,30 @@ def run(max_rows=20_000, n_shards=(1, 2, 4, 8), events=4, r=0.125,
             "backend": "disk", "n_shards": n, "total_rows": total,
             "socket_crit_ms": round(sock_ms, 3),
             "image_matches_sync": bool(ok),
+        })
+
+    # bytes lost to a writer crash: stamped-replay rolls the shard back
+    # to its last stamped cycle (the paper's accepted loss); XOR parity
+    # across peer writers (ECRM) reconstructs the CURRENT image from
+    # survivors — the acceptance bar is parity strictly below stamped at
+    # every N_emb, with the reconstructed shard byte-identical to the
+    # surviving-peer oracle
+    for n in (n_shards if lost_shards is None else lost_shards):
+        if n < 2:
+            continue                 # parity needs at least one peer
+        with tempfile.TemporaryDirectory() as tmp:
+            stamped_lost, _, _ = _bench_bytes_lost(
+                sizes, d, n, tmp + "/stamped", parity_group_size=0)
+            parity_lost, exact, recon = _bench_bytes_lost(
+                sizes, d, n, tmp + "/parity", parity_group_size=2)
+        rows.append({
+            "figure": "fig15", "kind": "bytes_lost_at_crash",
+            "n_shards": n, "total_rows": total,
+            "stamped_replay_lost_bytes": stamped_lost,
+            "parity_reconstruct_lost_bytes": parity_lost,
+            "parity_strictly_below": bool(parity_lost < stamped_lost),
+            "parity_image_matches_oracle": bool(exact),
+            "parity_reconstructions": recon,
         })
 
     # re-admission cost at the largest fleet size benchmarked

@@ -37,7 +37,10 @@ FAST_OVERRIDES = {
     "fig10": {"n_failures": (2, 20)},
     "fig14": {"max_rows": (20_000,), "events": 3,
               "select_sizes": (50_000,)},
-    "fig15": {"max_rows": 8_000, "n_shards": (1, 2, 4), "events": 3},
+    # lost_shards keeps the bytes_lost_at_crash parity-vs-stamped audit
+    # (kill a writer, reconstruct from peers) in the benchmark smoke job
+    "fig15": {"max_rows": 8_000, "n_shards": (1, 2, 4), "events": 3,
+              "lost_shards": (2, 4)},
     "fig16": {"max_rows": 6_000, "n_ops": 3},
 }
 

@@ -84,6 +84,7 @@ class CPRManager:
                  readmit_backoff: float = 0.0,
                  lease_ttl: Optional[float] = None,
                  transport_options: Optional[dict] = None,
+                 parity_group_size: int = 0,
                  attach: bool = False):
         assert mode in ALL_MODES, mode
         assert tracker_backend in ("host", "pallas"), tracker_backend
@@ -129,6 +130,14 @@ class CPRManager:
         self._resize_box = None
         self._resize_ctx = None
         self.transport_options = transport_options
+        # parity_group_size > 0 turns on the XOR erasure-coding layer
+        # (ECRM): writers carry running parity of their peers' updates so
+        # a poisoned shard's *current* image is reconstructed from
+        # survivors instead of replayed from its last stamp.  Under
+        # cpr-mfu the manager retunes groups once tracker stats identify
+        # the hot shards (smaller groups -> stronger protection).
+        self.parity_group_size = int(parity_group_size)
+        self._parity_tuned = False
         self.attach = attach
         self.sharded_save = sharded_save or self.writer_procs or attach
         # a remote-backed fleet is asynchronous by construction (saves
@@ -227,7 +236,8 @@ class CPRManager:
                 heartbeat_interval=self.heartbeat_interval,
                 readmit_backoff=self.readmit_backoff,
                 lease_ttl=self.lease_ttl,
-                transport_options=self.transport_options)
+                transport_options=self.transport_options,
+                parity_group_size=self.parity_group_size)
             self.store = None
             if self.attach and self.directory:
                 try:
@@ -418,6 +428,7 @@ class CPRManager:
                                   self.p.N_emb)
                     self.history.append({"t": t_event, "event": "readmit",
                                          "shards": readmitted})
+            self._maybe_tune_parity(tracker_state, t_event)
         # bandwidth-proportional modeled save cost (incl. reseed fulls)
         frac = nbytes / max(self._total_bytes, 1)
         self.ledger.save += self.p.O_save * frac
@@ -430,6 +441,41 @@ class CPRManager:
         self.history.append({"t": t_event, "event": "save",
                              "boundary": bool(is_boundary)})
         return tracker_state
+
+    def _maybe_tune_parity(self, tracker_state, t_event):
+        """One-shot MFU→parity policy pass (ROADMAP item 1 stretch).
+
+        Once the cpr-mfu tracker counters have observed real traffic,
+        rank shards by the hot-row mass that lands in their row ranges
+        and hand the hottest ones to ``configure_parity`` — the store
+        carves them into half-size (stronger) parity groups.  Runs at
+        most once per manager; a fleet resize drops the hot tuning and
+        the next boundary with live counters re-applies it.
+        """
+        if (self.mode != "cpr-mfu" or not tracker_state
+                or not (self.sharded_save and self.store is not None)
+                or not getattr(self.store, "parity_enabled", False)):
+            return
+        if self._parity_tuned:
+            return
+        mass = np.zeros(self.p.N_emb)
+        seen = False
+        for t, counts in tracker_state.items():
+            n = self.table_sizes[t]
+            c = np.asarray(counts, dtype=np.float64).ravel()[:n]
+            if c.size != n or not c.any():
+                continue            # pallas padding mismatch / no traffic
+            seen = True
+            shards = self.spec.shard_of_rows(t, np.arange(n))
+            np.add.at(mass, shards, c)
+        if not seen:
+            return                  # counters still cold: retry next boundary
+        hot = [int(j) for j in np.nonzero(mass > mass.mean())[0]]
+        if 0 < len(hot) < self.p.N_emb:
+            info = self.store.configure_parity(hot_shards=hot)
+            self.history.append({"t": t_event, "event": "parity-tune",
+                                 "hot_shards": hot, **info})
+        self._parity_tuned = True
 
     # ----------------------------------------------------------- resize ----
     def resize(self, n_shards: int, t_event: Optional[float] = None,
@@ -537,6 +583,9 @@ class CPRManager:
         self.pls_by_shard = new_pls
         self.last_cycle_time = np.full(n_new, t_now)
         self.samples_at_cycle = np.full(n_new, float(self.samples_seen))
+        # a resize rebuilt the parity groups without the hot-shard tuning
+        # (row ranges moved); let the next boundary's policy pass re-rank
+        self._parity_tuned = False
 
     # --------------------------------------------------------- failures ----
     def on_failure(self, event, tables, accs):
@@ -618,6 +667,8 @@ class CPRManager:
             out["poisoned_shards"] = sorted(self.store.failed)
             out["shard_readmissions"] = self.store.shard_readmissions
             out["coordinator_epoch"] = self.store.epoch
+            if getattr(self.store, "parity_enabled", False):
+                out["parity"] = self.store.parity_report
             out["layout_epoch"] = self.store.layout_epoch
             if self.store.reshard_history:
                 out["reshard_history"] = list(self.store.reshard_history)

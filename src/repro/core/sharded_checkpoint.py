@@ -94,7 +94,7 @@ from repro.core.checkpoint import (EmbShardSpec, _leaves, _new_run_dir,
 from repro.core.transport import (DRAIN_TIMEOUT_S, TRANSPORT_ALIASES,
                                   TRANSPORTS, _ShardStore,
                                   fsync_path, make_transport,
-                                  normalize_transport)
+                                  normalize_transport, xor_arrays, xor_into)
 
 LAYOUT = "sharded-v1"
 
@@ -173,17 +173,38 @@ class LeaseHeldError(RuntimeError):
     of discovering the loss after a full takeover."""
 
 
-def lease_status(root_dir: str) -> Optional[dict]:
-    """The ``LEASE`` record with a computed ``held`` flag (``expires`` is
-    still in the future), or None when the directory has no (readable)
-    lease — lease election is opt-in via ``lease_ttl=``."""
+# Default cross-host clock-skew slack for lease reads, in seconds.  The
+# LEASE record's ``expires`` is a *wall-clock* timestamp written by the
+# leader and compared against the reader's own wall clock — the only
+# cross-host wall-clock comparison in the system.  The contract: every
+# host that may read or write the lease keeps its clock NTP-synced to
+# within this slack.  A standby whose clock runs AHEAD of the leader's
+# would otherwise see a live lease as expired and split-brain; erring on
+# the side of "still held" costs only takeover latency, never safety.
+LEASE_CLOCK_SKEW_S = 2.0
+
+
+def lease_status(root_dir: str,
+                 skew_slack: float = LEASE_CLOCK_SKEW_S) -> Optional[dict]:
+    """The ``LEASE`` record with a computed ``held`` flag, or None when
+    the directory has no (readable) lease — lease election is opt-in via
+    ``lease_ttl=``.
+
+    ``held`` treats the lease as live until ``expires + skew_slack``
+    (local wall clock): cross-host clock skew up to ``skew_slack`` can
+    never make a standby steal a lease its leader still holds.  The
+    symmetric error — a dead leader's lease lingering ``skew_slack``
+    longer — only delays takeover, which is the safe direction."""
     path = os.path.join(root_dir, LEASE_PTR)
     try:
         with open(path) as f:
             rec = json.load(f)
     except (OSError, ValueError):
         return None
-    rec["held"] = float(rec.get("expires", 0)) > time.time()
+    # lint: allow[time-source] the lease contract is explicitly wall-clock
+    # (cross-host comparison against the leader's persisted ``expires``);
+    # monotonic time has no cross-host meaning here
+    rec["held"] = float(rec.get("expires", 0)) + float(skew_slack) > time.time()
     return rec
 
 
@@ -483,6 +504,8 @@ class ShardedCheckpointWriter:
                  readmit_backoff_max: float = 60.0,
                  lease_ttl: Optional[float] = None,
                  transport_options: Optional[dict] = None,
+                 parity_group_size: int = 0,
+                 parity_hot_shards: Sequence[int] = (),
                  _takeover: Optional[dict] = None):
         assert backend in BACKENDS, backend
         self.spec = spec
@@ -530,6 +553,11 @@ class ShardedCheckpointWriter:
         # fence: merged into the drained worker events and committed in
         # the SAME atomic manifest write as their cycle record
         self._pending_manifest_events: List[dict] = []
+        # worker events drained by quiesce() (a drain without a stamp):
+        # collect_applied pops the workers' ack lists, so these MUST be
+        # merged into the next fence's manifest write or the acked saves
+        # would silently vanish from the stamped history
+        self._pending_drained: List[dict] = []
 
         # ---- readmission back-off (crash-loop throttle) ----
         self.readmit_backoff = readmit_backoff        # base secs; 0 = off
@@ -780,6 +808,9 @@ class ShardedCheckpointWriter:
             self._persist_coordinator_state()
             self._renew_lease()
 
+        # ---- XOR parity redundancy (ECRM-style reconstruction) ----
+        self._init_parity(parity_group_size, parity_hot_shards)
+
         # ---- heartbeat monitor (proactive dead-writer detection) ----
         self.heartbeat_interval = heartbeat_interval
         self._hb_stop = threading.Event()
@@ -858,6 +889,13 @@ class ShardedCheckpointWriter:
                     self._img_cache[j] = got
                 return got
             self.failed[j] = ep.error
+        # parity reconstruction beats stamped-replay: the peers' data +
+        # parity give the shard's CURRENT image (zero rollback); any
+        # unmet precondition falls through to the stamped chain
+        rec = self.reconstruct_shard(j)
+        if rec is not None:
+            self._img_cache[j] = rec
+            return rec
         if self.root_dir is not None:
             disk = self._replay_shard_from_disk(j)
             if disk is not None:
@@ -924,6 +962,316 @@ class ShardedCheckpointWriter:
             accs.append(acc)
         return tabs, accs
 
+    # ---------------------------------------------- XOR parity (ECRM) ------
+    # The redundancy layer behind the ``reconstruct`` readmit path: shards
+    # are partitioned into parity groups; each group's XOR stripe (per
+    # table, stripe row i = bytewise XOR of every member's local row i)
+    # lives on the group's HOLDER writer — the first shard of the next
+    # group, i.e. outside the group whenever there are >= 2 groups — as
+    # soft in-memory state shipped over ``parity`` frames.  The
+    # coordinator keeps a host-side MIRROR of every shard's last-accepted
+    # image so row saves can be turned into XOR deltas (old ^ new) without
+    # a writer round-trip; recovery itself deliberately reads ONLY the
+    # surviving peers' data + parity (never the mirror), so the exercised
+    # path matches a deployment where the delta is computed trainer-side.
+    # A group whose holder missed an update is STALE: reconstruction is
+    # refused (stamped-replay fallback) until the stripe is reseeded from
+    # the mirror at the next readmit / save_full / configure_parity.
+
+    def _init_parity(self, group_size: int, hot_shards: Sequence[int] = ()):
+        self.parity_group_size = int(group_size or 0)
+        self.parity_enabled = (self.parity_group_size > 0 and
+                               self.n_shards >= 2)
+        self.parity_reconstructions = 0
+        self.parity_fallbacks = 0
+        self._parity_groups: List[List[int]] = []
+        self._parity_holder: Dict[int, int] = {}
+        self._parity_group_of: Dict[int, int] = {}
+        self._parity_stale: set = set()
+        self._parity_mirror = None
+        self._parity_hot: List[int] = []
+        if not self.parity_enabled:
+            return
+        # at construction the writers are seeded with exactly _img_cache
+        # (init slices, or the stamped/replayed seeds on takeover)
+        self._parity_mirror = self._mirror_from_images(self._img_cache)
+        self._build_parity_groups(self.parity_group_size, hot_shards)
+        self._reseed_parity(range(len(self._parity_groups)))
+        if self.run_dir is not None:
+            self._pending_manifest_events.append(self._parity_layout_event())
+
+    @staticmethod
+    def _mirror_from_images(images):
+        return [([np.array(np.asarray(t)) for t in img[0]],
+                 [np.array(np.asarray(a)) for a in img[1]])
+                for img in images]
+
+    def _build_parity_groups(self, group_size: int,
+                             hot_shards: Sequence[int] = ()):
+        """Partition the fleet into parity groups.  ``hot_shards`` (MFU
+        tracker-ranked) get smaller, stronger groups — ``group_size // 2``
+        members, so each hot stripe amortizes a failure over fewer peers;
+        every group's holder is the first member of the NEXT group, which
+        sits outside the group whenever there are >= 2 groups (a holder
+        inside its own group still reconstructs any OTHER member)."""
+        gs = max(1, min(int(group_size), self.n_shards))
+        hot = [j for j in sorted({int(h) for h in hot_shards})
+               if 0 <= j < self.n_shards]
+        cold = [j for j in range(self.n_shards) if j not in set(hot)]
+        hs = max(1, gs // 2)
+        groups: List[List[int]] = []
+        for pool, size in ((hot, hs), (cold, gs)):
+            for i in range(0, len(pool), size):
+                groups.append(pool[i:i + size])
+        self._parity_groups = groups
+        self._parity_group_of = {j: g for g, mem in enumerate(groups)
+                                 for j in mem}
+        self._parity_holder = {
+            g: (groups[(g + 1) % len(groups)][0] if len(groups) > 1
+                else groups[g][0])
+            for g in range(len(groups))}
+        self._parity_hot = hot
+        self._parity_stale = set(range(len(groups)))    # until reseeded
+
+    def _parity_layout_event(self) -> dict:
+        """Coordinator-born manifest event recording the group layout —
+        committed with the next cycle stamp so recovery tooling can see
+        which shards protected which (replay skips unknown kinds)."""
+        return {"kind": "parity-layout", "seq": self._next_seq(),
+                "group_size": self.parity_group_size,
+                "groups": [list(m) for m in self._parity_groups],
+                "holders": {str(g): int(h)
+                            for g, h in self._parity_holder.items()},
+                "hot_shards": list(self._parity_hot)}
+
+    def _compute_stripe(self, g: int):
+        """The group's XOR stripe from the coordinator mirror: per table,
+        stripe length = the widest member slice; members with fewer (or
+        zero) rows contribute implicit zeros — identity parity, so empty
+        shard slices never widen or crash the stripe."""
+        members = self._parity_groups[g]
+        tabs, accs = [], []
+        for t in range(len(self.spec.table_sizes)):
+            rows = max(self.ranges[j][t][1] - self.ranges[j][t][0]
+                       for j in members)
+            ref_t = self._parity_mirror[members[0]][0][t]
+            ref_a = self._parity_mirror[members[0]][1][t]
+            st = np.zeros((rows,) + ref_t.shape[1:], ref_t.dtype)
+            sa = np.zeros((rows,) + ref_a.shape[1:], ref_a.dtype)
+            for j in members:
+                mt = self._parity_mirror[j][0][t]
+                ma = self._parity_mirror[j][1][t]
+                if len(mt):
+                    xor_into(st[:len(mt)], mt)
+                    xor_into(sa[:len(ma)], ma)
+            tabs.append(st)
+            accs.append(sa)
+        return tabs, accs
+
+    def _dispatch_parity(self, holder: int, op: str, payload) -> bool:
+        """Route one parity frame to the holder unless it is — or just
+        became — poisoned (same fail-stop isolation as ``_dispatch``)."""
+        if not self._healthy(holder):
+            return False
+        ep = self.endpoints[holder]
+        try:
+            if op == "full":
+                ep.submit_parity_full(*payload)
+            else:
+                ep.submit_parity_delta(*payload)
+            return True
+        except RuntimeError as e:
+            self.failed[holder] = ep.error or e
+            return False
+
+    def _reseed_parity(self, groups):
+        """(Re)ship the XOR stripes of ``groups`` — recomputed from the
+        mirror — to their holders.  A group whose holder cannot accept the
+        stripe stays/becomes stale (reconstruction refused) until a later
+        reseed succeeds."""
+        if not self.parity_enabled:
+            return
+        for g in sorted(set(groups)):
+            holder = self._parity_holder[g]
+            tabs, accs = self._compute_stripe(g)
+            seq = self._next_seq()
+            if self._dispatch_parity(holder, "full",
+                                     (g, tabs, accs, 0, seq)):
+                self._parity_stale.discard(g)
+            else:
+                self._parity_stale.add(g)
+
+    def _parity_note_full(self, ok_shards):
+        """``save_full`` parity leg (after the mirror advanced for the
+        accepted shards): recut + reship every affected stripe — full
+        saves already ship full snapshots fleet-wide, so the stripe
+        reship is proportional traffic.  Stale groups self-heal here."""
+        if not self.parity_enabled:
+            return
+        groups = set(self._parity_stale)
+        for j in ok_shards:
+            g = self._parity_group_of.get(j)
+            if g is not None:
+                groups.add(g)
+        self._reseed_parity(groups)
+
+    def _parity_row_update(self, j: int, table: int, rows, values,
+                           acc_values, step: int, seq: int):
+        """``save_rows`` parity leg for one accepted owner: advance the
+        mirror and ship the XOR delta (old-bytes ^ new-bytes, stripe-local
+        row ids) to the owner's group holder.  The mirror advances even
+        for stale groups — it tracks what the member writer accepted, and
+        the stripe is recut from it at the next reseed."""
+        g = self._parity_group_of.get(j)
+        if g is None:
+            return
+        lo, _ = self.ranges[j][table]
+        local = np.asarray(rows) - lo
+        mt = self._parity_mirror[j][0][table]
+        ma = self._parity_mirror[j][1][table]
+        xvals = xor_arrays(mt[local], np.asarray(values, mt.dtype))
+        xaccs = xor_arrays(ma[local], np.asarray(acc_values, ma.dtype))
+        mt[local] = values
+        ma[local] = acc_values
+        if g in self._parity_stale:
+            return
+        holder = self._parity_holder[g]
+        if not self._dispatch_parity(
+                holder, "delta", (g, table, local, xvals, xaccs, step, seq)):
+            self._parity_stale.add(g)
+
+    def configure_parity(self, group_size: Optional[int] = None,
+                         hot_shards: Sequence[int] = ()) -> dict:
+        """(Re)shape the parity layout at runtime — the policy hook the
+        manager's MFU mode drives: tracker-hot shards get smaller,
+        stronger groups.  Rebuilds the groups, reseeds every stripe from
+        the mirror, and stamps a ``parity-layout`` manifest event with
+        the next cycle.  Returns a layout summary dict."""
+        if group_size is not None:
+            self.parity_group_size = int(group_size)
+            self.parity_enabled = (self.parity_group_size > 0 and
+                                   self.n_shards >= 2)
+        if not self.parity_enabled:
+            self._parity_groups = []
+            self._parity_holder = {}
+            self._parity_group_of = {}
+            self._parity_stale = set()
+            return {"enabled": False}
+        if self._parity_mirror is None:
+            self._parity_mirror = self._mirror_from_images(
+                [self._shard_images(j) for j in range(self.n_shards)])
+        self._build_parity_groups(self.parity_group_size, hot_shards)
+        self._reseed_parity(range(len(self._parity_groups)))
+        if self.run_dir is not None:
+            self._pending_manifest_events.append(self._parity_layout_event())
+        return {"enabled": True,
+                "groups": [list(m) for m in self._parity_groups],
+                "holders": dict(self._parity_holder),
+                "hot_shards": list(self._parity_hot),
+                "stale": sorted(self._parity_stale)}
+
+    def reconstruct_shard(self, j: int):
+        """ECRM recovery: rebuild poisoned shard ``j``'s CURRENT image
+        from its parity group's surviving peers — the holder's stripe XOR
+        every surviving member's image — instead of replaying the last
+        stamped cycle.  The result reflects every update the coordinator
+        successfully submitted before the crash, including applied-but-
+        unstamped work the stamped-replay path would lose.
+
+        Reconstruction state machine (see docs/recovery.md): any failed
+        precondition returns None and the caller falls back to
+        stamped-replay (counted in ``parity_fallbacks``) —
+
+        * parity on, ``j`` in a group, and the group's stripe not stale;
+        * the stripe survives: the holder is healthy and is not ``j``
+          itself (a double failure inside one group exceeds what single-
+          stripe XOR can tolerate);
+        * every OTHER member of the group is healthy and serves its
+          image;
+        * (delta saves on) the reconstructed rows hash-match the
+          coordinator's per-row FNV ledger — defense in depth against a
+          divergent stripe; a mismatch marks the group stale.
+
+        The per-channel FIFO of the transports makes the fetched peer
+        images and the holder stripe mutually consistent without a fence:
+        both the ``image`` and ``parity-get`` reads are served only after
+        everything submitted before them has been applied."""
+        if not self.parity_enabled:
+            return None
+        g = self._parity_group_of.get(j)
+        if g is None:
+            return None
+        if g in self._parity_stale:
+            self.parity_fallbacks += 1
+            return None
+        holder = self._parity_holder[g]
+        members = [m for m in self._parity_groups[g] if m != j]
+        if holder == j or not self._healthy(holder) or \
+                any(not self._healthy(m) for m in members):
+            self.parity_fallbacks += 1
+            return None
+        stripe = self.endpoints[holder].fetch_parity(g, self._drain_timeout)
+        if stripe is None or len(stripe[0]) != len(self.ranges[j]) or any(
+                len(stripe[0][t]) < (hi - lo)
+                for t, (lo, hi) in enumerate(self.ranges[j])):
+            self._parity_stale.add(g)
+            self.parity_fallbacks += 1
+            return None
+        images = {}
+        for m in members:
+            got = self.endpoints[m].fetch_image(self._drain_timeout)
+            if got is None:
+                self.failed[m] = self.endpoints[m].error
+                self.parity_fallbacks += 1
+                return None
+            images[m] = got
+        rec_t, rec_a = [], []
+        for t, (lo, hi) in enumerate(self.ranges[j]):
+            cnt = hi - lo
+            st = np.array(stripe[0][t][:cnt])
+            sa = np.array(stripe[1][t][:cnt])
+            for m in members:
+                it, ia = images[m][0][t], images[m][1][t]
+                k = min(len(it), cnt)
+                if k:
+                    xor_into(st[:k], it[:k])
+                    xor_into(sa[:k], ia[:k])
+            rec_t.append(st)
+            rec_a.append(sa)
+        if self._hashes is not None:
+            for t, (lo, hi) in enumerate(self.ranges[j]):
+                if hi > lo and not np.array_equal(
+                        row_hash(rec_t[t], rec_a[t]),
+                        self._hashes[t][lo:hi]):
+                    self._parity_stale.add(g)
+                    self.parity_fallbacks += 1
+                    return None
+        # the trainer replica (shard 0) is not parity-striped: the last
+        # fetched copy rides along; a disk-mode recovery that needs the
+        # stamped MLPs replays them through the normal chain
+        trainer = self._img_cache[j][2]
+        self.parity_reconstructions += 1
+        return rec_t, rec_a, trainer
+
+    @property
+    def parity_bytes(self) -> int:
+        """Stripe bytes accepted by holder writers (soft state: counted
+        separately from ``bytes_written`` — parity never hits disk)."""
+        return sum(getattr(ep, "parity_bytes", 0) for ep in self.endpoints)
+
+    @property
+    def parity_report(self) -> dict:
+        return {"enabled": self.parity_enabled,
+                "group_size": self.parity_group_size,
+                "groups": [list(m) for m in self._parity_groups],
+                "holders": {int(g): int(h)
+                            for g, h in self._parity_holder.items()},
+                "hot_shards": list(self._parity_hot),
+                "stale_groups": sorted(self._parity_stale),
+                "reconstructions": self.parity_reconstructions,
+                "fallbacks": self.parity_fallbacks,
+                "parity_bytes": self.parity_bytes}
+
     # ------------------------------------------------------------ routing --
     def _next_seq(self) -> int:
         with self._seq_lock:
@@ -972,6 +1320,7 @@ class ShardedCheckpointWriter:
                   if self._hashes is not None else None)
         ref = self.transport.make_snapshot(seq, snap_t, snap_a)
         nbytes = 0
+        ok_shards = []
         for j in range(self.n_shards):
             part = sum(snap_t[t][lo:hi].nbytes + snap_a[t][lo:hi].nbytes
                        for t, (lo, hi) in enumerate(self.ranges[j]))
@@ -979,9 +1328,19 @@ class ShardedCheckpointWriter:
                 self.dropped_bytes += part
                 continue
             nbytes += part
+            ok_shards.append(j)
             if full_h is not None:
                 for t, (lo, hi) in enumerate(self.ranges[j]):
                     self._hashes[t][lo:hi] = full_h[t][lo:hi]
+        if self.parity_enabled:
+            # mirror advance rides the same accepted-shards-only contract
+            # as the hash advance: a dropped slice must not be treated as
+            # shipped by a later delta or stripe recut
+            for j in ok_shards:
+                for t, (lo, hi) in enumerate(self.ranges[j]):
+                    self._parity_mirror[j][0][t][...] = snap_t[t][lo:hi]
+                    self._parity_mirror[j][1][t][...] = snap_a[t][lo:hi]
+            self._parity_note_full(ok_shards)
         if trainer_state is not None:
             import jax
             snap_tr = _to_numpy(jax.tree.map(self._snap, trainer_state))
@@ -1038,6 +1397,9 @@ class ShardedCheckpointWriter:
                 # actually accepted — dropped rows must not be skipped as
                 # "already saved" later
                 self._hashes[table][rows[m]] = h[m]
+            if self.parity_enabled:
+                self._parity_row_update(int(j), table, rows[m], values[m],
+                                        acc_values[m], step, seq)
         return nbytes
 
     # ----------------------------------------------------------- health ----
@@ -1187,7 +1549,10 @@ class ShardedCheckpointWriter:
             if strict and self.failed:
                 raise ShardSaveError(self.failed)
             return
-        drained = self._drain()
+        # events a quiesce() already popped off the workers ride this
+        # fence's atomic manifest write (they would otherwise be lost)
+        drained = self._pending_drained + self._drain()
+        self._pending_drained = []
         if self.run_dir is not None:
             # split-brain guard: a coordinator whose epoch has been
             # superseded on disk (a standby attached) must never stamp —
@@ -1234,6 +1599,24 @@ class ShardedCheckpointWriter:
                 self._readmit_attempts[j] = 0
         if strict and self.failed:
             raise ShardSaveError(self.failed)
+
+    def quiesce(self) -> int:
+        """Drain every healthy shard — all queued applies done, payloads
+        fsynced, watermarks collected — WITHOUT stamping a cycle.  After a
+        quiesce the peer images and holder stripes reflect everything
+        submitted so far while the recovery point stays at the LAST
+        stamped cycle: exactly the window the fig15 ``bytes_lost_at_crash``
+        benchmark measures (parity-reconstruct recovers the quiesced
+        state; stamped-replay rolls back to the stamp).
+
+        The drained events are stashed and merged into the next
+        ``fence()``'s atomic manifest write: ``collect_applied`` pops the
+        workers' ack lists, so dropping them here would silently erase
+        acked saves from the stamped history.  Returns the number of
+        events drained."""
+        drained = self._drain()
+        self._pending_drained.extend(drained)
+        return len(drained)
 
     def _assert_coordinator_ownership(self):
         """Raise :class:`StaleCoordinatorError` when a newer epoch exists —
@@ -1363,9 +1746,13 @@ class ShardedCheckpointWriter:
         boundary, after ``fence``).
 
         Per poisoned shard: (1) the writer is respawned — a fresh process /
-        connection seeded from the shard's last-good image (disk replay of
-        stamped events when a directory exists), or a fresh applier thread
-        over the surviving store; (2) a **fresh full of the shard's current
+        connection seeded from the shard's last-good image: the parity
+        ``reconstruct`` path first (surviving peers' data + XOR stripe
+        rebuild the shard's CURRENT image — zero rollback), then disk
+        replay of stamped events, then the fetch cache (see
+        :meth:`reconstruct_shard` for the fallback rules); inproc uses a
+        fresh applier thread over the surviving store; (2) a **fresh full
+        of the shard's current
         rows** is enqueued, covering every row the shard missed while
         poisoned, and the delta hashes for its ranges are re-based on that
         snapshot; (3) the shard leaves ``failed`` and resumes normal
@@ -1415,9 +1802,27 @@ class ShardedCheckpointWriter:
                     for t, (lo, hi) in enumerate(self.ranges[j]):
                         self._hashes[t][lo:hi] = row_hash(snap_t[t][lo:hi],
                                                           snap_a[t][lo:hi])
+                if self.parity_enabled:
+                    for t, (lo, hi) in enumerate(self.ranges[j]):
+                        self._parity_mirror[j][0][t][...] = snap_t[t][lo:hi]
+                        self._parity_mirror[j][1][t][...] = snap_a[t][lo:hi]
                 if j == 0 and trainer_state is not None:
                     self.save_trainer(trainer_state, step=step)
             readmitted.append(j)
+        if readmitted and self.parity_enabled:
+            # a readmitted MEMBER's group stripe must be recut (its fresh
+            # full re-based the slice); a readmitted HOLDER lost its held
+            # stripes with the process — reseed those groups too, plus
+            # anything marked stale while the fleet was degraded.  The
+            # crash-loop throttle is deliberately untouched here: a
+            # successful reconstruction/reseed only zeroes the backoff
+            # once the shard survives a full stamped cycle (fence()) —
+            # a reconstruct-then-die loop keeps backing off exponentially.
+            affected = {self._parity_group_of[j] for j in readmitted
+                        if j in self._parity_group_of}
+            affected |= {g for g, h in self._parity_holder.items()
+                         if h in readmitted}
+            self._reseed_parity(affected | self._parity_stale)
         self.shard_readmissions += len(readmitted)
         if readmitted and self.root_dir:
             # a respawned auto-spawned socket server binds a new port:
@@ -1566,6 +1971,25 @@ class ShardedCheckpointWriter:
         self._last_readmit_t = [0.0] * new_n
         if self._hashes is not None:
             self._hashes = [row_hash(t, a) for t, a in zip(g_t, g_a)]
+        self.parity_enabled = (self.parity_group_size > 0 and new_n >= 2)
+        if self.parity_enabled:
+            # re-partition parity under the new layout: the mirror is
+            # re-cut from the stamped global image (so a shard that fails
+            # before its seed full lands still reconstructs to the
+            # stamp), groups/holders rebuilt, stripes reseeded by the
+            # seed save_full below (hot-shard tuning re-applies at the
+            # manager's next policy pass)
+            self._parity_mirror = self._mirror_from_images(self._img_cache)
+            self._build_parity_groups(self.parity_group_size)
+            if self.run_dir is not None:
+                self._pending_manifest_events.append(
+                    self._parity_layout_event())
+        else:
+            self._parity_groups = []
+            self._parity_holder = {}
+            self._parity_group_of = {}
+            self._parity_stale = set()
+            self._parity_mirror = None
         self.layout_epoch += 1
         if self.run_dir is not None:
             self._manifest["n_shards"] = new_n

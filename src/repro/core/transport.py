@@ -83,6 +83,33 @@ remote-disk reconcile path:
       shipped stamped-event ``plan`` from the *writer's* local files
       (used when the coordinator cannot read the shard's directory).
 
+Parity-redundancy frames (ECRM-style XOR striping, enabled by
+``ShardedCheckpointWriter(parity_group_size=...)``): the coordinator
+ships each parity group's XOR stripe to the group's **holder** writer —
+a shard *outside* the group — so a poisoned member's current image can
+be rebuilt from surviving peers (the ``reconstruct`` readmit path)
+instead of replayed from its last stamp.  Parity is soft in-memory
+state: applies produce **no manifest events and no disk payloads**
+(power-loss recovery still replays the stamped chain); they do advance
+the session watermark like any other apply:
+
+  ("parity",  epoch, seq, step, "full",    ("parity-ok", seq, nbytes)
+   group, tables, accs)
+      seed/replace the group's full XOR stripe — one array pair per
+      table; stripe row ``i`` is the bytewise XOR of every member's
+      local row ``i`` (members with fewer rows contribute implicit
+      zeros, so empty shard slices yield identity parity).
+  ("parity",  epoch, seq, step, "delta",   ("parity-ok", seq, nbytes)
+   group, table, stripe_rows, xvals, xaccs)
+      fold a row update into the stripe: bytewise-XOR ``xvals`` /
+      ``xaccs`` (old-bytes XOR new-bytes of the member's rows) into
+      ``stripe_rows``.  A delta for a group the holder was never seeded
+      with is an apply error — fail-stop; the coordinator reseeds the
+      stripe with a fresh "full" at the holder's readmit.
+  ("parity-get", epoch, group)             ("parity-out", group, tabs, accs)
+      reconstruction read: the holder's current stripe for ``group``
+      (a ``(group, None, None)`` reply when it holds no such group).
+
 ``save_full`` payloads are one of ``("spool", path)``, ``("shm", name,
 meta)`` or ``("slices", tables, accs)`` — every worker applies them through
 the same :class:`_ShardStore`, so manifests and images are byte-identical
@@ -417,6 +444,32 @@ class SockChannel:
 # =========================================================================
 # the worker-side apply engine (shared by every transport)
 # =========================================================================
+def xor_arrays(a: np.ndarray, b: np.ndarray) -> np.ndarray:
+    """Bytewise XOR of two same-shape, same-dtype arrays, returned with
+    the original dtype.  XOR over the raw bytes is lossless for any dtype
+    (floats included) and self-inverse — exactly the two properties an
+    XOR parity stripe needs.  Empty arrays XOR to empty arrays (identity
+    parity for zero-row shard slices)."""
+    a = np.ascontiguousarray(a)
+    b = np.ascontiguousarray(b)
+    if a.shape != b.shape or a.dtype != b.dtype:
+        raise ValueError(
+            f"parity xor shape/dtype mismatch: {a.shape}/{a.dtype} vs "
+            f"{b.shape}/{b.dtype}")
+    out = np.bitwise_xor(a.view(np.uint8), b.view(np.uint8))
+    return out.view(a.dtype).reshape(a.shape)
+
+
+def xor_into(dst: np.ndarray, src: np.ndarray) -> None:
+    """XOR ``src`` into contiguous ``dst`` in place, bytewise."""
+    dv = dst.view(np.uint8)
+    sv = np.ascontiguousarray(src).view(np.uint8)
+    if dv.shape != sv.shape:
+        raise ValueError(
+            f"parity xor shape mismatch: {dst.shape} vs {src.shape}")
+    np.bitwise_xor(dv, sv, out=dv)
+
+
 class _ShardStore:
     """Image + disk persistence for one shard's row ranges.
 
@@ -455,6 +508,14 @@ class _ShardStore:
         self.bytes_written = 0
         self.save_events = 0
         self.applied: List[dict] = []          # completed events, in order
+        # XOR parity stripes this writer *holds* for other shards' parity
+        # groups (ECRM redundancy).  Soft state: never persisted, never
+        # recorded in ``applied`` — a holder crash only costs redundancy
+        # (the coordinator reseeds the stripe), never durability.
+        self.parity_tables: Dict[int, List[np.ndarray]] = {}
+        self.parity_accs: Dict[int, List[np.ndarray]] = {}
+        self.parity_bytes = 0
+        self.parity_events = 0
         if directory:
             os.makedirs(directory, exist_ok=True)
 
@@ -525,6 +586,60 @@ class _ShardStore:
             save_trainer_tree(os.path.join(self.directory, fname), tree)
         self._record({"kind": "trainer", "step": step, "seq": seq,
                       "bytes": nbytes, "file": fname}, fname)
+
+    def apply_parity_full(self, group: int, tables, accs, step: int,
+                          seq: int) -> int:
+        """Seed/replace the full XOR stripe we hold for ``group``.  The
+        stripe is stored as-shipped (one contiguous array pair per table);
+        returns the stripe byte size for the ``parity-ok`` ack."""
+        # np.array (not ascontiguousarray): the stripe must be an owned
+        # WRITABLE copy — socket frames deserialize to read-only buffers,
+        # and inproc ships the coordinator's own arrays
+        self.parity_tables[int(group)] = [np.array(t) for t in tables]
+        self.parity_accs[int(group)] = [np.array(a) for a in accs]
+        nbytes = sum(t.nbytes for t in self.parity_tables[int(group)])
+        nbytes += sum(a.nbytes for a in self.parity_accs[int(group)])
+        self.parity_bytes += nbytes
+        self.parity_events += 1
+        return nbytes
+
+    def apply_parity_delta(self, group: int, table: int, stripe_rows,
+                           xvals, xaccs, step: int, seq: int) -> int:
+        """Fold a member's row update into the held stripe: bytewise-XOR
+        ``xvals``/``xaccs`` into ``stripe_rows``.  A delta for a group we
+        were never seeded with raises (fail-stop latch; the coordinator
+        reseeds at readmit).  Zero-row deltas are identity parity."""
+        group = int(group)
+        if group not in self.parity_tables:
+            raise ValueError(
+                f"parity delta for unseeded group {group} on shard "
+                f"{self.shard}")
+        rows = np.asarray(stripe_rows)
+        nbytes = (np.asarray(xvals).nbytes + np.asarray(xaccs).nbytes +
+                  rows.nbytes)
+        if rows.size:
+            dst_t = self.parity_tables[group][int(table)]
+            dst_a = self.parity_accs[group][int(table)]
+            # fancy-indexed reads are fresh contiguous copies: XOR into
+            # the copy, then scatter it back
+            tmp = dst_t[rows]
+            xor_into(tmp, xvals)
+            dst_t[rows] = tmp
+            tmp = dst_a[rows]
+            xor_into(tmp, xaccs)
+            dst_a[rows] = tmp
+        self.parity_bytes += nbytes
+        self.parity_events += 1
+        return nbytes
+
+    def parity_stripe(self, group: int):
+        """The held stripe for ``group`` as copies (safe to serialize
+        outside the session lock), or ``(None, None)`` when unheld."""
+        group = int(group)
+        if group not in self.parity_tables:
+            return None, None
+        return ([t.copy() for t in self.parity_tables[group]],
+                [a.copy() for a in self.parity_accs[group]])
 
     def sync_payloads(self):
         """Batch-fsync every payload persisted since the last DRAIN (file
@@ -900,6 +1015,11 @@ class WriterSession:
             return ("image", [t.copy() for t in self.store.image_tables],
                     [a.copy() for a in self.store.image_accs],
                     self.store.trainer_image), False
+        if kind == "parity-get":
+            # reconstruction read of a held XOR stripe; copies for the
+            # same serialize-outside-the-lock reason as "image"
+            tabs, accs = self.store.parity_stripe(msg[2])
+            return ("parity-out", msg[2], tabs, accs), False
         if kind == "export":
             # reshard donor read: the rows of our image overlapping the
             # requested global [lo, hi) ranges, one pair per table
@@ -975,6 +1095,21 @@ class WriterSession:
                 self.store.apply_rows(table, rows, vals, avs, step, seq)
             elif kind == "trainer":
                 self.store.apply_trainer(msg[4], step, seq)
+            elif kind == "parity":
+                # soft in-memory stripe update: no manifest event, no disk
+                # payload — acked with "parity-ok" instead of popping
+                # ``applied`` (it never pushed one)
+                op = msg[4]
+                if op == "full":
+                    nbytes = self.store.apply_parity_full(
+                        msg[5], msg[6], msg[7], step, seq)
+                elif op == "delta":
+                    nbytes = self.store.apply_parity_delta(
+                        msg[5], msg[6], msg[7], msg[8], msg[9], step, seq)
+                else:
+                    raise ValueError(f"unknown parity op {op!r}")
+                self.watermark = seq
+                return ("parity-ok", seq, nbytes), False
             else:
                 raise ValueError(f"unknown command {kind!r}")
             self.watermark = seq        # durable at the next DRAIN fsync
@@ -1023,6 +1158,10 @@ class ShardEndpoint:
     adopted = False
     reconciled: Optional[str] = None
 
+    #: XOR-stripe accounting (soft state, separate from bytes_written)
+    parity_bytes = 0
+    parity_events = 0
+
     def __init__(self, shard: int):
         self.shard = shard
         self.applied: List[dict] = []   # acked events since last collect
@@ -1048,6 +1187,24 @@ class ShardEndpoint:
         raise NotImplementedError
 
     def submit_trainer(self, tree, step, seq):
+        raise NotImplementedError
+
+    def submit_parity_full(self, group, tables, accs, step, seq):
+        """Seed/replace the XOR stripe this writer holds for ``group``
+        (soft in-memory redundancy state; see the parity frames in the
+        module docstring)."""
+        raise NotImplementedError
+
+    def submit_parity_delta(self, group, table, stripe_rows, xvals,
+                            xaccs, step, seq):
+        """Fold a member row update (old-bytes XOR new-bytes) into the
+        held stripe at ``stripe_rows``."""
+        raise NotImplementedError
+
+    def fetch_parity(self, group, timeout: float = DRAIN_TIMEOUT_S):
+        """Reconstruction read: the writer's current stripe for
+        ``group`` as ``(table_stripes, acc_stripes)``, or None when the
+        writer is unreachable or holds no such group."""
         raise NotImplementedError
 
     def begin_drain(self, token: int) -> bool:
@@ -1182,6 +1339,38 @@ class InprocEndpoint(ShardEndpoint):
         self.applier.submit(lambda *a: self.store.apply_trainer(*a),
                             tree, step, seq)
 
+    def submit_parity_full(self, group, tables, accs, step, seq):
+        self.applier.submit(lambda *a: self.store.apply_parity_full(*a),
+                            group, tables, accs, step, seq)
+
+    def submit_parity_delta(self, group, table, stripe_rows, xvals,
+                            xaccs, step, seq):
+        self.applier.submit(lambda *a: self.store.apply_parity_delta(*a),
+                            group, table, stripe_rows, xvals, xaccs,
+                            step, seq)
+
+    def fetch_parity(self, group, timeout: float = DRAIN_TIMEOUT_S):
+        # remote transports get read-after-submit consistency from the
+        # channel FIFO; inproc reads bypass the applier queue, so drain
+        # it first (an error here means the writer is poisoned -> unheld)
+        try:
+            self.applier.fence()
+        except RuntimeError:
+            return None
+        tabs, accs = self.store.parity_stripe(group)
+        if tabs is None:
+            return None
+        return tabs, accs
+
+    # in-process applies land straight in the store; mirror its counters
+    @property
+    def parity_bytes(self):
+        return self.store.parity_bytes
+
+    @property
+    def parity_events(self):
+        return self.store.parity_events
+
     # ---------------------------------------------------------- drain -----
     def begin_drain(self, token: int) -> bool:
         return self.error is None
@@ -1209,6 +1398,15 @@ class InprocEndpoint(ShardEndpoint):
 
     # --------------------------------------------------------- queries ----
     def fetch_image(self, timeout: float):
+        # drain queued applies first so a healthy read is linearized with
+        # submits (parity reconstruction XORs this against the holder
+        # stripe); a poisoned applier keeps the frozen-image contract —
+        # the image as of the last successful apply
+        if self.error is None:
+            try:
+                self.applier.fence()
+            except RuntimeError:
+                pass
         return (self.store.image_tables, self.store.image_accs,
                 self.store.trainer_image)
 
@@ -1273,6 +1471,8 @@ class RemoteEndpoint(ShardEndpoint):
         self.reconciled = None          # writer: "kept" | "reseeded"
         self.bytes_written = 0          # fed by acks; exact after a fence
         self.save_events = 0
+        self.parity_bytes = 0           # fed by parity-ok acks
+        self.parity_events = 0
         self._chan = None
         self._io_lock = threading.RLock()
         self._last_activity = time.monotonic()  # guarded by: _io_lock
@@ -1308,6 +1508,10 @@ class RemoteEndpoint(ShardEndpoint):
                     f"shard {self.shard} writer rejected {msg[1]!r}: "
                     f"coordinator epoch {msg[2]} superseded by epoch "
                     f"{msg[3]}")
+        elif kind == "parity-ok":
+            # stripe updates are soft state: counted, never in ``applied``
+            self.parity_bytes += msg[2]
+            self.parity_events += 1
         elif kind == "pong":
             self._last_pong = (msg[1], time.monotonic())
         return kind
@@ -1386,6 +1590,28 @@ class RemoteEndpoint(ShardEndpoint):
 
     def submit_trainer(self, tree, step, seq):
         self._send(("trainer", self.epoch, seq, step, tree))
+
+    def submit_parity_full(self, group, tables, accs, step, seq):
+        self._send(("parity", self.epoch, seq, step, "full", int(group),
+                    [np.ascontiguousarray(t) for t in tables],
+                    [np.ascontiguousarray(a) for a in accs]))
+
+    def submit_parity_delta(self, group, table, stripe_rows, xvals,
+                            xaccs, step, seq):
+        self._send(("parity", self.epoch, seq, step, "delta", int(group),
+                    int(table), np.asarray(stripe_rows),
+                    np.ascontiguousarray(xvals),
+                    np.ascontiguousarray(xaccs)))
+
+    def fetch_parity(self, group, timeout: float = DRAIN_TIMEOUT_S):
+        try:
+            self._send(("parity-get", self.epoch, int(group)))
+        except RuntimeError:
+            return None
+        msg = self._recv_until("parity-out", timeout)
+        if msg is None or msg[2] is None:
+            return None
+        return list(msg[2]), list(msg[3])
 
     # ---------------------------------------------------------- drain -----
     def begin_drain(self, token: int) -> bool:

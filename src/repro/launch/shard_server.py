@@ -30,6 +30,18 @@ cannot read a shard's directory at takeover sends ``rebuild`` instead of
 ``reconcile`` — the session then replays the shipped stamped-event plan
 from its *own* local files (see ``repro.core.transport`` for the frames).
 
+Sessions also hold the fleet's **XOR parity stripes** (``parity`` /
+``parity-get`` frames): a session designated holder for a parity group
+keeps the running XOR of its peer shards' images as soft in-memory state
+— seeded by a ``("parity", epoch, seq, step, "full", ...)`` frame,
+folded forward by ``"delta"`` frames shipped alongside row saves, and
+read back by a recovering coordinator with ``parity-get`` to reconstruct
+a crashed peer's *current* image from survivors (zero rollback).  Parity
+state is deliberately not durable and not part of the stamped manifest:
+it dies with the session, and the coordinator reseeds holders at
+adoption/readmission.  All of this rides the shared ``WriterSession``
+loop, so the frames behave identically over inproc, pipe and socket.
+
 The server never imports jax: it is numpy + sockets only, so it is cheap
 to start and a trainer-side accelerator wedge cannot corrupt it.
 

@@ -43,7 +43,7 @@ def train(cfg, steps=200, batch=8, seq=128, lr=0.005, mode="cpr-mfu",
           delta_saves=None, n_emb=8, resume=False, writer_procs=False,
           readmit=False, transport=None, shard_addrs=None,
           heartbeat_interval=None, readmit_backoff=0.0, attach=False,
-          resize_at=None, lease_ttl=None):
+          resize_at=None, lease_ttl=None, parity_group_size=0):
     """Returns (final_params, history dict)."""
     assert cfg.causal and cfg.modality_frontend is None, \
         "LM driver needs a causal text model"
@@ -64,7 +64,8 @@ def train(cfg, steps=200, batch=8, seq=128, lr=0.005, mode="cpr-mfu",
                      transport=transport, shard_addrs=shard_addrs,
                      heartbeat_interval=heartbeat_interval,
                      readmit_backoff=readmit_backoff, attach=attach,
-                     lease_ttl=lease_ttl)
+                     lease_ttl=lease_ttl,
+                     parity_group_size=parity_group_size)
     if resume and checkpoint_dir:
         # warm start from the last consistent cycle on disk: embedding rows,
         # their optimizer rows, and the non-embedding trainer tree
@@ -246,6 +247,15 @@ def main():
                          "checkpoint dir each cycle; a standby's --attach "
                          "is refused while the lease is live (election "
                          "guard against split-brain takeover)")
+    ap.add_argument("--parity-group-size", type=int, default=0,
+                    help="XOR parity group size for the sharded writer "
+                         "fleet (0 = off): peers carry running parity of "
+                         "each other's updates so a crashed shard's "
+                         "current image is reconstructed from survivors "
+                         "(zero rollback) instead of replayed from its "
+                         "last stamped cycle; under cpr-mfu the hottest "
+                         "shards are re-grouped into half-size (stronger) "
+                         "groups once tracker stats identify them")
     ap.add_argument("--tracker-backend", choices=("host", "pallas"),
                     default="pallas")
     args = ap.parse_args()
@@ -277,6 +287,7 @@ def main():
                     readmit_backoff=args.readmit_backoff,
                     attach=args.attach, resize_at=resize_at,
                     lease_ttl=args.lease_ttl,
+                    parity_group_size=args.parity_group_size,
                     tracker_backend=args.tracker_backend)
     r = hist["report"]
     o = r["overheads"]

@@ -1,0 +1,358 @@
+"""Parity-based shard reconstruction (ECRM) tests.
+
+The erasure-coded redundancy layer stripes XOR parity of embedding-row
+updates across parity groups of peer writers, so a crashed shard's
+*current* image — everything submitted before the crash, stamped or not —
+is rebuilt from surviving peers' data + parity instead of replayed from
+the last stamped cycle (zero rollback).  Covered here:
+
+  * group partition / holder placement, hot-shard (MFU) re-grouping;
+  * reconstruction byte-identical to the current oracle state on every
+    transport, with the drained-but-unstamped window (``quiesce``);
+  * fallback rules — a stale stripe or a double failure inside one group
+    cleanly falls back to the last stamped cycle;
+  * the readmission-backoff contract: a reconstructed shard's
+    ``_readmit_attempts`` is only zeroed once it survives a stamped
+    cycle (crash-looping shards keep escalating their backoff);
+  * the ``lease_status`` wall-clock skew slack;
+  * SIGKILL crash legs (pipe + socket) — marked ``crash`` and keyed on
+    "parity" for the CI matrix leg.
+"""
+import os
+import signal
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import (CPRManager, EmbShardSpec, ShardedCheckpointWriter,
+                        ShardSaveError, SystemParams)
+from repro.core.sharded_checkpoint import (LEASE_CLOCK_SKEW_S, LEASE_PTR,
+                                           lease_status)
+
+SIZES = (40, 17, 3)
+DIM = 8
+
+
+def make_state(sizes=SIZES, d=DIM, seed=0):
+    rng = np.random.default_rng(seed)
+    tables = [rng.normal(size=(n, d)).astype(np.float32) for n in sizes]
+    accs = [np.zeros(n, np.float32) for n in sizes]
+    return tables, accs
+
+
+def new_fleet(tables, accs, spec, directory=None, **kw):
+    kw.setdefault("backend", "inproc")
+    kw.setdefault("async_save", True)
+    kw.setdefault("delta_saves", True)
+    kw.setdefault("parity_group_size", 2)
+    return ShardedCheckpointWriter(
+        [t.copy() for t in tables], [a.copy() for a in accs], spec,
+        directory=directory, **kw)
+
+
+def drift(fleet, tables, accs, step, seed=7):
+    """Post-stamp updates across every table (saved, not stamped)."""
+    rng = np.random.default_rng(seed)
+    for t in range(len(tables)):
+        tables[t] = tables[t] + rng.normal(size=tables[t].shape) \
+            .astype(np.float32)
+        accs[t] = accs[t] + 1.0
+        fleet.save_rows(t, np.arange(tables[t].shape[0]), tables[t],
+                        accs[t], step=step)
+    return tables, accs
+
+
+def assert_shard_matches(fleet, j, tables, accs, rt, ra):
+    for t in range(len(tables)):
+        lo, hi = fleet.ranges[j][t]
+        np.testing.assert_array_equal(rt[t][lo:hi], tables[t][lo:hi])
+        np.testing.assert_array_equal(ra[t][lo:hi], accs[t][lo:hi])
+
+
+# ------------------------------------------------------------ layout --------
+def test_parity_group_layout_and_holders():
+    """Groups partition the fleet; each group's stripe lives OUTSIDE the
+    group (first shard of the next group) whenever there are >= 2 groups,
+    so one crash never takes a member and its stripe together."""
+    tables, accs = make_state()
+    fleet = new_fleet(tables, accs, EmbShardSpec(SIZES, 6))
+    rep = fleet.parity_report
+    assert rep["enabled"]
+    assert sorted(j for g in rep["groups"] for j in g) == list(range(6))
+    for g, members in enumerate(rep["groups"]):
+        assert rep["holders"][g] not in members
+    assert rep["stale_groups"] == []
+    fleet.close()
+
+
+def test_parity_hot_shards_get_smaller_groups():
+    """configure_parity (the MFU policy hook) carves hot shards into
+    half-size — stronger — groups and reseeds every stripe."""
+    tables, accs = make_state()
+    fleet = new_fleet(tables, accs, EmbShardSpec(SIZES, 8),
+                      parity_group_size=4)
+    fleet.configure_parity(hot_shards=[1, 2])
+    rep = fleet.parity_report
+    assert rep["hot_shards"] == [1, 2]
+    hot_groups = [g for g in rep["groups"] if set(g) & {1, 2}]
+    cold_groups = [g for g in rep["groups"] if not (set(g) & {1, 2})]
+    assert all(len(g) <= 2 for g in hot_groups)      # gs // 2
+    assert all(len(g) <= 4 for g in cold_groups)
+    assert rep["stale_groups"] == []                 # reseeded
+    # reconstruction still lands on the current image under the new layout
+    fleet.save_full(tables, accs, step=0)
+    fleet.fence()
+    rt, ra, _ = fleet.reconstruct_shard(1)
+    lo, hi = fleet.ranges[1][0]
+    np.testing.assert_array_equal(rt[0], tables[0][lo:hi])
+    fleet.close()
+
+
+def test_parity_disabled_below_two_shards():
+    tables, accs = make_state()
+    fleet = new_fleet(tables, accs, EmbShardSpec(SIZES, 1))
+    assert not fleet.parity_enabled
+    assert fleet.reconstruct_shard(0) is None
+    fleet.close()
+
+
+# ----------------------------------------------------- reconstruction -------
+def test_parity_reconstructs_unstamped_updates():
+    """The core ECRM claim: after a stamp + further (quiesced, unstamped)
+    updates, a killed shard restores to its CURRENT image — stamped-replay
+    would roll back to the stamp."""
+    tables, accs = make_state()
+    fleet = new_fleet(tables, accs, EmbShardSpec(SIZES, 4))
+    fleet.save_full(tables, accs, step=0)
+    fleet.fence()
+    tables, accs = drift(fleet, tables, accs, step=1)
+    fleet.quiesce()                     # applied everywhere, stamped nowhere
+    rt, ra, _ = fleet.reconstruct_shard(3)
+    for t in range(len(SIZES)):
+        lo, hi = fleet.ranges[3][t]
+        np.testing.assert_array_equal(rt[t], tables[t][lo:hi])
+        np.testing.assert_array_equal(ra[t], accs[t][lo:hi])
+    assert fleet.parity_reconstructions == 1
+    assert fleet.parity_fallbacks == 0
+    fleet.close()
+
+
+def test_parity_double_failure_refuses_reconstruction(tmp_path):
+    """Two dead members inside one parity group exceed single-stripe XOR:
+    reconstruction must refuse (counted as a fallback) instead of
+    returning a wrong image.  The stamped-rollback half of the contract is
+    asserted in the SIGKILL crash leg, where the writer image really
+    dies with the process."""
+    tables, accs = make_state()
+    fleet = new_fleet(tables, accs, EmbShardSpec(SIZES, 4),
+                      directory=str(tmp_path))
+    fleet.save_full(tables, accs, step=0)
+    fleet.fence()
+    tables, accs = drift(fleet, tables, accs, step=1)
+    fleet.quiesce()
+    g0 = fleet.parity_report["groups"][0]
+    for j in g0:                        # kill the whole group
+        fleet.kill_shard(j)
+    assert fleet.reconstruct_shard(g0[0]) is None
+    assert fleet.parity_fallbacks > 0
+    fleet.close()
+
+
+def test_parity_dead_holder_marks_group_stale_then_readmit_reseeds():
+    """A holder death makes its groups' stripes unrecoverable: updates to
+    members mark the group stale (reconstruction refuses), and the
+    holder's re-admission reseeds the stripe from the coordinator mirror
+    so reconstruction works again."""
+    tables, accs = make_state()
+    fleet = new_fleet(tables, accs, EmbShardSpec(SIZES, 4))
+    fleet.save_full(tables, accs, step=0)
+    fleet.fence()
+    rep = fleet.parity_report
+    member = rep["groups"][0][0]
+    holder = rep["holders"][0]
+    fleet.kill_shard(holder)
+    # an update to a member of the orphaned group: parity can no longer
+    # track it -> group stale
+    lo, hi = fleet.ranges[member][0]
+    rows = np.arange(lo, hi)
+    tables[0][rows] += 1.0
+    fleet.save_rows(0, rows, tables[0][rows], accs[0][rows], step=1)
+    fleet.quiesce()
+    assert 0 in fleet.parity_report["stale_groups"]
+    assert fleet.reconstruct_shard(member) is None
+    # re-admit the holder: stripes reseed, reconstruction is back
+    fleet.readmit(tables, accs, step=2)
+    assert 0 not in fleet.parity_report["stale_groups"]
+    rt, ra, _ = fleet.reconstruct_shard(member)
+    np.testing.assert_array_equal(rt[0], tables[0][lo:hi])
+    fleet.close()
+
+
+def test_quiesce_preserves_acked_events_for_next_stamp(tmp_path):
+    """quiesce() drains without stamping; the drained acks must still be
+    stamped by the NEXT fence — dropping them would lose durably applied
+    saves from the manifest forever."""
+    tables, accs = make_state()
+    fleet = new_fleet(tables, accs, EmbShardSpec(SIZES, 2),
+                      directory=str(tmp_path))
+    fleet.save_full(tables, accs, step=0)
+    n = fleet.quiesce()
+    assert n > 0
+    fleet.fence()                       # stamps the quiesced events
+    lt, la, _ = ShardedCheckpointWriter.load_latest(
+        str(tmp_path), tables, accs, fleet.spec).restore_all()
+    np.testing.assert_array_equal(lt[0], tables[0])
+    fleet.close()
+
+
+# ------------------------------------------------------------ manager -------
+def _mgr(tables, n_emb=4, parity_group_size=2, mode="cpr"):
+    p = SystemParams(T_total=100.0, T_fail=50.0, N_emb=n_emb)
+    return CPRManager(mode, p, tuple(t.shape[0] for t in tables),
+                      sharded_save=True, async_save=True,
+                      parity_group_size=parity_group_size)
+
+
+def test_manager_threads_parity_and_reports():
+    tables, accs = make_state()
+    mgr = _mgr(tables)
+    mgr.attach_store(tables, accs)
+    assert mgr.store.parity_enabled
+    rep = mgr.report()
+    assert rep["parity"]["enabled"]
+    assert rep["parity"]["reconstructions"] == 0
+    mgr.close()
+
+
+def test_manager_mfu_policy_pass_picks_hot_shards():
+    """The one-shot cpr-mfu policy pass ranks shards by tracker hot-row
+    mass and re-groups the hot ones (smaller, stronger groups)."""
+    tables, accs = make_state()
+    mgr = _mgr(tables, mode="cpr-mfu")
+    mgr.attach_store(tables, accs)
+    # synthetic tracker counters: all heat on table 0's first quarter,
+    # which lands in shard 0's range
+    counts = {0: np.zeros(SIZES[0], np.float32)}
+    counts[0][:SIZES[0] // 4] = 100.0
+    mgr._maybe_tune_parity(counts, t_event=1.0)
+    assert mgr._parity_tuned
+    hot = mgr.store.parity_report["hot_shards"]
+    assert 0 in hot and len(hot) < 4
+    assert any(e.get("event") == "parity-tune" for e in mgr.history)
+    mgr.close()
+
+
+# ------------------------------------------------------- lease slack --------
+def test_lease_status_skew_slack(tmp_path):
+    """Wall-clock skew contract: a lease whose ``expires`` is less than
+    the skew slack in the past still reads as held (a fast standby clock
+    must not steal a live lease); past the slack it reads expired; an
+    explicit release (expires=0) is immediately free."""
+    import json
+    path = os.path.join(str(tmp_path), LEASE_PTR)
+
+    def write(expires):
+        with open(path, "w") as f:
+            json.dump({"epoch": 1, "ttl": 1.0, "expires": expires}, f)
+
+    write(time.time() + 10)
+    assert lease_status(str(tmp_path))["held"]
+    write(time.time() - LEASE_CLOCK_SKEW_S / 2)     # expired, within skew
+    assert lease_status(str(tmp_path))["held"]
+    assert not lease_status(str(tmp_path), skew_slack=0.0)["held"]
+    write(time.time() - LEASE_CLOCK_SKEW_S - 1.0)   # past the slack
+    assert not lease_status(str(tmp_path))["held"]
+    write(0.0)                                      # explicit release
+    assert not lease_status(str(tmp_path))["held"]
+    assert lease_status(str(tmp_path) + "-none") is None
+
+
+# ------------------------------------------------------- crash legs ---------
+@pytest.mark.crash
+@pytest.mark.parametrize("backend", ["process", "socket"])
+def test_parity_sigkill_mid_update_reconstructs_exact(tmp_path, backend):
+    """SIGKILL a writer while parity deltas for its group are in flight:
+    the victim's reconstruction must still land byte-identical to the
+    surviving-peer oracle (per-channel FIFO makes stripe + member images
+    mutually consistent without a fence)."""
+    tables, accs = make_state((4_000, 1_200), d=16)
+    spec = EmbShardSpec((4_000, 1_200), 4)
+    fleet = new_fleet(tables, accs, spec, directory=str(tmp_path),
+                      backend=backend, async_save=False,
+                      drain_timeout=30.0)
+    fleet.save_full(tables, accs, step=0)
+    fleet.fence()
+    group = fleet.parity_report["groups"][0]
+    peer, victim = group[0], group[1]
+    # stream updates to the PEER's rows (parity deltas to the holder ride
+    # along); the victim's content stays put, so its reconstruction has a
+    # deterministic oracle whatever lands before the kill
+    lo, hi = fleet.ranges[peer][0]
+    rng = np.random.default_rng(3)
+    for step in range(1, 6):
+        rows = np.arange(lo, hi)
+        tables[0][rows] += rng.normal(size=(hi - lo, 16)) \
+            .astype(np.float32)
+        fleet.save_rows(0, rows, tables[0][rows], accs[0][rows], step=step)
+    os.kill(fleet.procs[victim].pid, signal.SIGKILL)   # mid-stream
+    rt, ra = fleet.restore_shards([t.copy() for t in tables],
+                                  [a.copy() for a in accs], [victim])
+    assert_shard_matches(fleet, victim, tables, accs, rt, ra)
+    assert fleet.parity_reconstructions == 1
+    fleet.close()
+
+
+@pytest.mark.crash
+@pytest.mark.parametrize("backend", ["process", "socket"])
+def test_parity_sigkill_double_failure_falls_back(tmp_path, backend):
+    """SIGKILL every member of one parity group: reconstruction must
+    refuse and recovery must land cleanly on the last stamped cycle."""
+    tables, accs = make_state()
+    fleet = new_fleet(tables, accs, EmbShardSpec(SIZES, 4),
+                      directory=str(tmp_path), backend=backend,
+                      async_save=False, drain_timeout=30.0)
+    stamped_t = [t.copy() for t in tables]
+    fleet.save_full(tables, accs, step=0)
+    fleet.fence()
+    tables, accs = drift(fleet, tables, accs, step=1)
+    fleet.quiesce()
+    group = fleet.parity_report["groups"][0]
+    for j in group:
+        os.kill(fleet.procs[j].pid, signal.SIGKILL)
+    time.sleep(0.2)
+    victim = group[0]
+    rt, ra = fleet.restore_shards([t.copy() for t in tables],
+                                  [a.copy() for a in accs], [victim])
+    assert fleet.parity_fallbacks > 0
+    for t in range(len(SIZES)):
+        lo, hi = fleet.ranges[victim][t]
+        np.testing.assert_array_equal(rt[t][lo:hi], stamped_t[t][lo:hi])
+    fleet.close()
+
+
+@pytest.mark.crash
+def test_parity_reconstruct_keeps_readmit_backoff(tmp_path):
+    """Satellite regression: a crash-looping shard that reconstructs then
+    immediately dies must keep escalating ``_readmit_attempts`` — only a
+    stamped cycle survived healthy zeroes the backoff."""
+    tables, accs = make_state()
+    fleet = new_fleet(tables, accs, EmbShardSpec(SIZES, 4),
+                      directory=str(tmp_path), backend="process",
+                      async_save=False, readmit_backoff=0.01,
+                      drain_timeout=30.0)
+    fleet.save_full(tables, accs, step=0)
+    fleet.fence()
+    victim = 1
+    for it in range(3):
+        os.kill(fleet.procs[victim].pid, signal.SIGKILL)
+        time.sleep(0.3)
+        fleet.fence(strict=False)       # detects the death; no reset (dead)
+        time.sleep(0.05)                # let the 10ms backoff window pass
+        assert fleet.readmit(tables, accs, step=it + 1) == [victim]
+        # the reconstruct path ran AND the throttle kept escalating
+        assert fleet.parity_reconstructions == it + 1
+        assert fleet._readmit_attempts[victim] == it + 1
+    fleet.fence()                       # survived a stamped cycle: reset
+    assert fleet._readmit_attempts[victim] == 0
+    fleet.close()

@@ -387,6 +387,38 @@ def test_empty_shards_and_trainer_roundtrip():
         fleet.close()
 
 
+@pytest.mark.parametrize("backend", ["inproc", "process", "socket"])
+def test_empty_shard_slices_give_identity_parity(backend, tmp_path):
+    """PR 3's empty-slice regression extended to the parity layer: shards
+    whose slice of a table has zero rows must contribute *identity* parity
+    through encode (stripe seed + delta folding) and decode
+    (reconstruction) on every transport, instead of crashing on the 0-row
+    arrays — and reconstruction of every shard, fully-empty ones
+    included, must land byte-identical to the current image."""
+    sizes = (3, 1)
+    tables, accs = make_state(sizes)
+    spec = EmbShardSpec(sizes, 4)               # shards with 0 rows exist
+    fleet = ShardedCheckpointWriter(
+        [t.copy() for t in tables], [a.copy() for a in accs], spec,
+        directory=str(tmp_path), backend=backend, async_save=True,
+        delta_saves=True, parity_group_size=2)
+    fleet.save_full(tables, accs, step=1)
+    fleet.fence()
+    tables[0][2] += 1.0                         # post-stamp row update
+    fleet.save_rows(0, np.array([2]), tables[0][2:3], accs[0][2:3], step=2)
+    fleet.quiesce()
+    assert fleet.parity_report["stale_groups"] == []
+    for j in range(4):
+        rec = fleet.reconstruct_shard(j)
+        assert rec is not None, f"shard {j} reconstruction refused"
+        rt, ra, _ = rec
+        for t in range(len(sizes)):
+            lo, hi = fleet.ranges[j][t]
+            np.testing.assert_array_equal(rt[t], tables[t][lo:hi])
+            np.testing.assert_array_equal(ra[t], accs[t][lo:hi])
+    fleet.close()
+
+
 # -------------------------------------------------------- property test -----
 @settings(max_examples=15, deadline=None)
 @given(st.integers(0, 10_000), st.integers(2, 5), st.integers(3, 10))
