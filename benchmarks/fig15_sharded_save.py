@@ -279,6 +279,31 @@ def run(max_rows=20_000, n_shards=(1, 2, 4, 8), events=4, r=0.125,
             "image_matches_sync": bool(ok),
         })
 
+    # raw-vs-wire bytes over the socket fleet with the negotiated zlib
+    # codec on: the per-frame high-bit compression must shrink the wire
+    # side of the same save traffic (fig17 gates the reshard stream; this
+    # row keeps the steady-state save path honest too)
+    n = max(n_shards)
+    tables, accs = _state(sizes, d)
+    # float16-quantized values give zlib real redundancy to find
+    tables = [t.astype(np.float16).astype(np.float32) for t in tables]
+    spec = EmbShardSpec(sizes, n)
+    writer = ShardedCheckpointWriter(
+        [t.copy() for t in tables], [a.copy() for a in accs], spec,
+        backend="socket", delta_saves=False,
+        transport_options={"codec_level": 6, "shm_handoff": False})
+    writer.save_full(tables, accs, step=0)
+    writer.fence()
+    wire = writer.wire_stats
+    writer.close()
+    rows.append({
+        "figure": "fig15", "kind": "socket_wire_bytes", "n_shards": n,
+        "codec_level": 6, "raw_sent": wire["raw_sent"],
+        "wire_sent": wire["wire_sent"],
+        "wire_ratio": round(wire["wire_sent"] / max(wire["raw_sent"], 1), 4),
+        "compressed_fewer_bytes": bool(wire["wire_sent"] < wire["raw_sent"]),
+    })
+
     # bytes lost to a writer crash: stamped-replay rolls the shard back
     # to its last stamped cycle (the paper's accepted loss); XOR parity
     # across peer writers (ECRM) reconstructs the CURRENT image from

@@ -28,6 +28,7 @@ BENCHMARKS = [
     ("fig14", "benchmarks.fig14_async_save", {}),
     ("fig15", "benchmarks.fig15_sharded_save", {}),
     ("fig16", "benchmarks.fig16_reshard", {}),
+    ("fig17", "benchmarks.fig17_wire", {}),
     ("table1", "benchmarks.table1_trackers", {}),
 ]
 
@@ -42,6 +43,7 @@ FAST_OVERRIDES = {
     "fig15": {"max_rows": 8_000, "n_shards": (1, 2, 4), "events": 3,
               "lost_shards": (2, 4)},
     "fig16": {"max_rows": 6_000, "n_ops": 3},
+    "fig17": {"max_rows": 6_000, "events": 3, "hash_rows": 20_000},
 }
 
 

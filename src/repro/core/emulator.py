@@ -88,7 +88,8 @@ class Emulator:
                            for t in big}
             elif mode == "cpr-ssu":
                 tracker = {t: trk.ssu_update(tracker[t],
-                                             batch["sparse"][:, t, :], period)
+                                             batch["sparse"][:, t, :], period,
+                                             backend=mgr.tracker_backend)
                            for t in big}
             return params, ostate, tracker, loss
 

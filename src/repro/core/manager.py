@@ -74,7 +74,8 @@ class CPRManager:
                  table_sizes, target_pls: float = 0.1, r: float = 0.125,
                  ssu_period: int = 2, big_table_coverage: float = 0.99,
                  directory: Optional[str] = None, async_save: bool = False,
-                 tracker_backend: str = "host", seg_size: int = 512,
+                 tracker_backend: str = "host", seg_size=512,
+                 hash_backend: str = "host",
                  sharded_save: bool = False,
                  delta_saves: Optional[bool] = None,
                  writer_procs: bool = False, readmit: bool = False,
@@ -88,6 +89,7 @@ class CPRManager:
                  attach: bool = False):
         assert mode in ALL_MODES, mode
         assert tracker_backend in ("host", "pallas"), tracker_backend
+        assert hash_backend in ("host", "pallas"), hash_backend
         self.mode = mode
         self.p = sys_params
         self.target_pls = target_pls
@@ -147,7 +149,14 @@ class CPRManager:
         self.delta_saves = (self.sharded_save if delta_saves is None
                             else delta_saves)
         self.tracker_backend = tracker_backend
+        # seg_size 0 or "auto" defers to a measured autotune pass at
+        # tracker_init (table shapes are known there); the chosen value
+        # replaces it and surfaces in report()["seg_size"].
         self.seg_size = seg_size
+        # hash_backend picks the delta-save row-hash implementation the
+        # sharded writer uses: "host" (numpy loop) or "pallas"
+        # (kernels.row_hash, bit-exact).
+        self.hash_backend = hash_backend
         # sim-hours per wall-second of blocked save time; the emulator sets
         # this from its measured step rate so save_measured is comparable
         # to the modeled charges.  0 -> only raw seconds are recorded.
@@ -207,6 +216,17 @@ class CPRManager:
             state = {t: trk.mfu_init(self.table_sizes[t])
                      for t in self.big_tables}
             if self.tracker_backend == "pallas":
+                if self.seg_size in (0, "auto"):
+                    # measured choice on the largest big table's workload
+                    # (lane-aligned candidates only); the winner is what
+                    # report() surfaces as "seg_size"
+                    from repro.kernels import ops
+                    t_big = max(self.big_tables,
+                                key=lambda t: self.table_sizes[t])
+                    n = self.table_sizes[t_big]
+                    rn = max(1, int(self.r * n))
+                    seg, k = trk.segmented_k(n, rn)
+                    self.seg_size = ops.autotune_seg_size(n, k)
                 # pre-warm the selection kernel per table shape so the
                 # first save event's measured blocked time is checkpoint
                 # cost, not jit compilation
@@ -233,6 +253,7 @@ class CPRManager:
             # accounting) and the writer (fence/close routing)
             common = dict(
                 async_save=self.async_save, delta_saves=self.delta_saves,
+                hash_backend=self.hash_backend,
                 heartbeat_interval=self.heartbeat_interval,
                 readmit_backoff=self.readmit_backoff,
                 lease_ttl=self.lease_ttl,
@@ -643,6 +664,8 @@ class CPRManager:
             "sharded_save": self.sharded_save,
             "writer_backend": self.transport,
             "tracker_backend": self.tracker_backend,
+            "hash_backend": self.hash_backend,
+            "seg_size": self.seg_size,
             "T_save": self.T_save,
             "save_interval": self.save_interval,
             "target_pls": self.target_pls,
@@ -674,4 +697,7 @@ class CPRManager:
                 out["reshard_history"] = list(self.store.reshard_history)
             if self.store.attach_report is not None:
                 out["attach"] = self.store.attach_report
+            wire = self.store.wire_stats
+            if wire is not None:
+                out["wire"] = wire
         return out

@@ -506,8 +506,16 @@ class ShardedCheckpointWriter:
                  transport_options: Optional[dict] = None,
                  parity_group_size: int = 0,
                  parity_hot_shards: Sequence[int] = (),
+                 hash_backend: str = "host",
                  _takeover: Optional[dict] = None):
         assert backend in BACKENDS, backend
+        assert hash_backend in ("host", "pallas"), hash_backend
+        self.hash_backend = hash_backend
+        if hash_backend == "pallas":
+            from repro.kernels import ops as _kops
+            self._row_hash = _kops.row_hash
+        else:
+            self._row_hash = row_hash
         self.spec = spec
         self.n_shards = spec.n_shards
         self.backend = normalize_transport(backend)
@@ -543,7 +551,7 @@ class ShardedCheckpointWriter:
         self.dropped_bytes = 0          # routed to a poisoned shard
         self.delta_rows_skipped = 0
         self.delta_bytes_skipped = 0
-        self._hashes = ([row_hash(t, a) for t, a in zip(host_t, host_a)]
+        self._hashes = ([self._row_hash(t, a) for t, a in zip(host_t, host_a)]
                         if delta_saves else None)
         self._watermarks = [0] * self.n_shards   # durable seq per shard
         self.layout_epoch = 1           # bumped by every stamped resize
@@ -725,7 +733,7 @@ class ShardedCheckpointWriter:
             if self._hashes is not None:
                 for j in range(self.n_shards):
                     for t, (lo, hi) in enumerate(self.ranges[j]):
-                        self._hashes[t][lo:hi] = row_hash(seeds[j][0][t],
+                        self._hashes[t][lo:hi] = self._row_hash(seeds[j][0][t],
                                                           seeds[j][1][t])
 
         # ---- the transport + its endpoints ----
@@ -785,7 +793,7 @@ class ShardedCheckpointWriter:
             self._img_cache[j] = got
             if self._hashes is not None:
                 for t, (lo, hi) in enumerate(self.ranges[j]):
-                    self._hashes[t][lo:hi] = row_hash(got[0][t],
+                    self._hashes[t][lo:hi] = self._row_hash(got[0][t],
                                                       got[1][t])
         if _takeover is not None:
             self.shard_readmissions = int(
@@ -858,6 +866,13 @@ class ShardedCheckpointWriter:
     @property
     def shard_events(self) -> List[int]:
         return [ep.save_events for ep in self.endpoints]
+
+    @property
+    def wire_stats(self):
+        """Raw-vs-wire byte counters from the transport (socket backend
+        with codec/mux), or None where the wire concept does not apply."""
+        fn = getattr(self.transport, "wire_stats", None)
+        return fn() if callable(fn) else None
 
     @property
     def image_tables(self) -> List[np.ndarray]:
@@ -1241,7 +1256,7 @@ class ShardedCheckpointWriter:
         if self._hashes is not None:
             for t, (lo, hi) in enumerate(self.ranges[j]):
                 if hi > lo and not np.array_equal(
-                        row_hash(rec_t[t], rec_a[t]),
+                        self._row_hash(rec_t[t], rec_a[t]),
                         self._hashes[t][lo:hi]):
                     self._parity_stale.add(g)
                     self.parity_fallbacks += 1
@@ -1316,7 +1331,7 @@ class ShardedCheckpointWriter:
         seq = self._next_seq()
         snap_t = [self._snap(t) for t in tables]
         snap_a = [self._snap(a) for a in accs]
-        full_h = ([row_hash(t, a) for t, a in zip(snap_t, snap_a)]
+        full_h = ([self._row_hash(t, a) for t, a in zip(snap_t, snap_a)]
                   if self._hashes is not None else None)
         ref = self.transport.make_snapshot(seq, snap_t, snap_a)
         nbytes = 0
@@ -1370,7 +1385,7 @@ class ShardedCheckpointWriter:
         values = np.asarray(values)[valid]
         acc_values = np.asarray(acc_values)[valid]
         if rows.size and self._hashes is not None:
-            h = row_hash(values, acc_values)
+            h = self._row_hash(values, acc_values)
             changed = h != self._hashes[table][rows]
             skipped = ~changed
             self.delta_rows_skipped += int(skipped.sum())
@@ -1800,7 +1815,7 @@ class ShardedCheckpointWriter:
             if self._dispatch(j, "full", (ref, step, seq)):
                 if self._hashes is not None:
                     for t, (lo, hi) in enumerate(self.ranges[j]):
-                        self._hashes[t][lo:hi] = row_hash(snap_t[t][lo:hi],
+                        self._hashes[t][lo:hi] = self._row_hash(snap_t[t][lo:hi],
                                                           snap_a[t][lo:hi])
                 if self.parity_enabled:
                     for t, (lo, hi) in enumerate(self.ranges[j]):
@@ -1970,7 +1985,7 @@ class ShardedCheckpointWriter:
         self._readmit_not_before = [0.0] * new_n
         self._last_readmit_t = [0.0] * new_n
         if self._hashes is not None:
-            self._hashes = [row_hash(t, a) for t, a in zip(g_t, g_a)]
+            self._hashes = [self._row_hash(t, a) for t, a in zip(g_t, g_a)]
         self.parity_enabled = (self.parity_group_size > 0 and new_n >= 2)
         if self.parity_enabled:
             # re-partition parity under the new layout: the mirror is

@@ -85,26 +85,34 @@ def ssu_init(rn: int, seed: int = 17):
             "key": jax.random.PRNGKey(seed)}
 
 
-def ssu_update(state, indices, period: int = 2):
+def ssu_update(state, indices, period: int = 2, backend: str = "host"):
     """Insert every ``period``-th accessed id; dedupe; random-evict overflow.
 
     Keeps the buffer sorted ascending with EMPTY slots at the end, so
     membership tests are O(log rN) via searchsorted.
+
+    ``backend="pallas"`` runs the dedupe/merge/evict as one fused kernel
+    (``kernels.ssu_dedupe``).  Both backends draw the keep-scores from
+    the same PRNG stream *before* branching, so their results are
+    bit-identical — the parity test asserts it.
     """
     buf, key = state["buf"], state["key"]
     rn = buf.shape[0]
     cand = indices.reshape(-1)[::period]
     cand = jnp.unique(cand, size=cand.shape[0], fill_value=EMPTY)
+    key, sub = jax.random.split(key)
+    # random keep of rn among valid entries (uniform eviction on overflow)
+    scores = jax.random.uniform(sub, (rn + cand.shape[0],))
+    if backend == "pallas":
+        from repro.kernels import ops
+        return {"buf": jnp.asarray(ops.ssu_dedupe_evict(buf, cand, scores)),
+                "key": key}
     # drop candidates already present
     pos = jnp.searchsorted(buf, cand)
     present = buf[jnp.clip(pos, 0, rn - 1)] == cand
     cand = jnp.where(present, EMPTY, cand)
     combined = jnp.sort(jnp.concatenate([buf, cand]))
-    n_valid = jnp.sum(combined != EMPTY)
-    key, sub = jax.random.split(key)
-    # random keep of rn among valid entries (uniform eviction on overflow)
-    score = jnp.where(combined != EMPTY,
-                      jax.random.uniform(sub, combined.shape), jnp.inf)
+    score = jnp.where(combined != EMPTY, scores, jnp.inf)
     keep = jnp.argsort(score)[:rn]
     new_buf = jnp.sort(combined[keep])
     # if no overflow, keep everything valid (argsort path already does)

@@ -129,7 +129,8 @@ import socket as _socket
 import struct
 import threading
 import time
-from typing import Dict, List, Optional, Sequence, Tuple
+import zlib
+from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
@@ -151,6 +152,20 @@ SUBMIT_TIMEOUT_S = 30.0
 HEARTBEAT_TIMEOUT_S = 60.0
 # Outbound submit-queue depth per socket endpoint.
 SUBMIT_QUEUE_DEPTH = 64
+# Per-frame zlib codec floor (negotiated in the connection "hello"): only
+# bodies at least this large are compressed — below it the codec costs
+# more CPU than the bytes it saves, and control frames (ping, drain, ack)
+# must stay cheap on the fence critical path.
+CODEC_FLOOR_BYTES = 1 << 10
+# Contiguous ndarray payloads at least this large are appended to the
+# outgoing frame as memoryviews (zero-copy) instead of ``tobytes()``
+# copies; below it the bookkeeping outweighs the copy.
+ZEROCOPY_MIN_BYTES = 1 << 12
+# High bit of the 8-byte length prefix marks a zlib-compressed frame body.
+# The receive side is stateless: it inflates flagged frames whether or not
+# it negotiated a codec, so each direction can enable compression
+# independently and control replies never depend on handshake ordering.
+_FRAME_COMPRESSED = 1 << 63
 
 TRANSPORTS = ("inproc", "pipe", "socket")
 TRANSPORT_ALIASES = {"thread": "inproc", "process": "pipe"}
@@ -206,7 +221,14 @@ def _pack_into(o, out: List[bytes]):
                    _U32.pack(dt.ndim) +
                    b"".join(_U64.pack(s) for s in dt.shape) +
                    _U64.pack(dt.nbytes))
-        out.append(dt.tobytes())
+        if dt.nbytes >= ZEROCOPY_MIN_BYTES:
+            # zero-copy: the view aliases the array (or the contiguous
+            # staging copy ``ascontiguousarray`` made); ``send`` writes it
+            # to the socket synchronously before returning, so the caller
+            # cannot mutate it mid-frame.
+            out.append(memoryview(dt).cast("B"))
+        else:
+            out.append(dt.tobytes())
     elif isinstance(o, (np.generic,)):
         _pack_into(o.item(), out)
     elif isinstance(o, bool):            # pragma: no cover (caught above)
@@ -238,11 +260,22 @@ def _pack_into(o, out: List[bytes]):
         raise TypeError(f"cannot encode {type(o).__name__} on the wire")
 
 
+def pack_msg_parts(o) -> List[Union[bytes, memoryview]]:
+    """Encode one protocol message as a list of frame-body parts.
+
+    Large contiguous ndarray payloads appear as **memoryviews over the
+    caller's array** — no intermediate ``tobytes()`` copy — so a
+    ``save_full`` slice travels coordinator-memory → socket with a single
+    kernel copy.  Callers that need one buffer join the parts
+    (:func:`pack_msg`); the socket channel sends them individually."""
+    out: List[Union[bytes, memoryview]] = []
+    _pack_into(o, out)
+    return out
+
+
 def pack_msg(o) -> bytes:
     """Encode one protocol message as a self-delimited binary frame body."""
-    out: List[bytes] = []
-    _pack_into(o, out)
-    return b"".join(out)
+    return b"".join(pack_msg_parts(o))
 
 
 def _unpack_from(buf: memoryview, pos: int):
@@ -351,32 +384,86 @@ class SockChannel:
     decode garbage lengths and read forever).  So the first send failure
     latches ``_broken`` and severs the socket: every later ``send`` fails
     fast, and the peer sees EOF instead of a torn stream.
+
+    **Optional per-frame zlib codec** (negotiated in the connection
+    ``hello``): when ``enable_codec`` has been called, bodies of at least
+    ``codec_floor`` raw bytes are deflated and flagged with the high bit
+    of the length prefix; the receive side *always* inflates flagged
+    frames, so the two directions negotiate independently.  Raw-vs-wire
+    byte counters feed ``report()``.
     """
 
-    def __init__(self, sock: _socket.socket):
+    def __init__(self, sock: _socket.socket, codec_level: int = 0,
+                 codec_floor: int = CODEC_FLOOR_BYTES):
         self._sock = sock
         self._buf = bytearray()
         self._send_lock = threading.Lock()
         self._broken = False        # guarded by: _send_lock
+        self._codec_level = int(codec_level)
+        self._codec_floor = int(codec_floor)
+        # raw = pack_msg bytes; wire = bytes on the socket incl. prefixes.
+        self.raw_bytes_sent = 0     # guarded by: _send_lock
+        self.wire_bytes_sent = 0    # guarded by: _send_lock
+        self.raw_bytes_rcvd = 0
+        self.wire_bytes_rcvd = 0
         sock.settimeout(None)           # blocking forever; see class doc
         try:
             sock.setsockopt(_socket.IPPROTO_TCP, _socket.TCP_NODELAY, 1)
         except OSError:
             pass                        # AF_UNIX (tests) has no Nagle
 
+    def enable_codec(self, level: int, floor: Optional[int] = None):
+        """Turn on send-side compression (after a ``hello`` handshake)."""
+        self._codec_level = int(level)
+        if floor is not None:
+            self._codec_floor = int(floor)
+
+    def wire_stats(self) -> Dict[str, int]:
+        with self._send_lock:
+            return {"raw_sent": self.raw_bytes_sent,
+                    "wire_sent": self.wire_bytes_sent,
+                    "raw_rcvd": self.raw_bytes_rcvd,
+                    "wire_rcvd": self.wire_bytes_rcvd}
+
     # ------------------------------------------------------------- send ---
     def send(self, msg):
-        body = pack_msg(msg)            # encode errors leave no bytes sent
+        parts = pack_msg_parts(msg)     # encode errors leave no bytes sent
+        raw_len = sum(len(p) for p in parts)
+        if self._codec_level and raw_len >= self._codec_floor:
+            co = zlib.compressobj(self._codec_level)
+            body = b"".join([co.compress(p) for p in parts] + [co.flush()])
+            bufs: List[Union[bytes, memoryview]] = [
+                _U64.pack(len(body) | _FRAME_COMPRESSED), body]
+            wire_len = len(body)
+        else:
+            # coalesce small parts into one buffer; large memoryview parts
+            # (array payloads) go to sendall directly, zero-copy.
+            bufs = []
+            small: List[bytes] = [_U64.pack(raw_len)]
+            for p in parts:
+                if isinstance(p, memoryview):
+                    if small:
+                        bufs.append(b"".join(small))
+                        small = []
+                    bufs.append(p)
+                else:
+                    small.append(p)
+            if small:
+                bufs.append(b"".join(small))
+            wire_len = raw_len
         with self._send_lock:
             if self._broken:
                 raise BrokenPipeError(
                     "channel poisoned by an earlier partial send")
             try:
-                self._sock.sendall(_U64.pack(len(body)) + body)
+                for b in bufs:
+                    self._sock.sendall(b)
             except Exception as e:      # incl. socket.timeout mid-sendall
                 self._broken = True
                 self._sever()           # peer sees EOF, never a torn frame
                 raise BrokenPipeError(str(e)) from e
+            self.raw_bytes_sent += raw_len
+            self.wire_bytes_sent += wire_len + 8
 
     def _sever(self):
         try:
@@ -388,7 +475,7 @@ class SockChannel:
     def _frame_len(self) -> Optional[int]:
         if len(self._buf) < 8:
             return None
-        return _U64.unpack_from(self._buf, 0)[0]
+        return _U64.unpack_from(self._buf, 0)[0] & (_FRAME_COMPRESSED - 1)
 
     def _has_frame(self) -> bool:
         n = self._frame_len()
@@ -429,8 +516,14 @@ class SockChannel:
         while not self._has_frame():
             self._fill(None)
         n = self._frame_len()
+        compressed = bool(_U64.unpack_from(self._buf, 0)[0]
+                          & _FRAME_COMPRESSED)
         body = bytes(self._buf[8:8 + n])
         del self._buf[:8 + n]
+        self.wire_bytes_rcvd += n + 8
+        if compressed:
+            body = zlib.decompress(body)
+        self.raw_bytes_rcvd += len(body)
         return unpack_msg(body)
 
     def close(self):
@@ -439,6 +532,230 @@ class SockChannel:
             self._sock.close()
         except OSError:
             pass
+
+
+# =========================================================================
+# connection-level negotiation (hello) + shard multiplexing
+# =========================================================================
+# These are *connection*-scoped frames, not coordinator->writer commands:
+# ("hello", epoch, opts) / ("hello-ok", opts) negotiate the per-frame
+# codec, multiplexing and the shm save_full handoff before any spawn or
+# attach travels; ("mx", shard, frame) is the mux envelope wrapping every
+# per-shard frame on a shared connection.  The inner frames are the
+# ordinary epoch-fenced protocol, unchanged.
+
+_LOOPBACK_HOSTS = ("127.0.0.1", "localhost", "::1")
+
+
+def is_loopback_address(address) -> bool:
+    return bool(address) and str(address[0]) in _LOOPBACK_HOSTS
+
+
+class ShmProbe:
+    """Same-machine proof for the shm ``save_full`` handoff.
+
+    The coordinator allocates a tiny shared-memory segment holding a
+    random nonce and offers ``(name, nonce)`` in the connection ``hello``;
+    the server attaches the segment *by name* and confirms the bytes
+    match.  Only a process on the same machine (same /dev/shm namespace)
+    can pass, so a loopback-forwarded remote server can never be handed a
+    segment name it cannot open."""
+
+    def __init__(self):
+        from multiprocessing import shared_memory
+        self.nonce = os.urandom(16)
+        self._shm = shared_memory.SharedMemory(create=True, size=16)
+        self._shm.buf[:16] = self.nonce
+
+    def payload(self):
+        return [self._shm.name, bytes(self.nonce)]
+
+    def close(self):
+        try:
+            self._shm.close()
+            self._shm.unlink()
+        except (FileNotFoundError, OSError):
+            pass
+
+
+def verify_shm_probe(probe_payload) -> bool:
+    """Server side of :class:`ShmProbe`: attach by name, compare nonces."""
+    if not probe_payload:
+        return False
+    from multiprocessing import shared_memory
+    name, nonce = probe_payload[0], probe_payload[1]
+    try:
+        seg = shared_memory.SharedMemory(name=name)
+    except (FileNotFoundError, OSError, ValueError):
+        return False
+    try:
+        return bytes(seg.buf[:len(nonce)]) == bytes(nonce)
+    finally:
+        # Attaching registered the name with OUR resource tracker; close
+        # only — unlinking is the coordinator's job (it owns the probe).
+        seg.close()
+
+
+def client_hello(chan: SockChannel, epoch: int, *, codec_level: int = 0,
+                 codec_floor: int = CODEC_FLOOR_BYTES, mux: bool = False,
+                 shm_probe: Optional[ShmProbe] = None,
+                 timeout: float = 20.0) -> dict:
+    """Send the connection ``hello`` and wait for ``hello-ok``.
+
+    Returns the server's option dict (``{"shm": bool}``).  On success the
+    client's send-side codec is enabled at ``codec_level`` (the server
+    enabled its own side when it read the hello)."""
+    opts = {"codec_level": int(codec_level), "codec_floor": int(codec_floor),
+            "mux": bool(mux)}
+    if shm_probe is not None:
+        opts["shm"] = shm_probe.payload()
+    chan.send(("hello", epoch, opts))
+    if not chan.poll(timeout):
+        raise WriterProcError("hello handshake timed out")
+    reply = chan.recv()
+    if not (isinstance(reply, tuple) and reply and reply[0] == "hello-ok"):
+        raise WriterProcError(f"hello handshake got {reply!r}")
+    if codec_level:
+        chan.enable_codec(codec_level, codec_floor)
+    return dict(reply[1]) if len(reply) > 1 and reply[1] else {}
+
+
+class _MuxChan:
+    """One shard's virtual channel over a shared :class:`MuxConnection`.
+
+    Same ``send/recv/poll/close`` surface as :class:`SockChannel`; sends
+    wrap the frame in an ("mx", shard, frame) envelope (serialized by the
+    underlying channel's send lock), receives drain a per-shard inbox fed
+    by the connection's reader thread — so one slow shard's traffic never
+    head-of-line-blocks a peer's DRAIN ack."""
+
+    def __init__(self, conn: "MuxConnection", shard: int):
+        self._conn = conn
+        self.shard = shard
+        self._cv = threading.Condition()
+        self._inbox: List[tuple] = []   # guarded by: _cv
+        self._eof = False               # guarded by: _cv
+
+    def send(self, msg):
+        self._conn.send_for(self.shard, msg)
+
+    def _deliver(self, msg):
+        with self._cv:
+            self._inbox.append(msg)
+            self._cv.notify_all()
+
+    def _deliver_eof(self):
+        with self._cv:
+            self._eof = True
+            self._cv.notify_all()
+
+    def poll(self, timeout: float = 0.0) -> bool:
+        deadline = time.monotonic() + timeout
+        with self._cv:
+            while not self._inbox:
+                if self._eof:           # mirror SockChannel.poll-on-EOF
+                    raise EOFError("mux connection closed")
+                remaining = deadline - time.monotonic()
+                if remaining <= 0:
+                    return False
+                self._cv.wait(remaining)
+            return True
+
+    def recv(self):
+        with self._cv:
+            while not self._inbox:
+                if self._eof:
+                    raise EOFError("mux connection closed")
+                self._cv.wait()
+            return self._inbox.pop(0)
+
+    def close(self):
+        """Detach this shard from the shared connection (the connection
+        itself closes when its last member detaches)."""
+        self._conn.member_close(self.shard)
+
+    def sever_connection(self):
+        """Hard-kill the *whole* shared connection — the crash-drill
+        equivalent of closing a dedicated per-shard socket: every
+        co-resident shard sees EOF and is poisoned together."""
+        self._conn.sever()
+
+    def wire_stats(self) -> Dict[str, int]:
+        return self._conn.wire_stats()
+
+
+class MuxConnection:
+    """One TCP connection carrying several shards' channels to a single
+    ``shard_server`` (``--shard-servers host:port*k`` addressing).
+
+    Owns the :class:`SockChannel` and a reader thread that demuxes
+    inbound ("mx", shard, frame) envelopes to per-shard :class:`_MuxChan`
+    inboxes.  Failure granularity is the connection: losing it (or
+    ``sever()``) delivers EOF to every member, poisoning exactly the
+    shards riding this connection — the same partition surface as k
+    dedicated sockets to one dead host."""
+
+    def __init__(self, address, epoch: int = 0, connect_timeout: float = 20.0,
+                 codec_level: int = 0, codec_floor: int = CODEC_FLOOR_BYTES,
+                 shm_probe: Optional[ShmProbe] = None, server_proc=None):
+        self.address = tuple(address)
+        self.server_proc = server_proc      # owned auto-spawned server
+        sock = _socket.create_connection(
+            (self.address[0], int(self.address[1])), timeout=connect_timeout)
+        self._chan = SockChannel(sock)
+        self.hello = client_hello(
+            self._chan, epoch, codec_level=codec_level,
+            codec_floor=codec_floor, mux=True, shm_probe=shm_probe,
+            timeout=connect_timeout)
+        self.shm_ok = bool(self.hello.get("shm"))
+        self._lock = threading.Lock()
+        self._members: Dict[int, _MuxChan] = {}     # guarded by: _lock
+        self._reader = threading.Thread(
+            target=self._reader_loop,
+            name=f"cpr-mux-recv-{self.address[0]}-{self.address[1]}",
+            daemon=True)
+        self._reader.start()
+
+    def channel(self, shard: int) -> _MuxChan:
+        ch = _MuxChan(self, shard)
+        with self._lock:
+            self._members[shard] = ch
+        return ch
+
+    def send_for(self, shard: int, msg):
+        self._chan.send(("mx", shard, msg))
+
+    def _reader_loop(self):
+        try:
+            while True:
+                msg = self._chan.recv()
+                if not (isinstance(msg, tuple) and msg
+                        and msg[0] == "mx"):
+                    continue            # unknown envelope: drop, stay up
+                with self._lock:
+                    ch = self._members.get(msg[1])
+                if ch is not None:
+                    ch._deliver(msg[2])
+        except (EOFError, OSError, ValueError):
+            pass
+        finally:
+            with self._lock:
+                members = list(self._members.values())
+            for ch in members:
+                ch._deliver_eof()
+
+    def member_close(self, shard: int):
+        with self._lock:
+            self._members.pop(shard, None)
+            last = not self._members
+        if last:
+            self.sever()
+
+    def sever(self):
+        self._chan.close()
+
+    def wire_stats(self) -> Dict[str, int]:
+        return self._chan.wire_stats()
 
 
 # =========================================================================
@@ -777,6 +1094,30 @@ class SliceSnapshot(SnapshotRef):
                  for t, (lo, hi) in zip(self.tables, r)],
                 [np.ascontiguousarray(a[lo:hi])
                  for a, (lo, hi) in zip(self.accs, r)])
+
+
+class ShmHandoffSnapshot(SnapshotRef):
+    """Socket transport with co-hosted, shm-verified servers: the full
+    snapshot lives in ONE shared-memory segment (exactly
+    :class:`ShmSnapshot`), and a verified shard's ``full`` frame carries
+    just the segment *name* — the pipe transport's zero-copy payload,
+    unified with the socket protocol.  Shards whose connection failed the
+    :class:`ShmProbe` (remote, or a different mount namespace) fall back
+    to streamed row slices from the same snapshot arrays."""
+
+    def __init__(self, seq, snap_t, snap_a, ranges, shm_shards):
+        super().__init__(seq)
+        self._slices = SliceSnapshot(seq, snap_t, snap_a, ranges)
+        self._shm = ShmSnapshot(seq, snap_t, snap_a)
+        self.shm_shards = frozenset(shm_shards)
+
+    def payload_for(self, shard: int):
+        if shard in self.shm_shards:
+            return self._shm.payload_for(shard)
+        return self._slices.payload_for(shard)
+
+    def release(self):
+        self._shm.release()
 
 
 def _apply_full_payload(store: _ShardStore, spec: EmbShardSpec, payload,
@@ -1788,6 +2129,29 @@ class PipeEndpoint(RemoteEndpoint):
             self.proc.join(timeout=5.0)
 
 
+def spawn_loopback_server(connect_timeout: float, name: str):
+    """Launch a loopback ``shard_server`` process and return
+    ``((host, port), proc)`` — the child binds port 0 and reports the real
+    port back over a bootstrap pipe.  Shared by the per-shard auto-spawn
+    path and the mux-group auto-spawn path (one server per group)."""
+    import multiprocessing as mp
+
+    from repro.launch import shard_server
+    ctx = mp.get_context("spawn")
+    parent, child = ctx.Pipe()
+    proc = ctx.Process(target=shard_server.spawned_server_main,
+                       args=(child, "127.0.0.1"),
+                       name=name, daemon=True)
+    proc.start()
+    child.close()
+    if not parent.poll(connect_timeout):
+        proc.kill()
+        raise WriterProcError(f"{name} failed to report its port")
+    host, port = parent.recv()
+    parent.close()
+    return (host, port), proc
+
+
 class SocketEndpoint(RemoteEndpoint):
     """One shard writer on the far side of a TCP connection, speaking the
     length-prefixed frame protocol.
@@ -1824,7 +2188,11 @@ class SocketEndpoint(RemoteEndpoint):
                  attach_watermark: Optional[int] = None,
                  attach_seed_ok: bool = True,
                  attach_fallback_spawn: bool = False,
-                 attach_rebuild_plan=None):
+                 attach_rebuild_plan=None,
+                 codec_level: int = 0,
+                 codec_floor: int = CODEC_FLOOR_BYTES,
+                 shm_probe: Optional[ShmProbe] = None,
+                 mux_conn: Optional[MuxConnection] = None):
         super().__init__(shard, epoch=epoch)
         self.spec = spec
         self.directory = directory
@@ -1838,6 +2206,14 @@ class SocketEndpoint(RemoteEndpoint):
         self._attach_seed_ok = attach_seed_ok
         self._attach_fallback = attach_fallback_spawn
         self._rebuild_plan = attach_rebuild_plan    # remote-disk reconcile
+        self.codec_level = int(codec_level)
+        self.codec_floor = int(codec_floor)
+        self._shm_probe = shm_probe     # transport-owned; offered in hello
+        self._mux = mux_conn            # shared connection (first spawn)
+        # the mux group's auto-spawned server is transport-owned: visible
+        # for liveness checks + crash drills, never killed by _teardown
+        self._shared_server = mux_conn.server_proc if mux_conn else None
+        self.shm_ok = False             # hello verified same-machine shm
         self._server_proc = None        # auto-spawned server (owned)
         self._server_ready = None
         self._outq: Optional[queue.Queue] = None
@@ -1858,60 +2234,73 @@ class SocketEndpoint(RemoteEndpoint):
 
     # ------------------------------------------------------------ spawn ---
     def _spawn_server(self) -> Tuple[str, int]:
-        """Launch a loopback ``shard_server`` process and return its bound
-        address (the child binds port 0 and reports the real port back)."""
-        import multiprocessing as mp
-
-        from repro.launch import shard_server
-        ctx = mp.get_context("spawn")
-        parent, child = ctx.Pipe()
-        proc = ctx.Process(target=shard_server.spawned_server_main,
-                           args=(child, "127.0.0.1"),
-                           name=f"cpr-shard-server-{self.shard}",
-                           daemon=True)
-        proc.start()
-        child.close()
-        if not parent.poll(self.connect_timeout):
-            proc.kill()
-            raise WriterProcError(
-                f"shard {self.shard} server failed to report its port")
-        host, port = parent.recv()
-        parent.close()
+        """Auto-spawn this shard's own loopback ``shard_server``."""
+        addr, proc = spawn_loopback_server(
+            self.connect_timeout, f"cpr-shard-server-{self.shard}")
         self._server_proc = proc
-        return host, port
+        return addr
 
     def _spawn(self, seed_tables, seed_accs, trainer_image):
-        addr = self.address
-        if addr is None:
-            addr = self._spawn_server()
-        try:
-            sock = _socket.create_connection(addr,
-                                             timeout=self.connect_timeout)
-        except OSError:
-            if not (self._attach_watermark is not None and
-                    self._attach_fallback and self.address is not None):
-                raise
-            # the recorded loopback server died with the previous
-            # coordinator (it owned the process): nothing is left to
-            # adopt, so degrade to a fresh auto-spawned writer seeded
-            # with the stamped image instead of poisoning the shard
-            self.address = None
-            self._attach_watermark = None
-            addr = self._spawn_server()
-            sock = _socket.create_connection(addr,
-                                             timeout=self.connect_timeout)
-        chan = SockChannel(sock)
         seed = ([np.asarray(t) for t in seed_tables],
                 [np.asarray(a) for a in seed_accs], trainer_image)
-        if self._attach_watermark is not None:
-            self._attach(chan, seed)
-            self._attach_watermark = None   # later respawns spawn fresh
+        if self._mux is not None:
+            # first spawn over a shared mux connection: the transport
+            # already ran the hello (codec + shm negotiation) for the
+            # whole group.  Later respawns open a dedicated connection —
+            # re-admission deliberately leaves the failed group.
+            mux, self._mux = self._mux, None
+            chan = mux.channel(self.shard)
+            self.shm_ok = mux.shm_ok
+            addr = mux.address
+            if self._attach_watermark is not None:
+                self._attach(chan, seed)
+                self._attach_watermark = None
+            else:
+                chan.send(("spawn", self.shard,
+                           list(self.spec.table_sizes),
+                           self.spec.n_shards, self.directory,
+                           seed[0], seed[1], seed[2], self.fsync_payloads,
+                           self.epoch,
+                           [b.tolist() for b in self.spec.boundaries]))
         else:
-            chan.send(("spawn", self.shard, list(self.spec.table_sizes),
-                       self.spec.n_shards, self.directory,
-                       seed[0], seed[1], seed[2], self.fsync_payloads,
-                       self.epoch,
-                       [b.tolist() for b in self.spec.boundaries]))
+            addr = self.address
+            if addr is None:
+                addr = self._spawn_server()
+            try:
+                sock = _socket.create_connection(
+                    addr, timeout=self.connect_timeout)
+            except OSError:
+                if not (self._attach_watermark is not None and
+                        self._attach_fallback and self.address is not None):
+                    raise
+                # the recorded loopback server died with the previous
+                # coordinator (it owned the process): nothing is left to
+                # adopt, so degrade to a fresh auto-spawned writer seeded
+                # with the stamped image instead of poisoning the shard
+                self.address = None
+                self._attach_watermark = None
+                addr = self._spawn_server()
+                sock = _socket.create_connection(
+                    addr, timeout=self.connect_timeout)
+            chan = SockChannel(sock)
+            if self.codec_level or self._shm_probe is not None:
+                hello = client_hello(
+                    chan, self.epoch, codec_level=self.codec_level,
+                    codec_floor=self.codec_floor,
+                    shm_probe=(self._shm_probe
+                               if is_loopback_address(addr) else None),
+                    timeout=self.connect_timeout)
+                self.shm_ok = bool(hello.get("shm"))
+            if self._attach_watermark is not None:
+                self._attach(chan, seed)
+                self._attach_watermark = None   # later respawns spawn fresh
+            else:
+                chan.send(("spawn", self.shard,
+                           list(self.spec.table_sizes),
+                           self.spec.n_shards, self.directory,
+                           seed[0], seed[1], seed[2], self.fsync_payloads,
+                           self.epoch,
+                           [b.tolist() for b in self.spec.boundaries]))
         self.effective_address = tuple(addr)
         self._chan = chan
         self._outq = queue.Queue(maxsize=SUBMIT_QUEUE_DEPTH)
@@ -2044,6 +2433,8 @@ class SocketEndpoint(RemoteEndpoint):
     def _alive(self) -> bool:
         if self._server_proc is not None:
             return self._server_proc.is_alive()
+        if self._shared_server is not None:
+            return self._shared_server.is_alive()
         return True                     # external server: trust the stream
 
     def _send_raw(self, msg):
@@ -2065,7 +2456,7 @@ class SocketEndpoint(RemoteEndpoint):
         unanswered for ``heartbeat_timeout``."""
         if self._exc is not None:
             return
-        if self._server_proc is not None and not self._server_proc.is_alive():
+        if not self._alive():
             self._latch("server process died (heartbeat)")
             return
         if self._io_lock.acquire(blocking=False):
@@ -2102,17 +2493,26 @@ class SocketEndpoint(RemoteEndpoint):
     # ------------------------------------------------------------- admin --
     def sever(self):
         """Failure drill: cut the TCP connection (simulates a network
-        partition) without touching the remote server."""
+        partition) without touching the remote server.  On a mux member
+        this severs the *shared* connection — the partition surface is the
+        connection, so exactly the co-resident shards are poisoned."""
         if self._chan is not None:
-            self._chan.close()
+            sever = getattr(self._chan, "sever_connection", None)
+            (sever if sever is not None else self._chan.close)()
 
     def kill(self):
-        """Hard-kill: SIGKILL the owned server process (crash drill), or
-        sever the connection to an external one."""
+        """Hard-kill: SIGKILL the owned server process (crash drill) —
+        for a mux member that is the shared group server, taking the whole
+        group down — or sever the connection to an external one."""
         if self._server_proc is not None:
             if self._server_proc.is_alive():
                 self._server_proc.kill()
             self._server_proc.join(timeout=5.0)
+            self._latch("server was killed")
+        elif self._shared_server is not None:
+            if self._shared_server.is_alive():
+                self._shared_server.kill()
+            self._shared_server.join(timeout=5.0)
             self._latch("server was killed")
         else:
             self.sever()
@@ -2120,10 +2520,13 @@ class SocketEndpoint(RemoteEndpoint):
 
     @property
     def pid(self) -> Optional[int]:
-        """The owned server's pid (None for external servers) — crash
-        drills SIGKILL it directly."""
-        return (self._server_proc.pid
-                if self._server_proc is not None else None)
+        """The owned (or mux-group-shared) server's pid (None for external
+        servers) — crash drills SIGKILL it directly."""
+        if self._server_proc is not None:
+            return self._server_proc.pid
+        if self._shared_server is not None:
+            return self._shared_server.pid
+        return None
 
     def respawn(self, seed_tables, seed_accs, trainer_image=None):
         """Re-admission: reconnect (re-launching the owned server if it
@@ -2132,6 +2535,8 @@ class SocketEndpoint(RemoteEndpoint):
         shard stays poisoned and can retry at the next boundary."""
         self._teardown(graceful=False)
         self._attach_watermark = None   # re-admission always spawns fresh
+        self._mux = None                # readmit leaves the old mux group
+        self._shared_server = None
         try:
             self._spawn(seed_tables, seed_accs, trainer_image)
         except BaseException as e:
@@ -2195,6 +2600,10 @@ class ShardTransport:
         """The effective per-shard writer addresses (socket transport
         only) — persisted in the coordinator's durable state so a standby
         coordinator can re-attach to the same writer fleet."""
+        return None
+
+    def wire_stats(self) -> Optional[Dict[str, int]]:
+        """Raw-vs-wire byte counters (socket transport only)."""
         return None
 
     def make_snapshot(self, seq: int, snap_t, snap_a) -> SnapshotRef:
@@ -2351,7 +2760,12 @@ class SocketTransport(ShardTransport):
                  attach_watermarks: Optional[Sequence[int]] = None,
                  attach_seed_ok: Optional[Sequence[bool]] = None,
                  attach_fallback_spawn: Optional[Sequence[bool]] = None,
-                 attach_rebuild_plans: Optional[Sequence] = None):
+                 attach_rebuild_plans: Optional[Sequence] = None,
+                 codec_level: int = 0,
+                 codec_floor: int = CODEC_FLOOR_BYTES,
+                 mux: bool = False,
+                 mux_group: int = 0,
+                 shm_handoff: bool = True):
         super().__init__(epoch=epoch)
         if addresses is not None and len(addresses) != spec.n_shards:
             raise ValueError(
@@ -2361,7 +2775,42 @@ class SocketTransport(ShardTransport):
         self.connect_timeout = connect_timeout
         self.submit_timeout = submit_timeout
         self.heartbeat_timeout = heartbeat_timeout
+        self.codec_level = int(codec_level)
+        self.codec_floor = int(codec_floor)
+        self.shm_handoff = bool(shm_handoff)
+        self._shm_probe: Optional[ShmProbe] = None
+        if self.shm_handoff:
+            try:
+                self._shm_probe = ShmProbe()
+            except (OSError, ValueError):
+                self._shm_probe = None  # no usable /dev/shm: stream slices
         self._ranges = self._ranges_for(spec)
+        self._mux_conns: List[MuxConnection] = []
+        self._owned_group_servers: List = []
+        # multiplexing: group shards onto shared connections.  Attach
+        # (coordinator failover) always adopts per-shard — the parked
+        # sessions are connection-agnostic, and per-shard handshakes keep
+        # the takeover path identical across topologies.
+        mux_for: Dict[int, MuxConnection] = {}
+        if attach_watermarks is None:
+            for group in self._mux_groups(spec.n_shards, addresses,
+                                          mux, mux_group):
+                addr = addresses[group[0]] if addresses else None
+                proc = None
+                if addr is None:
+                    addr, proc = spawn_loopback_server(
+                        connect_timeout, f"cpr-shard-server-g{group[0]}")
+                    self._owned_group_servers.append(proc)
+                conn = MuxConnection(
+                    addr, epoch=epoch, connect_timeout=connect_timeout,
+                    codec_level=self.codec_level,
+                    codec_floor=self.codec_floor,
+                    shm_probe=(self._shm_probe
+                               if is_loopback_address(addr) else None),
+                    server_proc=proc)
+                self._mux_conns.append(conn)
+                for j in group:
+                    mux_for[j] = conn
         self.endpoints = [
             SocketEndpoint(j, spec, seeds[j][0], seeds[j][1],
                            trainer_image=seeds[j][2],
@@ -2385,8 +2834,37 @@ class SocketTransport(ShardTransport):
                            attach_rebuild_plan=(
                                attach_rebuild_plans[j]
                                if attach_rebuild_plans is not None
-                               else None))
+                               else None),
+                           codec_level=self.codec_level,
+                           codec_floor=self.codec_floor,
+                           shm_probe=self._shm_probe,
+                           mux_conn=mux_for.get(j))
             for j in range(spec.n_shards)]
+
+    @staticmethod
+    def _mux_groups(n_shards: int, addresses, mux: bool,
+                    mux_group: int) -> List[List[int]]:
+        """Shard groups sharing one connection.  Explicit addresses:
+        consecutive runs of the same (host, port) — the ``host:port*k``
+        expansion from train.py.  Auto-spawn: chunks of ``mux_group``
+        shards per loopback server.  Singleton groups keep the plain
+        per-shard path."""
+        groups: List[List[int]] = []
+        if addresses is not None:
+            if not mux:
+                return []
+            run: List[int] = [0]
+            for j in range(1, n_shards):
+                if tuple(addresses[j]) == tuple(addresses[run[-1]]):
+                    run.append(j)
+                else:
+                    groups.append(run)
+                    run = [j]
+            groups.append(run)
+        elif mux_group and mux_group > 1:
+            groups = [list(range(lo, min(lo + mux_group, n_shards)))
+                      for lo in range(0, n_shards, mux_group)]
+        return [g for g in groups if len(g) > 1]
 
     @staticmethod
     def _ranges_for(spec: EmbShardSpec):
@@ -2402,7 +2880,10 @@ class SocketTransport(ShardTransport):
                               connect_timeout=self.connect_timeout,
                               submit_timeout=self.submit_timeout,
                               heartbeat_timeout=self.heartbeat_timeout,
-                              epoch=self.epoch)
+                              epoch=self.epoch,
+                              codec_level=self.codec_level,
+                              codec_floor=self.codec_floor,
+                              shm_probe=self._shm_probe)
 
     def resize_fleet(self, spec, seeds, shard_dirs, addresses=None):
         # the per-shard slice ranges feed every later SliceSnapshot: swap
@@ -2416,7 +2897,44 @@ class SocketTransport(ShardTransport):
                 for ep in self.endpoints]
 
     def _make_snapshot(self, seq, snap_t, snap_a):
+        shm_shards = [j for j, ep in enumerate(self.endpoints)
+                      if getattr(ep, "shm_ok", False) and ep.error is None]
+        if shm_shards:
+            try:
+                return ShmHandoffSnapshot(seq, snap_t, snap_a,
+                                          self._ranges, shm_shards)
+            except (OSError, ValueError):
+                pass                    # no usable /dev/shm: stream slices
         return SliceSnapshot(seq, snap_t, snap_a, self._ranges)
+
+    def wire_stats(self) -> Dict[str, int]:
+        """Raw-vs-wire byte totals summed over the fleet's live channels
+        (mux members share one channel — counted once)."""
+        chans: Dict[int, SockChannel] = {}
+        for ep in self.endpoints:
+            ch = getattr(ep, "_chan", None)
+            if isinstance(ch, _MuxChan):
+                ch = ch._conn._chan
+            if isinstance(ch, SockChannel):
+                chans[id(ch)] = ch
+        for conn in self._mux_conns:
+            chans[id(conn._chan)] = conn._chan
+        out = {"raw_sent": 0, "wire_sent": 0, "raw_rcvd": 0, "wire_rcvd": 0}
+        for ch in chans.values():
+            for k, v in ch.wire_stats().items():
+                out[k] += v
+        return out
+
+    def close(self):
+        super().close()
+        for proc in self._owned_group_servers:
+            if proc.is_alive():
+                proc.kill()
+            proc.join(timeout=5.0)
+        self._owned_group_servers = []
+        if self._shm_probe is not None:
+            self._shm_probe.close()
+            self._shm_probe = None
 
 
 def make_transport(name: str, spec: EmbShardSpec, seeds, shard_dirs,
@@ -2438,6 +2956,8 @@ def make_transport(name: str, spec: EmbShardSpec, seeds, shard_dirs,
                                "submit_timeout", "heartbeat_timeout",
                                "attach_watermarks", "attach_seed_ok",
                                "attach_fallback_spawn",
-                               "attach_rebuild_plans")
+                               "attach_rebuild_plans",
+                               "codec_level", "codec_floor",
+                               "mux", "mux_group", "shm_handoff")
           if k in opts}
     return SocketTransport(spec, seeds, shard_dirs, **kw, **common)

@@ -12,6 +12,8 @@ import jax
 from repro.kernels import embedding_bag as _eb
 from repro.kernels import flash_attention as _fa
 from repro.kernels import rglru_scan as _rg
+from repro.kernels import row_hash as _rh
+from repro.kernels import ssu_dedupe as _sd
 from repro.kernels import tracker_select as _ts
 
 
@@ -45,3 +47,22 @@ def tracker_select(counts, indices, k: int, seg_size: int = 512):
     """Fused MFU count-update + segment-wise top-k row selection."""
     return _ts.tracker_select(counts, indices, k, seg_size=seg_size,
                               interpret=_interpret())
+
+
+def autotune_seg_size(n_rows: int, k: int, **kw) -> int:
+    """Measured lane-aligned ``seg_size`` choice for ``tracker_select``."""
+    return _ts.autotune_seg_size(n_rows, k, interpret=_interpret(), **kw)
+
+
+def row_hash(values, acc_values) -> "np.ndarray":
+    """FNV-1a per-row delta-save hash -> (n,) uint64 numpy array.
+
+    Always interpret mode: the 64-bit FNV state has no Mosaic lowering
+    yet (TPU int lanes are 32-bit; a limb split is the ROADMAP item)."""
+    return _rh.row_hash(values, acc_values, interpret=True)
+
+
+def ssu_dedupe_evict(buf, cand, scores):
+    """Fused SSU reservoir dedupe + random-evict (sorted int32 buffer)."""
+    return _sd.ssu_dedupe_evict(buf, cand, scores,
+                                interpret=_interpret())

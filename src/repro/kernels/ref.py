@@ -67,6 +67,66 @@ def tracker_select(counts, indices, k: int, seg_size: int = 512):
     return ids, padded[:N]
 
 
+_FNV_OFFSET = np.uint64(14695981039346656037)
+_FNV_PRIME = np.uint64(1099511628211)
+_SSU_EMPTY = np.iinfo(np.int32).max
+
+
+def rows_to_words(values, acc_values):
+    """Host-side staging shared by the FNV oracle and the Pallas kernel:
+    each row's bytes (values, then accs), zero-padded to 8-byte
+    alignment, viewed as native-endian uint64 words.  Returns (n, m)
+    uint64 with n = rows; only call with n > 0."""
+    n = np.asarray(values).shape[0]
+    cols = []
+    for part in (values, acc_values):
+        b = np.ascontiguousarray(part).reshape(n, -1).view(np.uint8)
+        pad = -b.shape[1] % 8
+        if pad:
+            b = np.pad(b, ((0, 0), (0, pad)))
+        cols.append(np.ascontiguousarray(b).view(np.uint64))
+    return np.concatenate(cols, axis=1)
+
+
+def row_hash(values, acc_values):
+    """Numpy FNV-1a-per-row reference (exact-match target): hash each
+    row's value bytes then acc bytes as 64-bit words.  Matches
+    ``repro.core.sharded_checkpoint.row_hash`` bit for bit."""
+    n = np.asarray(values).shape[0]
+    h = np.full(n, _FNV_OFFSET, np.uint64)
+    if n == 0:
+        return h
+    w = rows_to_words(values, acc_values)
+    with np.errstate(over="ignore"):
+        for i in range(w.shape[1]):
+            h = (h ^ w[:, i]) * _FNV_PRIME
+    return h
+
+
+def ssu_dedupe_evict(buf, cand, scores):
+    """Numpy SSU dedupe + random-evict reference (exact-match target).
+
+    buf:    (rn,) int32 sorted ascending, EMPTY-padded at the end.
+    cand:   (nc,) int32 deduped candidates (EMPTY-padded; see
+            ``trackers.ssu_update`` — the ``jnp.unique`` stays outside).
+    scores: (rn + nc,) float keep-scores for the sorted union (drawn by
+            the caller so the randomness stream stays outside the kernel).
+
+    Returns the new (rn,) sorted buffer: candidates already present are
+    dropped, then the rn best (lowest-score) live entries survive.
+    """
+    buf = np.asarray(buf, np.int32)
+    cand = np.asarray(cand, np.int32)
+    scores = np.asarray(scores)
+    rn = buf.shape[0]
+    present = (cand[:, None] == buf[None, :]).any(axis=1)
+    cand = np.where(present, _SSU_EMPTY, cand)
+    combined = np.sort(np.concatenate([buf, cand]))
+    score = np.where(combined != _SSU_EMPTY, scores, np.inf)
+    keep = np.argsort(score, kind="stable")[:rn]
+    return np.sort(combined[keep])
+
+
 def rglru_scan(a, b, h0=None):
     """h_t = a_t * h_{t-1} + b_t over axis 1.  a, b: (B, S, w)."""
     B, S, w = a.shape

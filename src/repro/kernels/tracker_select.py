@@ -25,14 +25,23 @@ JAX ops — bit-identical to the Mosaic path and to ``ref.tracker_select``.
 from __future__ import annotations
 
 import functools
+import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
 
 from repro.kernels import compiler_params
 
 _INT32_MIN = jnp.iinfo(jnp.int32).min
+
+# TPU vector lane width: a Mosaic-lowered (1, seg) block lives in
+# (sublane, lane) tiles, so ``seg`` must be a lane-width multiple or the
+# compile fails with an opaque layout error.  interpret mode has no such
+# constraint (any seg runs), which is exactly how a blind-tuned seg_size
+# slips through CPU tests and breaks on hardware — hence the guard below.
+LANE_WIDTH = 128
 
 
 def _kernel(idx_ref, cnt_ref, out_idx_ref, out_cnt_ref, *, seg: int, k: int):
@@ -81,6 +90,11 @@ def tracker_select(counts, indices, k: int, seg_size: int = 512,
     counts = jnp.asarray(counts, jnp.int32)
     (N,) = counts.shape
     seg = min(seg_size, max(int(N), 1))
+    if not interpret:
+        assert seg % LANE_WIDTH == 0, (
+            f"seg_size {seg_size} -> effective segment {seg} is not a "
+            f"multiple of the {LANE_WIDTH}-wide TPU lane dim; pick a "
+            f"lane-aligned seg_size (see autotune_seg_size)")
     n_seg = -(-N // seg)                      # ceil
     k = min(k, seg)
     assert k >= 1, k
@@ -115,3 +129,49 @@ def tracker_select(counts, indices, k: int, seg_size: int = 512,
             dimension_semantics=("arbitrary",)),
     )(idx2d, cgrid)
     return ids.reshape(-1), new_counts.reshape(-1)[:N]
+
+
+def autotune_seg_size(n_rows: int, k: int,
+                      candidates=(128, 256, 512, 1024, 2048),
+                      pending: int = 512, trials: int = 3,
+                      interpret: bool = True, seed: int = 0) -> int:
+    """Pick ``seg_size`` by measurement instead of blind convention.
+
+    Runs ``tracker_select`` on a representative ``(n_rows, k)`` workload
+    for every **lane-aligned** candidate (misaligned candidates are
+    skipped — they could never ship to Mosaic) and returns the one with
+    the best min-over-``trials`` wall time.  Measurable today in
+    interpret mode (relative ranking tracks the O(seg·k) scan cost) and
+    the same harness times the Mosaic path on TPU unchanged.
+
+    The chosen value is what ``CPRManager`` surfaces in ``report()`` when
+    configured with ``seg_size="auto"``.
+    """
+    rng = np.random.default_rng(seed)
+    n_rows = max(int(n_rows), 1)
+    counts = jnp.asarray(rng.integers(0, 64, size=n_rows, dtype=np.int32))
+    idx = jnp.asarray(
+        rng.integers(0, n_rows, size=max(1, min(n_rows, pending)),
+                     dtype=np.int32))
+    best_seg, best_t = None, None
+    for seg in candidates:
+        if seg % LANE_WIDTH or (seg > n_rows and best_seg is not None):
+            continue
+        kk = max(1, min(int(k), seg))
+        ids, nc = tracker_select(counts, idx, kk, seg_size=seg,
+                                 interpret=interpret)
+        jax.block_until_ready(nc)             # compile outside the clock
+        t = None
+        for _ in range(max(1, trials)):
+            t0 = time.monotonic()
+            ids, nc = tracker_select(counts, idx, kk, seg_size=seg,
+                                     interpret=interpret)
+            jax.block_until_ready(nc)
+            dt = time.monotonic() - t0
+            t = dt if t is None else min(t, dt)
+        if best_t is None or t < best_t:
+            best_seg, best_t = seg, t
+    if best_seg is None:
+        raise ValueError(f"no lane-aligned seg_size candidate in "
+                         f"{tuple(candidates)}")
+    return best_seg

@@ -61,12 +61,14 @@ fs), or ship the shard directories before running ``load_latest``
 from __future__ import annotations
 
 import argparse
+import queue
 import socket
 import threading
 from typing import Dict, Optional
 
 from repro.core.checkpoint import EmbShardSpec
-from repro.core.transport import SockChannel, WriterSession
+from repro.core.transport import (SockChannel, WriterSession,
+                                  verify_shm_probe)
 
 
 class SessionRegistry:
@@ -172,10 +174,94 @@ def _serve_attach(chan: SockChannel, registry: SessionRegistry, msg):
     session.serve(chan, gen)
 
 
+class _ServerVirtChan:
+    """Server side of one shard's virtual channel on a multiplexed
+    connection: ``recv`` drains an inbox fed by the connection's demux
+    loop, ``send`` wraps the reply in the ("mx", shard, frame) envelope
+    (the shared channel's send lock serializes members).  Presents the
+    same surface as ``SockChannel`` to the unchanged ``WriterSession``
+    serve loop — so one shard blocked in a long apply cannot
+    head-of-line-block a peer's DRAIN ack."""
+
+    _EOF = object()
+
+    def __init__(self, chan: SockChannel, shard: int):
+        self._chan = chan
+        self.shard = shard
+        self._inbox: "queue.Queue" = queue.Queue()
+
+    def deliver(self, msg):
+        self._inbox.put(msg)
+
+    def deliver_eof(self):
+        self._inbox.put(self._EOF)
+
+    def recv(self):
+        msg = self._inbox.get()
+        if msg is self._EOF:
+            self._inbox.put(self._EOF)      # EOF is sticky
+            raise EOFError("mux connection closed")
+        return msg
+
+    def send(self, msg):
+        self._chan.send(("mx", self.shard, msg))
+
+    def close(self):
+        pass                                # lifetime == the connection's
+
+
+def _serve_virtual(vchan: _ServerVirtChan, registry: SessionRegistry):
+    """One shard's serve loop on a multiplexed connection — the first
+    inner frame is the ordinary ``spawn`` / ``attach``."""
+    try:
+        msg = vchan.recv()
+    except EOFError:
+        return
+    if msg[0] == "spawn":
+        _serve_spawn(vchan, registry, msg)
+    elif msg[0] == "attach":
+        _serve_attach(vchan, registry, msg)
+
+
+def _serve_mux(chan: SockChannel, registry: SessionRegistry):
+    """Demux loop for one multiplexed connection: routes each inbound
+    ("mx", shard, frame) envelope to that shard's virtual channel,
+    spinning up a per-shard serve thread on first sight.  Connection EOF
+    parks every shard riding it (exactly the co-resident set)."""
+    vchans: Dict[int, _ServerVirtChan] = {}
+    threads = []
+    try:
+        while True:
+            msg = chan.recv()
+            if not (isinstance(msg, tuple) and msg and msg[0] == "mx"):
+                continue                    # unknown envelope: drop
+            shard, inner = msg[1], msg[2]
+            vc = vchans.get(shard)
+            if vc is None:
+                vc = _ServerVirtChan(chan, shard)
+                vchans[shard] = vc
+                t = threading.Thread(target=_serve_virtual,
+                                     args=(vc, registry),
+                                     name=f"cpr-shard-mux-{shard}",
+                                     daemon=True)
+                threads.append(t)
+                t.start()
+            vc.deliver(inner)
+    except (EOFError, OSError, ValueError):
+        pass
+    finally:
+        for vc in vchans.values():
+            vc.deliver_eof()
+        for t in threads:
+            t.join(timeout=5.0)
+
+
 def _handle_conn(sock: socket.socket, registry: SessionRegistry):
-    """One connection == one coordinator's view of one shard writer: read
-    the opening ``spawn`` / ``attach``, then run the apply loop until the
-    peer goes away (parking the session) or a successor supersedes it."""
+    """One connection == one coordinator's view of one shard writer (or,
+    multiplexed, of several): an optional ``hello`` negotiates the
+    per-frame codec / multiplexing / shm handoff, then the opening
+    ``spawn`` / ``attach`` runs the apply loop until the peer goes away
+    (parking the session) or a successor supersedes it."""
     chan = SockChannel(sock)
     try:
         msg = chan.recv()
@@ -183,6 +269,23 @@ def _handle_conn(sock: socket.socket, registry: SessionRegistry):
         chan.close()
         return
     try:
+        if msg[0] == "hello":
+            opts = msg[2] if len(msg) > 2 and msg[2] else {}
+            # shm handoff: prove we share the coordinator's machine by
+            # attaching its probe segment and matching the nonce
+            shm_ok = verify_shm_probe(opts.get("shm"))
+            level = int(opts.get("codec_level") or 0)
+            if level:
+                floor = int(opts.get("codec_floor") or 0)
+                chan.enable_codec(level, floor or None)
+            chan.send(("hello-ok", {"shm": shm_ok}))
+            if opts.get("mux"):
+                _serve_mux(chan, registry)
+                return
+            try:
+                msg = chan.recv()
+            except (EOFError, OSError):
+                return
         if msg[0] == "spawn":
             _serve_spawn(chan, registry, msg)
         elif msg[0] == "attach":

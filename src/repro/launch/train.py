@@ -43,7 +43,8 @@ def train(cfg, steps=200, batch=8, seq=128, lr=0.005, mode="cpr-mfu",
           delta_saves=None, n_emb=8, resume=False, writer_procs=False,
           readmit=False, transport=None, shard_addrs=None,
           heartbeat_interval=None, readmit_backoff=0.0, attach=False,
-          resize_at=None, lease_ttl=None, parity_group_size=0):
+          resize_at=None, lease_ttl=None, parity_group_size=0,
+          hash_backend="host", seg_size=512, transport_options=None):
     """Returns (final_params, history dict)."""
     assert cfg.causal and cfg.modality_frontend is None, \
         "LM driver needs a causal text model"
@@ -65,7 +66,9 @@ def train(cfg, steps=200, batch=8, seq=128, lr=0.005, mode="cpr-mfu",
                      heartbeat_interval=heartbeat_interval,
                      readmit_backoff=readmit_backoff, attach=attach,
                      lease_ttl=lease_ttl,
-                     parity_group_size=parity_group_size)
+                     parity_group_size=parity_group_size,
+                     hash_backend=hash_backend, seg_size=seg_size,
+                     transport_options=transport_options)
     if resume and checkpoint_dir:
         # warm start from the last consistent cycle on disk: embedding rows,
         # their optimizer rows, and the non-embedding trainer tree
@@ -119,7 +122,8 @@ def train(cfg, steps=200, batch=8, seq=128, lr=0.005, mode="cpr-mfu",
             tracker = {0: trk.mfu_update(tracker[0], batch["tokens"])}
         elif is_ssu:
             tracker = {0: trk.ssu_update(tracker[0], batch["tokens"],
-                                         mgr.ssu_period)}
+                                         mgr.ssu_period,
+                                         backend=mgr.tracker_backend)}
         return params, ostate, tracker, loss
 
     history = {"loss": [], "events": []}
@@ -208,7 +212,9 @@ def main():
                     help="comma-separated host:port list, one per shard, "
                          "of externally launched shard_server hosts "
                          "(socket transport; default: auto-spawn local "
-                         "loopback servers)")
+                         "loopback servers).  host:port*k assigns k "
+                         "consecutive shards to one server and carries "
+                         "them multiplexed over a single connection")
     ap.add_argument("--heartbeat-interval", type=float, default=None,
                     help="seconds between proactive writer liveness "
                          "probes (default: only discover dead writers at "
@@ -258,6 +264,23 @@ def main():
                          "groups once tracker stats identify them")
     ap.add_argument("--tracker-backend", choices=("host", "pallas"),
                     default="pallas")
+    ap.add_argument("--hash-backend", choices=("host", "pallas"),
+                    default="host",
+                    help="delta-save row-hash implementation: host numpy "
+                         "loop or the Pallas FNV-1a kernel (bit-exact)")
+    ap.add_argument("--seg-size", default="512",
+                    help="tracker_select segment width (lane-aligned int), "
+                         "or 'auto' to pick by measurement at startup "
+                         "(the choice surfaces in the report)")
+    ap.add_argument("--codec-level", type=int, default=0,
+                    help="zlib level for large socket-transport frames "
+                         "(0 = off); raw-vs-wire byte counters surface in "
+                         "the report")
+    ap.add_argument("--mux-group", type=int, default=0,
+                    help="multiplex auto-spawned socket writers in groups "
+                         "of this many shards per connection/server "
+                         "(0 = one connection per shard; explicit "
+                         "--shard-servers use host:port*k instead)")
     args = ap.parse_args()
     cfg = build_cfg(args)
     resize_at = None
@@ -268,11 +291,26 @@ def main():
                 step_s, n_s = part.split(":")
                 resize_at[int(step_s)] = int(n_s)
     shard_addrs = None
+    mux = False
     if args.shard_servers:
         shard_addrs = []
         for hp in args.shard_servers.split(","):
+            hp, star, mult = hp.partition("*")
             host, port = hp.rsplit(":", 1)
-            shard_addrs.append((host, int(port)))
+            k = int(mult) if star else 1
+            if k > 1:           # k shards ride one multiplexed connection
+                mux = True
+            shard_addrs.extend([(host, int(port))] * k)
+    transport_options = None
+    if args.codec_level or mux or args.mux_group:
+        transport_options = {}
+        if args.codec_level:
+            transport_options["codec_level"] = args.codec_level
+        if mux:
+            transport_options["mux"] = True
+        if args.mux_group:
+            transport_options["mux_group"] = args.mux_group
+    seg_size = "auto" if args.seg_size == "auto" else int(args.seg_size)
     _, hist = train(cfg, steps=args.steps, batch=args.batch, seq=args.seq,
                     lr=args.lr, mode=args.mode, n_failures=args.failures,
                     target_pls=args.target_pls,
@@ -288,7 +326,9 @@ def main():
                     attach=args.attach, resize_at=resize_at,
                     lease_ttl=args.lease_ttl,
                     parity_group_size=args.parity_group_size,
-                    tracker_backend=args.tracker_backend)
+                    tracker_backend=args.tracker_backend,
+                    hash_backend=args.hash_backend, seg_size=seg_size,
+                    transport_options=transport_options)
     r = hist["report"]
     o = r["overheads"]
     extra = ""

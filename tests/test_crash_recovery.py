@@ -355,6 +355,56 @@ def test_socket_server_killed_mid_save_rows_recovers_to_stamp(tmp_path):
         np.testing.assert_array_equal(la[t], orc_a[t])
 
 
+def test_socket_mux_codec_server_kill_poisons_group_recovers_to_stamp(
+        tmp_path):
+    """Compressed + multiplexed leg of the crash matrix: SIGKILL the
+    shared server hosting a mux group while compressed save traffic is in
+    flight.  Exactly the co-resident shards poison (the whole group rides
+    the dead server), the other group's cycle stamps, and recovery is
+    whole-slice v1-or-v2 per killed shard — never a torn mix, never a
+    half-inflated frame applied."""
+    tables, accs = make_state()
+    spec = EmbShardSpec(SIZES, 4)
+    fleet = new_fleet(tables, accs, spec, tmp_path, backend="socket",
+                      transport_options={"mux_group": 2, "codec_level": 6})
+    assert fleet.procs[0].pid == fleet.procs[1].pid    # group {0,1}
+    v1_t = [t + 1 for t in tables]
+    v1_a = [a + 1 for a in accs]
+    fleet.save_full(v1_t, v1_a, step=1)
+    fleet.fence()                                  # cycle 1: v1 stamped
+    wire = fleet.wire_stats
+    assert wire["wire_sent"] < wire["raw_sent"]    # codec live on the wire
+    v2_t = [t + 2 for t in tables]
+    v2_a = [a + 2 for a in accs]
+    fleet.save_full(v2_t, v2_a, step=2)
+    sigkill(fleet, 0)                              # the shared group server
+    try:
+        fleet.fence()                              # cycle 2: group {2,3}
+    except ShardSaveError as e:
+        assert set(e.shard_errors) <= {0, 1}
+    assert {0, 1} <= set(fleet.failed)
+    assert 2 not in fleet.failed and 3 not in fleet.failed
+    fleet.close()
+
+    loaded = ShardedCheckpointWriter.load_latest(
+        str(tmp_path), tables, accs, spec)
+    lt, la, _ = loaded.restore_all()
+    for t in range(len(SIZES)):
+        for j in range(4):
+            lo, hi = spec.shard_range(t, j)
+            got_t, got_a = lt[t][lo:hi], la[t][lo:hi]
+            if j >= 2:
+                np.testing.assert_array_equal(got_t, v2_t[t][lo:hi])
+                np.testing.assert_array_equal(got_a, v2_a[t][lo:hi])
+            else:
+                is_v1 = np.array_equal(got_t, v1_t[t][lo:hi]) and \
+                    np.array_equal(got_a, v1_a[t][lo:hi])
+                is_v2 = np.array_equal(got_t, v2_t[t][lo:hi]) and \
+                    np.array_equal(got_a, v2_a[t][lo:hi])
+                assert is_v1 or is_v2, \
+                    f"torn image on killed mux shard {j} (table {t})"
+
+
 def test_socket_severed_mid_drain_recovers_to_last_stamp(tmp_path):
     """Socket transport: cut shard 1's TCP connection while the DRAIN
     barrier is in flight (saves still queued).  Only that shard is

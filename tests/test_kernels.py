@@ -114,3 +114,103 @@ def test_rglru_block_invariance(B, sblocks, wblocks):
     blocked = ops.rglru_scan(a, b, block_s=32, block_w=32)
     np.testing.assert_allclose(np.asarray(full), np.asarray(blocked),
                                rtol=1e-5, atol=1e-5)
+
+
+# ------------------------------------------------------ FNV-1a row hash ----
+@pytest.mark.parametrize("n,d", [
+    (0, 8),       # empty shard slice
+    (1, 1), (7, 3), (257, 5), (1000, 16),
+    (5, 0),       # zero-column values: rows hash the acc bytes only
+])
+def test_row_hash_kernel_bit_exact(n, d):
+    """The Pallas FNV kernel is an exact-match port: uint64-for-uint64
+    against both the numpy oracle and the checkpoint writer's host loop,
+    on every shape class a shard slice can take."""
+    from repro.core.sharded_checkpoint import row_hash as host_row_hash
+    rng = np.random.default_rng(n * 31 + d)
+    v = rng.normal(size=(n, d)).astype(np.float32)
+    a = np.abs(rng.normal(size=n)).astype(np.float32)
+    want = ref.row_hash(v, a)
+    got = ops.row_hash(v, a)
+    assert got.dtype == np.uint64 and got.shape == (n,)
+    np.testing.assert_array_equal(got, want)
+    np.testing.assert_array_equal(got, host_row_hash(v, a))
+
+
+def test_row_hash_zero_byte_rows_hash_to_offset_basis():
+    from repro.kernels.row_hash import FNV_OFFSET
+    v = np.zeros((4, 0), np.float32)
+    a = np.zeros((4, 0), np.float32)
+    np.testing.assert_array_equal(ops.row_hash(v, a),
+                                  np.full(4, FNV_OFFSET, np.uint64))
+
+
+def test_row_hash_block_invariance():
+    """Result is independent of the grid blocking (padding rows are cut)."""
+    from repro.kernels import row_hash as rh
+    rng = np.random.default_rng(11)
+    v = rng.normal(size=(300, 9)).astype(np.float32)
+    a = rng.normal(size=300).astype(np.float32)
+    full = rh.row_hash(v, a, block_rows=1024)
+    blocked = rh.row_hash(v, a, block_rows=64)   # 300 -> 5 blocks, padded
+    np.testing.assert_array_equal(full, blocked)
+
+
+# ------------------------------------------------------- SSU dedupe/evict ---
+def test_ssu_dedupe_evict_matches_numpy_oracle():
+    from repro.kernels.ssu_dedupe import EMPTY
+    rng = np.random.default_rng(5)
+    rn, nc = 16, 12
+    buf = np.sort(rng.choice(1000, size=rn, replace=False)).astype(np.int32)
+    buf[rn - 3:] = EMPTY                    # EMPTY-padded tail
+    cand = np.full(nc, EMPTY, np.int32)
+    cand[:6] = rng.choice(1000, size=6, replace=False)
+    cand[0] = buf[0]                        # one duplicate to drop
+    scores = rng.uniform(size=rn + nc).astype(np.float32)
+    got = np.asarray(ops.ssu_dedupe_evict(buf, cand, scores))
+    want = ref.ssu_dedupe_evict(buf, cand, scores)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_ssu_update_backend_parity_bit_identical():
+    """trackers.ssu_update draws the eviction scores before branching, so
+    host and pallas backends walk the same PRNG stream and must agree bit
+    for bit across rounds."""
+    from repro.core import trackers as trk
+    sh = trk.ssu_init(32, seed=3)
+    sp = trk.ssu_init(32, seed=3)
+    rng = np.random.default_rng(9)
+    for k in range(6):
+        idx = jnp.asarray(rng.integers(0, 200, size=40, dtype=np.int32))
+        sh = trk.ssu_update(sh, idx, period=2, backend="host")
+        sp = trk.ssu_update(sp, idx, period=2, backend="pallas")
+        np.testing.assert_array_equal(np.asarray(sh["buf"]),
+                                      np.asarray(sp["buf"]),
+                                      err_msg=f"round {k}")
+        np.testing.assert_array_equal(np.asarray(sh["key"]),
+                                      np.asarray(sp["key"]))
+
+
+# ---------------------------------------------- tracker_select lane guard ---
+def test_tracker_select_rejects_misaligned_seg_on_mosaic_path():
+    """A seg that is not a lane-width multiple can never compile through
+    Mosaic — the guard fails fast at trace time instead of shipping a
+    config that only works in interpret mode."""
+    from repro.kernels import tracker_select as ts
+    counts = jnp.zeros(1000, jnp.int32)
+    idx = jnp.zeros(0, jnp.int32)
+    with pytest.raises(AssertionError, match="lane"):
+        ts.tracker_select(counts, idx, 2, seg_size=100, interpret=False)
+    # interpret mode has no layout constraint: any seg runs
+    ids, nc = ts.tracker_select(counts, idx, 2, seg_size=100,
+                                interpret=True)
+    assert nc.shape == (1000,)
+
+
+def test_autotune_seg_size_picks_lane_aligned_candidate():
+    from repro.kernels import tracker_select as ts
+    seg = ts.autotune_seg_size(4096, 8, candidates=(100, 128, 256),
+                               trials=1)
+    assert seg in (128, 256)
+    with pytest.raises(ValueError):
+        ts.autotune_seg_size(4096, 8, candidates=(100, 200), trials=1)

@@ -603,6 +603,36 @@ def test_backend_parity_across_all_transports(tmp_path):
         assert _strip_times(man) == _strip_times(ref_man), name
 
 
+def test_socket_parity_codec_mux_and_shm_handoff(tmp_path):
+    """The wire options are carriage, not content: the same schedule over
+    the socket transport with per-frame compression, multiplexed shard
+    groups, shm full-handoff, streamed slices, or all combined must land
+    byte-identical manifests (modulo timestamps) and images."""
+    tables, accs = make_state()
+    spec = EmbShardSpec(SIZES, 4)
+    variants = {
+        "plain": {"shm_handoff": False},
+        "shm": None,                              # default: probe + handoff
+        "codec": {"codec_level": 6, "codec_floor": 64},
+        "mux": {"mux_group": 2, "shm_handoff": False},
+        "all": {"mux_group": 2, "codec_level": 6, "codec_floor": 64},
+    }
+    results = {
+        name: _drive_parity_fleet(tmp_path, name, spec, tables, accs,
+                                  backend="socket", transport_options=opts)
+        for name, opts in variants.items()}
+    ref_img, ref_stats, ref_man = results["plain"]
+    for name in ("shm", "codec", "mux", "all"):
+        img, stats, man = results[name]
+        for t in range(len(SIZES)):
+            np.testing.assert_array_equal(ref_img[0][t], img[0][t],
+                                          err_msg=f"{name} tables[{t}]")
+            np.testing.assert_array_equal(ref_img[1][t], img[1][t],
+                                          err_msg=f"{name} accs[{t}]")
+        assert stats == ref_stats, name
+        assert _strip_times(man) == _strip_times(ref_man), name
+
+
 def test_pipe_parity_shm_vs_spool_snapshots(tmp_path):
     """The zero-copy shared-memory save_full path and the spool-file
     fallback must be indistinguishable on disk: byte-identical manifests

@@ -17,11 +17,12 @@ import numpy as np
 import pytest
 
 from repro.core import EmbShardSpec, ShardedCheckpointWriter, ShardSaveError
-from repro.core.transport import (InprocTransport, PipeEndpoint, ShmSnapshot,
-                                  SliceSnapshot, SockChannel, SpoolSnapshot,
-                                  WriterSession, _apply_full_payload,
-                                  _ShardStore, normalize_transport, pack_msg,
-                                  unpack_msg)
+from repro.core.transport import (ZEROCOPY_MIN_BYTES, InprocTransport,
+                                  PipeEndpoint, ShmSnapshot, SliceSnapshot,
+                                  SockChannel, SpoolSnapshot, WriterSession,
+                                  _apply_full_payload, _ShardStore,
+                                  normalize_transport, pack_msg,
+                                  pack_msg_parts, unpack_msg)
 
 SIZES = (40, 17, 3)
 
@@ -85,6 +86,52 @@ def test_sock_channel_frames_large_and_interleaved_messages():
     ca.close()
     with pytest.raises(EOFError):
         cb.poll(0.2), cb.recv()
+    cb.close()
+
+
+def test_pack_msg_parts_large_arrays_are_zero_copy():
+    """Satellite: large contiguous arrays ride the frame as memoryviews of
+    their own buffers — no serialization copy on the submit path."""
+    arr = np.arange(ZEROCOPY_MIN_BYTES // 4, dtype=np.float32)  # at threshold
+    parts = pack_msg_parts(("rows", arr))
+    views = [p for p in parts if isinstance(p, memoryview)]
+    assert views, "no zero-copy part emitted for a large array"
+    assert any(np.shares_memory(np.frombuffer(v, np.uint8), arr)
+               for v in views), "large array payload was copied"
+    got = unpack_msg(b"".join(parts))          # joined parts decode as one
+    np.testing.assert_array_equal(got[1], arr)
+    # below the threshold the copy is cheaper than scatter-gather framing
+    small = np.arange(8, dtype=np.int32)
+    assert not any(isinstance(p, memoryview)
+                   for p in pack_msg_parts(("rows", small)))
+    np.testing.assert_array_equal(
+        unpack_msg(pack_msg(("rows", small)))[1], small)
+
+
+def test_sock_channel_codec_compresses_counts_and_interops():
+    """Per-frame zlib: large frames shrink on the wire, frames under the
+    floor ship raw, and a receiver that never negotiated a codec still
+    inflates flagged frames (the high length-prefix bit is stateless)."""
+    a, b = socket_mod.socketpair()
+    ca, cb = SockChannel(a, codec_level=6), SockChannel(b)  # rx codec-off
+    big = np.zeros((4000, 8), np.float32)       # compressible, over floor
+    ca.send(("full", 1, big))
+    assert cb.poll(5.0)
+    got = cb.recv()
+    assert got[0] == "full"
+    np.testing.assert_array_equal(got[2], big)
+    s = ca.wire_stats()
+    assert s["wire_sent"] < s["raw_sent"]       # compressed on the wire
+    r = cb.wire_stats()
+    assert r["raw_rcvd"] == s["raw_sent"]       # inflated back bit-exact
+    assert r["wire_rcvd"] == s["wire_sent"]
+    # below the size floor the frame ships raw: wire = raw + 8B prefix
+    raw0, wire0 = s["raw_sent"], s["wire_sent"]
+    ca.send(("ping", 1))
+    assert cb.poll(5.0) and cb.recv() == ("ping", 1)
+    s2 = ca.wire_stats()
+    assert s2["wire_sent"] - wire0 == (s2["raw_sent"] - raw0) + 8
+    ca.close()
     cb.close()
 
 
@@ -392,20 +439,29 @@ def test_writer_session_rejects_stale_epoch_commands():
 
 
 # ------------------------------------- partial-send channel poisoning -------
-def test_partial_send_poisons_channel_and_shard(tmp_path):
+@pytest.mark.parametrize("codec_level", [0, 6])
+def test_partial_send_poisons_channel_and_shard(tmp_path, codec_level):
     """Satellite bugfix: a timeout that interrupts ``sendall`` mid-frame
     leaves the connection desynchronized — it must be severed and never
     reused (reusing it would splice the next frame into the torn one and
-    corrupt the stream).  The shard is poisoned; the fleet fences on."""
+    corrupt the stream).  The shard is poisoned; the fleet fences on.
+    Parametrized over the wire codec: a tear mid-COMPRESSED-frame severs
+    exactly the same way (the inflate state never sees the torn tail)."""
     tables, accs = make_state()
     spec = EmbShardSpec(SIZES, 2)
+    opts = ({"codec_level": codec_level, "codec_floor": 64}
+            if codec_level else None)
     fleet = ShardedCheckpointWriter(tables, accs, spec,
                                     directory=str(tmp_path),
                                     backend="socket", delta_saves=False,
-                                    drain_timeout=15.0)
+                                    drain_timeout=15.0,
+                                    transport_options=opts)
     fleet.save_full([t + 1 for t in tables], [a + 1 for a in accs], step=1)
     fleet.fence()
     chan = fleet.procs[1]._chan
+    if codec_level:     # the stream really is compressed before the tear
+        s = chan.wire_stats()
+        assert s["wire_sent"] < s["raw_sent"]
     real_sock = chan._sock
     sendall_calls = {"n": 0}
 
@@ -504,6 +560,102 @@ def test_internal_timers_are_monotonic_not_wall_clock():
     report = run_analysis(rules=["time-source"])
     assert report.unsuppressed == [], "\n".join(
         f.render() for f in report.unsuppressed)
+
+
+# ---------------------------------------------------- multiplexing ----------
+def test_mux_groups_share_servers_and_match_per_conn_fleet(tmp_path):
+    """Tentpole: shards multiplexed in groups over shared connections /
+    servers must be observably identical to the one-connection-per-shard
+    fleet — byte-identical manifests (modulo timestamps) and images for
+    the same schedule — while running half the server processes."""
+    import json
+    from repro.core.checkpoint import resolve_run_dir
+    tables, accs = make_state()
+    spec = EmbShardSpec(SIZES, 4)
+    results = {}
+    for label, opts in (("per", None), ("mux", {"mux_group": 2})):
+        d = str(tmp_path / label)
+        fleet = ShardedCheckpointWriter(
+            [t.copy() for t in tables], [a.copy() for a in accs], spec,
+            directory=d, backend="socket", delta_saves=False,
+            transport_options=opts)
+        fleet.save_full([t + 1 for t in tables], [a + 1 for a in accs],
+                        step=1)
+        fleet.fence()
+        rows = np.arange(5)
+        fleet.save_rows(0, rows, np.full((5, 8), 9.0, np.float32),
+                        np.full(5, 9.0, np.float32), step=2)
+        fleet.fence()
+        imgs = fleet.restore_all()[:2]
+        n_servers = len({ep.pid for ep in fleet.transport.endpoints})
+        wire = fleet.wire_stats
+        fleet.close()
+        with open(os.path.join(resolve_run_dir(d), "manifest.json")) as f:
+            results[label] = (imgs, n_servers, wire, json.load(f))
+    (p_img, p_servers, p_wire, p_man) = results["per"]
+    (m_img, m_servers, m_wire, m_man) = results["mux"]
+    for t in range(len(SIZES)):
+        np.testing.assert_array_equal(p_img[0][t], m_img[0][t])
+        np.testing.assert_array_equal(p_img[1][t], m_img[1][t])
+    strip = lambda m: {**m, "events": [
+        {k: v for k, v in e.items() if k != "time"} for e in m["events"]]}
+    assert strip(p_man) == strip(m_man)
+    assert p_servers == 4 and m_servers == 2     # groups of 2 share a server
+    # counters live on the shared channels too (mx envelopes add a few
+    # bytes per frame, so only rough equality holds vs the per-conn fleet)
+    assert m_wire["raw_sent"] > 0 and m_wire["raw_rcvd"] > 0
+
+
+def test_mux_sever_poisons_exactly_coresident_shards(tmp_path):
+    """Severing a multiplexed connection poisons exactly the shards riding
+    it — its whole group, and nothing outside it."""
+    tables, accs = make_state()
+    spec = EmbShardSpec(SIZES, 4)
+    fleet = ShardedCheckpointWriter(tables, accs, spec,
+                                    directory=str(tmp_path),
+                                    backend="socket", delta_saves=False,
+                                    drain_timeout=15.0,
+                                    transport_options={"mux_group": 2})
+    fleet.save_full([t + 1 for t in tables], [a + 1 for a in accs], step=1)
+    fleet.fence()
+    fleet.procs[0].sever()                # group {0, 1} rides this conn
+    fleet.save_full([t + 2 for t in tables], [a + 2 for a in accs], step=2)
+    with pytest.raises(ShardSaveError) as ei:
+        fleet.fence()
+    assert sorted(ei.value.shard_errors) == [0, 1]
+    assert 2 not in fleet.failed and 3 not in fleet.failed
+    fleet.close()
+    lt, _, _ = ShardedCheckpointWriter.load_latest(
+        str(tmp_path), tables, accs, spec).restore_all()
+    for t in range(len(SIZES)):
+        for j, v in ((0, 1), (1, 1), (2, 2), (3, 2)):
+            lo, hi = spec.shard_range(t, j)
+            np.testing.assert_array_equal(lt[t][lo:hi],
+                                          (tables[t] + v)[lo:hi])
+
+
+def test_mux_kill_takes_down_the_shared_group_server(tmp_path):
+    """kill() on a mux member kills the group's shared server process —
+    honest group semantics: every co-resident shard poisons, the other
+    group stamps on."""
+    tables, accs = make_state()
+    spec = EmbShardSpec(SIZES, 4)
+    fleet = ShardedCheckpointWriter(tables, accs, spec,
+                                    directory=str(tmp_path),
+                                    backend="socket", delta_saves=False,
+                                    drain_timeout=15.0,
+                                    transport_options={"mux_group": 2})
+    assert fleet.procs[2].pid == fleet.procs[3].pid   # one server per group
+    assert fleet.procs[0].pid != fleet.procs[2].pid
+    fleet.save_full([t + 1 for t in tables], [a + 1 for a in accs], step=1)
+    fleet.fence()
+    fleet.kill_shard(2)
+    fleet.save_full([t + 2 for t in tables], [a + 2 for a in accs], step=2)
+    with pytest.raises(ShardSaveError) as ei:
+        fleet.fence()
+    assert sorted(set(ei.value.shard_errors) | {2}) == [2, 3]
+    assert 0 not in fleet.failed and 1 not in fleet.failed
+    fleet.close()
 
 
 # --------------------------------------------------- socket severance -------
