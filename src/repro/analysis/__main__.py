@@ -28,9 +28,16 @@ def main(argv=None) -> int:
                     help="write current unsuppressed findings as a "
                          "baseline and exit 0")
     ap.add_argument("--json", action="store_true", dest="as_json",
-                    help="machine-readable report on stdout")
+                    help="shorthand for --format json")
+    ap.add_argument("--format", choices=("text", "json", "sarif"),
+                    default=None,
+                    help="report format (default text; sarif is the "
+                         "GitHub code-scanning dialect)")
+    ap.add_argument("--output", default=None, metavar="PATH",
+                    help="write the report to PATH instead of stdout")
     ap.add_argument("--list-rules", action="store_true")
     args = ap.parse_args(argv)
+    fmt = args.format or ("json" if args.as_json else "text")
 
     if args.list_rules:
         for name in sorted(core.CHECKERS):
@@ -50,16 +57,25 @@ def main(argv=None) -> int:
               f"to {args.write_baseline}")
         return 0
 
-    if args.as_json:
-        json.dump(report.to_json(), sys.stdout, indent=2)
-        print()
-    else:
-        for f in report.findings:
-            print(f.render())
-        bad = len(report.unsuppressed)
-        print(f"{report.files_scanned} file(s), "
-              f"{len(report.findings)} finding(s), "
-              f"{bad} unsuppressed")
+    out = (open(args.output, "w", encoding="utf-8") if args.output
+           else sys.stdout)
+    try:
+        if fmt == "json":
+            json.dump(report.to_json(), out, indent=2)
+            out.write("\n")
+        elif fmt == "sarif":
+            json.dump(report.to_sarif(), out, indent=2)
+            out.write("\n")
+        else:
+            for f in report.findings:
+                print(f.render(), file=out)
+            bad = len(report.unsuppressed)
+            print(f"{report.files_scanned} file(s), "
+                  f"{len(report.findings)} finding(s), "
+                  f"{bad} unsuppressed", file=out)
+    finally:
+        if out is not sys.stdout:
+            out.close()
     return 0 if report.ok else 1
 
 

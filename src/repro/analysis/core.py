@@ -218,6 +218,55 @@ class Report:
             "findings": [dataclasses.asdict(f) for f in self.findings],
         }
 
+    def to_sarif(self) -> dict:
+        """SARIF 2.1.0 (the GitHub code-scanning dialect): one run, one
+        rule entry per registered checker, one result per finding.
+        Suppressed findings carry ``suppressions: [{kind: inSource}]``
+        so upload surfaces them as dismissed, not open."""
+        rule_ids = sorted({f.rule for f in self.findings}
+                          | set(CHECKERS.keys()))
+        rules = [{
+            "id": rid,
+            "shortDescription": {
+                "text": getattr(CHECKERS.get(rid), "description", rid)
+                or rid},
+        } for rid in rule_ids]
+        results = []
+        for f in self.findings:
+            result = {
+                "ruleId": f.rule,
+                "level": "note" if (f.suppressed or f.baselined)
+                         else "error",
+                "message": {"text": f.message},
+                "locations": [{
+                    "physicalLocation": {
+                        "artifactLocation": {"uri": f.path},
+                        "region": {"startLine": max(1, f.line)},
+                    },
+                }],
+            }
+            if f.suppressed:
+                result["suppressions"] = [{
+                    "kind": "inSource",
+                    "justification": f.suppress_reason or "no reason",
+                }]
+            elif f.baselined:
+                result["suppressions"] = [{"kind": "external"}]
+            results.append(result)
+        return {
+            "$schema": ("https://raw.githubusercontent.com/oasis-tcs/"
+                        "sarif-spec/master/Schemata/sarif-schema-2.1.0"
+                        ".json"),
+            "version": "2.1.0",
+            "runs": [{
+                "tool": {"driver": {
+                    "name": "repro-invariant-linter",
+                    "rules": rules,
+                }},
+                "results": results,
+            }],
+        }
+
     def baseline_records(self) -> List[dict]:
         keys = sorted({f.key for f in self.findings if not f.suppressed})
         return [{"rule": r, "path": p, "message": m} for (r, p, m) in keys]

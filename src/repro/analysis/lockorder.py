@@ -25,12 +25,16 @@ Notes and limits:
   one thread do add a self-edge — same-class nesting is exactly the
   ABBA-by-symmetry hazard.
 * Only locks constructed while installed are tracked; locks internal to
-  stdlib objects (queues, events, conditions) are untracked by the
-  source-file filter.
-* ``Condition.wait`` releases the underlying lock through private
-  methods the proxy forwards untracked; the held-stack is briefly stale
-  during a wait, which cannot create false edges because the waiting
-  thread acquires nothing while blocked.
+  stdlib objects (queues, events) are untracked by the source-file
+  filter.
+* ``threading.Condition`` constructed from repro source is wrapped in
+  :class:`_TrackedCondition`: its underlying lock is tracked like any
+  other, and ``wait()`` models the release/reacquire pair — the lock
+  leaves the held-stack while blocked and re-records ordering edges on
+  wakeup.  Without this, a thread that holds lock A while a *condition*
+  reacquires lock B on wakeup would hide an A->B edge (the
+  ABBA-via-condition hazard: ``_MuxChan`` inboxes are exactly this
+  shape).
 """
 from __future__ import annotations
 
@@ -38,6 +42,7 @@ import _thread
 import os
 import sys
 import threading
+import time
 from typing import Dict, List, Optional, Tuple
 
 
@@ -81,6 +86,75 @@ class _TrackedLock:
         return f"<tracked {self._inner!r} from {self.site}>"
 
 
+class _TrackedCondition:
+    """Proxy around a real Condition whose lock is a tracked proxy.
+
+    ``wait()`` is the interesting part: the real Condition releases and
+    reacquires the underlying lock through private fast paths the
+    sanitizer cannot see, so the proxy brackets the real wait with
+    explicit release/acquire notes.  While blocked, the lock is off the
+    thread's held-stack (true — wait released it); on wakeup the
+    reacquisition records ordering edges against everything else the
+    thread holds, exactly as a fresh ``acquire()`` would."""
+
+    def __init__(self, inner, lockp: _TrackedLock,
+                 san: "LockOrderSanitizer"):
+        self._inner = inner             # real Condition over the real lock
+        self._lockp = lockp             # tracked proxy over that same lock
+        self._san = san
+        self.site = lockp.site
+
+    def acquire(self, *args, **kw):
+        return self._lockp.acquire(*args, **kw)
+
+    def release(self):
+        self._lockp.release()
+
+    def __enter__(self):
+        self._lockp.acquire()
+        return self
+
+    def __exit__(self, *exc):
+        self._lockp.release()
+        return False
+
+    def wait(self, timeout=None):
+        self._san._note_release(self._lockp)
+        try:
+            return self._inner.wait(timeout)
+        finally:
+            self._san._note_acquire(self._lockp)
+
+    def wait_for(self, predicate, timeout=None):
+        # stdlib loop, re-expressed over the tracked wait()
+        endtime = None
+        waittime = timeout
+        result = predicate()
+        while not result:
+            if waittime is not None:
+                if endtime is None:
+                    endtime = time.monotonic() + waittime
+                else:
+                    waittime = endtime - time.monotonic()
+                    if waittime <= 0:
+                        break
+            self.wait(waittime)
+            result = predicate()
+        return result
+
+    def notify(self, n=1):
+        self._inner.notify(n)
+
+    def notify_all(self):
+        self._inner.notify_all()
+
+    def __getattr__(self, name):
+        return getattr(self._inner, name)
+
+    def __repr__(self):
+        return f"<tracked {self._inner!r} from {self.site}>"
+
+
 class LockOrderSanitizer:
     """Records per-thread lock nesting; detects acquisition-order cycles.
 
@@ -98,12 +172,30 @@ class LockOrderSanitizer:
         self._mu = _thread.allocate_lock()
         self._tls = threading.local()
         self._orig = None
+        self._orig_cond = None
         self.tracked_constructions = 0
 
     # -- wrapping -------------------------------------------------------
     def wrap(self, inner, site: str) -> _TrackedLock:
         self.tracked_constructions += 1
         return _TrackedLock(inner, site, self)
+
+    def wrap_condition(self, lock, site: str) -> _TrackedCondition:
+        """A tracked Condition: its lock joins the acquisition graph and
+        ``wait()``'s release/reacquire pair is modeled (see
+        :class:`_TrackedCondition`).  ``lock`` may be None (a fresh
+        RLock, stdlib default), an already-tracked lock, or a raw one."""
+        real_cond = (self._orig_cond if self._orig_cond is not None
+                     else threading.Condition)
+        if isinstance(lock, _TrackedLock):
+            lockp = lock
+        else:
+            if lock is None:
+                real_rlock = (self._orig[1] if self._orig is not None
+                              else threading.RLock)
+                lock = real_rlock()
+            lockp = self.wrap(lock, site)
+        return _TrackedCondition(real_cond(lockp._inner), lockp, self)
 
     def _site_of(self, frame) -> Optional[str]:
         fn = frame.f_code.co_filename.replace(os.sep, "/")
@@ -120,12 +212,15 @@ class LockOrderSanitizer:
         return f"{fn}:{frame.f_lineno}"
 
     def install(self):
-        """Patch threading.Lock/RLock to return tracked locks for
-        constructions originating in ``package`` source files."""
+        """Patch threading.Lock/RLock/Condition to return tracked
+        objects for constructions originating in ``package`` source
+        files."""
         if self._orig is not None:
             return
         real_lock, real_rlock = threading.Lock, threading.RLock
+        real_cond = threading.Condition
         self._orig = (real_lock, real_rlock)
+        self._orig_cond = real_cond
 
         def make(real):
             def factory():
@@ -135,14 +230,23 @@ class LockOrderSanitizer:
                 return self.wrap(real(), site)
             return factory
 
+        def cond_factory(lock=None):
+            site = self._site_of(sys._getframe(1))
+            if site is None:
+                return real_cond(lock)
+            return self.wrap_condition(lock, site)
+
         threading.Lock = make(real_lock)
         threading.RLock = make(real_rlock)
+        threading.Condition = cond_factory
 
     def uninstall(self):
         if self._orig is None:
             return
         threading.Lock, threading.RLock = self._orig
+        threading.Condition = self._orig_cond
         self._orig = None
+        self._orig_cond = None
 
     # -- recording ------------------------------------------------------
     def _held(self) -> List[_TrackedLock]:

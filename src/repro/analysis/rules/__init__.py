@@ -1,4 +1,4 @@
 """Project-specific invariant checkers.  Importing this package
 registers every rule with ``repro.analysis.core.CHECKERS``."""
 from repro.analysis.rules import (durability, epochs, exceptions,  # noqa: F401
-                                  locks, timesource)
+                                  locks, protocol, timesource)

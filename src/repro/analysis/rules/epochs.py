@@ -1,4 +1,4 @@
-"""epoch-threading rule: every frame carries the epoch; no protocol drift.
+"""epoch-threading rule: every frame carries the coordinator epoch.
 
 The coordinator-epoch fence (docs/recovery.md) only works if *every*
 coordinator→worker frame carries the coordinator epoch where the worker
@@ -7,21 +7,20 @@ expects it: command frames at index 1 (``WriterSession._handle`` reads
 the epoch is invisible to the stale-coordinator guard — a superseded
 coordinator could keep writing through it after a takeover.
 
-Two checks, both over tuple-literal frames constructed inside classes
-whose name ends with ``Endpoint`` (the coordinator-side senders):
+One check, over tuple-literal frames constructed inside classes whose
+name ends with ``Endpoint`` (the coordinator-side senders): every
+command frame's index-1 element (``spawn``: any element) must reference
+an ``epoch`` attribute/name.
 
-* **epoch field** — every command frame's index-1 element (``spawn``:
-  any element) must reference an ``epoch`` attribute/name;
-* **protocol drift** — every constructed frame kind must be handled
-  somewhere outside the Endpoint classes (the worker dispatch:
-  ``WriterSession._handle``, ``shard_server``), and every kind a
-  ``*Session`` dispatch handles must still have a constructor.  Adding
-  a frame type on one side only is exactly the bug this catches.
+The former *protocol drift* half of this rule (frame kinds constructed
+vs handled) is superseded by ``protocol-conformance``
+(``rules/protocol.py``), which checks kinds, arities, epoch slots, and
+cross-side completeness against the machine-readable wire spec.
 """
 from __future__ import annotations
 
 import ast
-from typing import Dict, Iterator, List, Sequence, Set, Tuple
+from typing import Dict, Iterator, List, Sequence, Tuple
 
 from repro.analysis.core import Checker, Finding, Source, names_in, register
 
@@ -42,22 +41,17 @@ def _mentions_epoch(node: ast.AST) -> bool:
 @register
 class EpochThreadingChecker(Checker):
     name = "epoch-threading"
-    description = ("coordinator frames carry the epoch at index 1; frame "
-                   "kinds stay in sync with the worker dispatch tables")
+    description = ("coordinator frames carry the epoch at index 1 "
+                   "(frame-kind drift lives in protocol-conformance)")
 
     def __init__(self):
         # kind -> [(relpath, lineno, epoch_ok)]
         self.sent: Dict[str, List[Tuple[str, int, bool]]] = {}
-        # kind -> [(relpath, lineno)], split by dispatch locality
-        self.handled: Set[str] = set()
-        self.session_handled: Dict[str, List[Tuple[str, int]]] = {}
 
     def check(self, src: Source) -> Iterator[Finding]:
         for node in ast.walk(src.tree):
             if isinstance(node, ast.Call):
                 self._collect_send(src, node)
-            elif isinstance(node, ast.Compare):
-                self._collect_handled(src, node)
         return iter(())
 
     # -- frame constructors (coordinator side) --------------------------
@@ -80,38 +74,7 @@ class EpochThreadingChecker(Checker):
         self.sent.setdefault(kind, []).append(
             (src.relpath, call.lineno, epoch_ok))
 
-    # -- dispatch tables (worker side) ----------------------------------
-    def _collect_handled(self, src: Source, cmp: ast.Compare):
-        left = cmp.comparators and cmp.left
-        is_kind_expr = (
-            (isinstance(left, ast.Name) and left.id in ("kind",))
-            or (isinstance(left, ast.Subscript)
-                and isinstance(left.slice, ast.Constant)
-                and left.slice.value == 0))
-        if not is_kind_expr or len(cmp.ops) != 1:
-            return
-        if not isinstance(cmp.ops[0], (ast.Eq, ast.In, ast.NotIn)):
-            return
-        rhs = cmp.comparators[0]
-        kinds: List[str] = []
-        if isinstance(rhs, ast.Constant) and isinstance(rhs.value, str):
-            kinds = [rhs.value]
-        elif isinstance(rhs, (ast.Tuple, ast.List, ast.Set)):
-            kinds = [e.value for e in rhs.elts
-                     if isinstance(e, ast.Constant)
-                     and isinstance(e.value, str)]
-        if not kinds:
-            return
-        cls = src.enclosing(cmp, ast.ClassDef)
-        if cls is not None and cls.name.endswith("Endpoint"):
-            return      # coordinator-side reply dispatch, not the workers
-        self.handled.update(kinds)
-        if cls is not None and "Session" in cls.name:
-            for k in kinds:
-                self.session_handled.setdefault(k, []).append(
-                    (src.relpath, cmp.lineno))
-
-    # -- cross-file reconciliation --------------------------------------
+    # -- reporting ------------------------------------------------------
     def finalize(self, sources: Sequence[Source]) -> Iterator[Finding]:
         for kind, sites in sorted(self.sent.items()):
             for relpath, lineno, epoch_ok in sites:
@@ -122,19 +85,3 @@ class EpochThreadingChecker(Checker):
                                  f"coordinator epoch at index 1: the "
                                  f"stale-coordinator guard cannot fence "
                                  f"this command"))
-                if kind not in self.handled:
-                    yield Finding(
-                        rule=self.name, path=relpath, line=lineno,
-                        message=(f"frame kind {kind!r} is constructed but "
-                                 f"no worker dispatch handles it: protocol "
-                                 f"drift between transport and "
-                                 f"shard_server"))
-        for kind, sites in sorted(self.session_handled.items()):
-            if kind in self.sent:
-                continue
-            for relpath, lineno in sites:
-                yield Finding(
-                    rule=self.name, path=relpath, line=lineno,
-                    message=(f"dispatch handles frame kind {kind!r} but no "
-                             f"endpoint constructs it: dead protocol arm "
-                             f"or a renamed frame left behind"))

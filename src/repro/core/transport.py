@@ -134,6 +134,10 @@ from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
+# the machine-readable wire spec (stdlib-only, safe for workers) is the
+# single source of truth for frame shapes and the max frame size
+from repro.analysis.protocol.spec import MAX_FRAME_BYTES
+from repro.analysis.protocol.spec import violation as _spec_violation
 from repro.core.checkpoint import (AsyncApplier, EmbShardSpec, _leaves,
                                    load_trainer_tree, save_trainer_tree)
 
@@ -192,6 +196,19 @@ class StaleEpochError(WriterProcError):
     the *coordinator*: once latched, this coordinator must not stamp (its
     fence's ownership check will refuse) — the writer fleet now belongs to
     the successor."""
+
+
+class ProtocolError(ValueError):
+    """An inbound wire frame violates the protocol spec: a hostile or
+    corrupt length prefix (over ``MAX_FRAME_BYTES``), a truncated body,
+    a malformed tag stream, or a compression bomb.  The channel that
+    produced it is desynchronized by definition and must be severed —
+    never retried.
+
+    Subclasses ``ValueError`` so the demux/reader loops that already
+    treat a malformed frame as connection death (``except (EOFError,
+    OSError, ValueError)``) handle it without new plumbing, while
+    callers that care can still distinguish it."""
 
 
 # =========================================================================
@@ -278,6 +295,18 @@ def pack_msg(o) -> bytes:
     return b"".join(pack_msg_parts(o))
 
 
+def _need(buf: memoryview, pos: int, n: int, what: str) -> None:
+    """Truncation guard: a length field inside the frame must never
+    claim more bytes than the frame actually holds.  Without this a
+    hostile u32/u64 length makes the decoder return silently-short data
+    (or loop over billions of phantom elements); with it the frame dies
+    as a clean :class:`ProtocolError` before any allocation."""
+    if n < 0 or n > len(buf) - pos:
+        raise ProtocolError(
+            f"wire frame truncated: {what} claims {n} bytes but only "
+            f"{len(buf) - pos} remain")
+
+
 def _unpack_from(buf: memoryview, pos: int):
     tag = buf[pos:pos + 1].tobytes()
     pos += 1
@@ -294,11 +323,13 @@ def _unpack_from(buf: memoryview, pos: int):
     if tag in (b"s", b"b"):
         n = _U32.unpack_from(buf, pos)[0]
         pos += 4
+        _need(buf, pos, n, "str/bytes length")
         raw = buf[pos:pos + n].tobytes()
         return (raw.decode() if tag == b"s" else raw), pos + n
     if tag in (b"t", b"l"):
         n = _U32.unpack_from(buf, pos)[0]
         pos += 4
+        _need(buf, pos, n, "collection element count")  # >=1 byte each
         items = []
         for _ in range(n):
             v, pos = _unpack_from(buf, pos)
@@ -307,6 +338,7 @@ def _unpack_from(buf: memoryview, pos: int):
     if tag == b"d":
         n = _U32.unpack_from(buf, pos)[0]
         pos += 4
+        _need(buf, pos, 2 * n, "dict entry count")      # >=2 bytes each
         d = {}
         for _ in range(n):
             k, pos = _unpack_from(buf, pos)
@@ -316,26 +348,39 @@ def _unpack_from(buf: memoryview, pos: int):
     if tag == b"a":
         n = _U32.unpack_from(buf, pos)[0]
         pos += 4
+        _need(buf, pos, n, "dtype string length")
         dtype = np.dtype(buf[pos:pos + n].tobytes().decode())
         pos += n
         ndim = _U32.unpack_from(buf, pos)[0]
         pos += 4
+        _need(buf, pos, 8 * ndim, "array ndim")
         shape = tuple(_U64.unpack_from(buf, pos + 8 * i)[0]
                       for i in range(ndim))
         pos += 8 * ndim
         nbytes = _U64.unpack_from(buf, pos)[0]
         pos += 8
+        _need(buf, pos, nbytes, "array byte length")
         arr = np.frombuffer(buf[pos:pos + nbytes].tobytes(),
                             dtype=dtype).reshape(shape)
         return arr, pos + nbytes
-    raise ValueError(f"bad wire tag {tag!r}")
+    raise ProtocolError(f"bad wire tag {tag!r}")
 
 
 def unpack_msg(body: bytes):
-    """Decode one frame body produced by :func:`pack_msg`."""
-    obj, pos = _unpack_from(memoryview(body), 0)
+    """Decode one frame body produced by :func:`pack_msg`.
+
+    Any malformation — truncated length fields, bad tags, dtype/shape
+    garbage, short struct reads — surfaces as :class:`ProtocolError`,
+    never a MemoryError, an over-allocation, or a silent short read."""
+    try:
+        obj, pos = _unpack_from(memoryview(body), 0)
+    except ProtocolError:
+        raise
+    except (struct.error, ValueError, TypeError, IndexError,
+            OverflowError, UnicodeDecodeError) as e:
+        raise ProtocolError(f"malformed wire frame: {e}") from e
     if pos != len(body):
-        raise ValueError("trailing bytes in wire frame")
+        raise ProtocolError("trailing bytes in wire frame")
     return obj
 
 
@@ -475,7 +520,15 @@ class SockChannel:
     def _frame_len(self) -> Optional[int]:
         if len(self._buf) < 8:
             return None
-        return _U64.unpack_from(self._buf, 0)[0] & (_FRAME_COMPRESSED - 1)
+        n = _U64.unpack_from(self._buf, 0)[0] & (_FRAME_COMPRESSED - 1)
+        if n > MAX_FRAME_BYTES:
+            # hostile/corrupt prefix: fail as soon as the 8 prefix bytes
+            # arrive — never buffer toward a multi-exabyte claim
+            self._sever()
+            raise ProtocolError(
+                f"frame length prefix {n} exceeds MAX_FRAME_BYTES "
+                f"{MAX_FRAME_BYTES}: hostile or desynchronized stream")
+        return n
 
     def _has_frame(self) -> bool:
         n = self._frame_len()
@@ -522,9 +575,36 @@ class SockChannel:
         del self._buf[:8 + n]
         self.wire_bytes_rcvd += n + 8
         if compressed:
-            body = zlib.decompress(body)
+            body = self._inflate(body)
         self.raw_bytes_rcvd += len(body)
-        return unpack_msg(body)
+        try:
+            return unpack_msg(body)
+        except ProtocolError:
+            self._sever()               # stream desynchronized for good
+            raise
+
+    def _inflate(self, body: bytes) -> bytes:
+        """Bounded inflate: a tiny deflate stream can claim gigabytes
+        (zlib bomb), so inflation is capped at MAX_FRAME_BYTES and any
+        excess, trailing garbage, or zlib error severs the channel."""
+        try:
+            do = zlib.decompressobj()
+            out = do.decompress(body, MAX_FRAME_BYTES + 1)
+            if len(out) > MAX_FRAME_BYTES:
+                raise ProtocolError(
+                    f"compressed frame inflates past MAX_FRAME_BYTES "
+                    f"{MAX_FRAME_BYTES}: compression bomb")
+            if not do.eof or do.unconsumed_tail or do.unused_data:
+                raise ProtocolError(
+                    "compressed frame body is truncated or carries "
+                    "trailing garbage")
+            return out
+        except ProtocolError:
+            self._sever()
+            raise
+        except zlib.error as e:
+            self._sever()
+            raise ProtocolError(f"compressed frame is corrupt: {e}") from e
 
     def close(self):
         self._sever()
@@ -1309,8 +1389,24 @@ class WriterSession:
         while True:
             try:
                 msg = chan.recv()
-            except (EOFError, OSError):
+            except (EOFError, OSError, ProtocolError):
                 return "parked"         # coordinator gone: await adoption
+            # Runtime spec conformance BEFORE dispatch: a frame that is
+            # not well-formed for the serving state (unknown kind, bad
+            # arity, wrong field types, handshake frame mid-session) is
+            # never executed — the shard poisons with a clean error
+            # reply instead of an IndexError killing this thread.
+            why = _spec_violation(msg, state="serving")
+            if why is not None:
+                why = f"protocol violation: {why}"
+                with self.lock:
+                    if self.err is None:
+                        self.err = why
+                try:
+                    chan.send(("error", -1, why))
+                except (BrokenPipeError, OSError):
+                    return "parked"
+                continue
             try:
                 with self.lock:
                     if self.gen != gen:
@@ -1330,6 +1426,17 @@ class WriterSession:
                     return "closed"
             except (BrokenPipeError, OSError):
                 return "parked"         # coordinator gone mid-reply
+            except BaseException as e:
+                # spec-shaped but semantically hostile payload (e.g. a
+                # scalar where a range list belongs): poison, never die
+                why = f"protocol violation: {type(e).__name__}: {e}"
+                with self.lock:
+                    if self.err is None:
+                        self.err = why
+                try:
+                    chan.send(("error", -1, why))
+                except (BrokenPipeError, OSError):
+                    return "parked"
 
     def _handle(self, msg):         # holds: lock
         """Execute one command under ``self.lock``; returns (reply, done).
@@ -1866,6 +1973,8 @@ class RemoteEndpoint(ShardEndpoint):
             try:
                 while self._chan is not None and self._chan.poll(0):
                     self._dispatch_reply(self._chan.recv())
+            except ProtocolError as e:
+                self._latch(f"protocol violation: {e}")
             except (EOFError, OSError):
                 self._latch("died")
 
@@ -1898,6 +2007,9 @@ class RemoteEndpoint(ShardEndpoint):
                                 return msg
                         self._latch("died")
                         return None
+                except ProtocolError as e:
+                    self._latch(f"protocol violation: {e}")
+                    return None
                 except (EOFError, OSError):
                     self._latch("died")
                     return None
@@ -2463,6 +2575,9 @@ class SocketEndpoint(RemoteEndpoint):
             try:
                 while self._chan.poll(0):
                     self._dispatch_reply(self._chan.recv())
+            except ProtocolError as e:
+                self._latch(f"protocol violation: {e}")
+                return
             except (EOFError, OSError):
                 self._latch("connection lost (heartbeat)")
                 return

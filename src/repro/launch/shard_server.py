@@ -66,9 +66,10 @@ import socket
 import threading
 from typing import Dict, Optional
 
+from repro.analysis.protocol.spec import violation as _spec_violation
 from repro.core.checkpoint import EmbShardSpec
-from repro.core.transport import (SockChannel, WriterSession,
-                                  verify_shm_probe)
+from repro.core.transport import (ProtocolError, SockChannel,
+                                  WriterSession, verify_shm_probe)
 
 
 class SessionRegistry:
@@ -135,9 +136,10 @@ def _serve_attach(chan: SockChannel, registry: SessionRegistry, msg):
         chan.send(("no-writer",))
         try:
             follow = chan.recv()
-        except (EOFError, OSError):
+        except (EOFError, OSError, ProtocolError):
             return
-        if follow[0] == "spawn":
+        if _spec_violation(follow, state="attaching") is None \
+                and follow[0] == "spawn":
             _serve_spawn(chan, registry, follow)
         return
     with session.lock:
@@ -149,8 +151,10 @@ def _serve_attach(chan: SockChannel, registry: SessionRegistry, msg):
     chan.send(("attach-ok", wm, err))
     try:
         rec = chan.recv()
-    except (EOFError, OSError):
+    except (EOFError, OSError, ProtocolError):
         return                          # adopter vanished mid-handshake
+    if _spec_violation(rec, state="attaching") is not None:
+        return                          # hostile follow-up: drop, stay parked
     if rec[0] not in ("reconcile", "rebuild") or rec[1] != epoch:
         return
     with session.lock:
@@ -217,6 +221,8 @@ def _serve_virtual(vchan: _ServerVirtChan, registry: SessionRegistry):
         msg = vchan.recv()
     except EOFError:
         return
+    if _spec_violation(msg, state="negotiated") is not None:
+        return      # hostile opener: this shard never gets a session
     if msg[0] == "spawn":
         _serve_spawn(vchan, registry, msg)
     elif msg[0] == "attach":
@@ -235,6 +241,11 @@ def _serve_mux(chan: SockChannel, registry: SessionRegistry):
             msg = chan.recv()
             if not (isinstance(msg, tuple) and msg and msg[0] == "mx"):
                 continue                    # unknown envelope: drop
+            if len(msg) != 3 or not isinstance(msg[1], int):
+                # torn mx envelope: the whole connection is suspect —
+                # sever it, parking exactly the co-resident shards
+                raise ProtocolError(
+                    f"malformed mx envelope (arity {len(msg)})")
             shard, inner = msg[1], msg[2]
             vc = vchans.get(shard)
             if vc is None:
@@ -265,12 +276,19 @@ def _handle_conn(sock: socket.socket, registry: SessionRegistry):
     chan = SockChannel(sock)
     try:
         msg = chan.recv()
-    except (EOFError, OSError):
+    except (EOFError, OSError, ProtocolError):
+        chan.close()
+        return
+    if _spec_violation(msg, state="start") is not None:
+        # a frame that is not a legal opener (garbage bytes, session
+        # command without a handshake): drop the connection before any
+        # session state exists to damage
         chan.close()
         return
     try:
         if msg[0] == "hello":
-            opts = msg[2] if len(msg) > 2 and msg[2] else {}
+            opts = msg[2] if len(msg) > 2 and isinstance(msg[2], dict) \
+                else {}
             # shm handoff: prove we share the coordinator's machine by
             # attaching its probe segment and matching the nonce
             shm_ok = verify_shm_probe(opts.get("shm"))
@@ -284,12 +302,19 @@ def _handle_conn(sock: socket.socket, registry: SessionRegistry):
                 return
             try:
                 msg = chan.recv()
-            except (EOFError, OSError):
+            except (EOFError, OSError, ProtocolError):
+                return
+            if _spec_violation(msg, state="negotiated") is not None:
                 return
         if msg[0] == "spawn":
             _serve_spawn(chan, registry, msg)
         elif msg[0] == "attach":
             _serve_attach(chan, registry, msg)
+    # lint: allow[exception-hygiene] hostile handshake payloads (e.g.
+    # codec_level="x") must drop the connection, not kill the accept
+    # thread; sessions poison themselves inside serve()
+    except (ProtocolError, ValueError, TypeError):
+        pass
     finally:
         chan.close()
 

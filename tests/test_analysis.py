@@ -12,7 +12,7 @@ import pytest
 from repro.analysis import run_analysis
 from repro.analysis.__main__ import main as cli_main
 from repro.analysis.lockorder import (LockOrderError, LockOrderSanitizer,
-                                      _TrackedLock)
+                                      _TrackedCondition, _TrackedLock)
 
 # --------------------------------------------------------------- corpus ----
 # rule -> list of {relpath: source} trees that MUST produce >=1 finding
@@ -89,16 +89,30 @@ BAD = {
             "        kind = msg[0]\n"
             "        if kind == 'drain':\n"
             "            return 1\n")},
-        {"core/t.py": (            # constructed but never dispatched
+    ],
+    "protocol-conformance": [
+        {"core/t.py": (            # constructed kind unknown to the spec
             "class FooEndpoint:\n"
             "    def flush(self):\n"
             "        self._send(('flush', self.epoch))\n")},
-        {"core/t.py": (            # dispatched but never constructed
+        {"core/t.py": (            # dispatched kind unknown to the spec
             "class BarSession:\n"
             "    def _handle(self, msg):\n"
             "        kind = msg[0]\n"
             "        if kind == 'legacy':\n"
             "            return 1\n")},
+        {"core/t.py": (            # arity outside the spec range
+            "class FooEndpoint:\n"
+            "    def drain(self, token):\n"
+            "        self._send(('drain', self.epoch, token, token))\n")},
+        {"core/t.py": (            # a worker reply built client-side
+            "class FooEndpoint:\n"
+            "    def fake_ack(self, seq):\n"
+            "        self._send(('ack', seq, {}))\n")},
+        {"core/t.py": (            # epoch threaded through the wrong slot
+            "class FooEndpoint:\n"
+            "    def drain(self, token):\n"
+            "        self._send(('drain', token, self.epoch))\n")},
     ],
     "exception-hygiene": [
         {"core/a.py": (
@@ -168,6 +182,17 @@ GOOD = {
         "        kind = msg[0]\n"
         "        if kind in ('drain', 'spawn'):\n"
         "            return 1\n")},
+    "protocol-conformance": {"core/t.py": (
+        "class FooEndpoint:\n"
+        "    def drain(self, token):\n"
+        "        self._send(('drain', self.epoch, token))\n"
+        "    def ping(self, token):\n"
+        "        self._send(('ping', self.epoch, token))\n"
+        "class BarSession:\n"
+        "    def _handle(self, msg):\n"
+        "        kind = msg[0]\n"
+        "        if kind in ('drain', 'ping'):\n"
+        "            return ('pong', msg[2])\n")},
     "exception-hygiene": {"core/a.py": (
         "def fence(self):\n"
         "    try:\n"
@@ -283,7 +308,8 @@ def test_cli_clean_tree_json_and_list_rules(tmp_path, capsys):
     assert cli_main(["--list-rules"]) == 0
     out = capsys.readouterr().out
     for rule in ("durability-ordering", "time-source", "lock-discipline",
-                 "epoch-threading", "exception-hygiene"):
+                 "epoch-threading", "exception-hygiene",
+                 "protocol-conformance", "wire-doc-drift"):
         assert rule in out
 
 
@@ -385,3 +411,74 @@ def test_lockorder_install_wraps_repro_constructions_only():
     finally:
         san.uninstall()
     assert not isinstance(threading.Lock(), _TrackedLock)
+
+
+def test_lockorder_condition_wait_reacquire_records_abba():
+    """wait() silently releases and reacquires its lock: a thread that
+    still holds another lock across the wait records a fresh
+    held-lock -> condition-lock edge on wakeup.  With the condition
+    lock also ordered *before* that lock on entry, one thread is enough
+    to close the cycle — the hazard the plain lock proxy never saw."""
+    san = LockOrderSanitizer(package=None)
+    cv = san.wrap_condition(None, "cv:1")
+    a = san.wrap(threading.Lock(), "a:1")
+
+    def waiter():
+        with cv:                        # cv first ...
+            with a:                     # ... records cv -> a
+                cv.wait(timeout=0.05)   # timeout reacquire: a -> cv
+
+    _in_thread(waiter)
+    assert ("cv:1", "a:1") in san.edges()
+    assert ("a:1", "cv:1") in san.edges()
+    assert san.find_cycle() is not None
+    with pytest.raises(LockOrderError):
+        san.assert_acyclic()
+
+
+def test_lockorder_condition_wait_notify_roundtrip_is_clean():
+    """A plain producer/consumer handoff through a tracked condition
+    works and records no ordering edges: during wait the lock is off
+    the held-stack (the notifier can take it), and no other lock is
+    held at any acquire."""
+    san = LockOrderSanitizer(package=None)
+    cv = san.wrap_condition(None, "cv:1")
+    ready = threading.Event()
+    woke = []
+
+    def waiter():
+        with cv:
+            ready.set()
+            woke.append(cv.wait(timeout=5))
+
+    t = threading.Thread(target=waiter)
+    t.start()
+    assert ready.wait(5)
+    with cv:                    # acquirable only because wait released it
+        cv.notify_all()
+    t.join(5)
+    assert woke == [True]
+    assert san.edges() == {}
+    assert san.find_cycle() is None
+
+
+def test_lockorder_install_wraps_repro_condition():
+    """install() also patches threading.Condition: repro-source
+    constructions (the mux per-shard inbox) come back tracked and still
+    move frames end to end."""
+    san = LockOrderSanitizer()          # package="repro"
+    san.install()
+    try:
+        from repro.core.transport import _MuxChan
+        chan = _MuxChan(None, 0)
+        assert isinstance(chan._cv, _TrackedCondition)
+        assert "transport.py" in chan._cv.site
+        # the tracked condition still synchronizes deliver/recv
+        chan._deliver(("ack", 7, {}))
+        assert chan.poll(1.0) is True
+        assert chan.recv() == ("ack", 7, {})
+        # a Condition constructed from this (non-repro) file stays raw
+        assert not isinstance(threading.Condition(), _TrackedCondition)
+    finally:
+        san.uninstall()
+    assert not isinstance(threading.Condition(), _TrackedCondition)

@@ -1,0 +1,202 @@
+"""Spec-derived fuzzing of a live shard_server, plus malformed-frame
+demux granularity for the multiplexed transport.
+
+The contract under attack is *poison-not-corrupt* (docs/analysis.md):
+hostile bytes on a writer connection may cost the shards riding that
+connection — an ``error`` reply, a severed channel — but may never
+touch what is already stamped on disk, never widen the blast radius
+past the connection that carried them, and never kill the server.
+
+Marked ``crash``: runs in the crash-injection CI matrix as the
+``protocol-fuzz`` leg (``-m crash -k protocol``).
+"""
+import hashlib
+import os
+import time
+
+import numpy as np
+import pytest
+
+from repro.analysis.protocol.fuzz import run_fuzz
+from repro.core import (EmbShardSpec, ShardedCheckpointWriter,
+                        ShardSaveError)
+
+pytestmark = pytest.mark.crash
+
+SIZES = (4_000, 1_000)
+DIM = 8
+
+
+def _make_state(seed=0):
+    rng = np.random.default_rng(seed)
+    tables = [rng.normal(size=(n, DIM)).astype(np.float32) for n in SIZES]
+    accs = [np.zeros(n, np.float32) for n in SIZES]
+    return tables, accs
+
+
+def _snapshot(root):
+    out = {}
+    for dirpath, _, files in os.walk(str(root)):
+        for fn in files:
+            p = os.path.join(dirpath, fn)
+            with open(p, "rb") as f:
+                digest = hashlib.sha256(f.read()).hexdigest()
+            out[os.path.relpath(p, str(root))] = digest
+    return out
+
+
+def _await_poison(fleet, shard, deadline_s=15.0):
+    deadline = time.monotonic() + deadline_s
+    while time.monotonic() < deadline:
+        fleet.check_health()
+        if shard in fleet.failed:
+            return
+        time.sleep(0.05)
+    raise AssertionError(f"shard {shard} never poisoned")
+
+
+# ------------------------------------------------------------- fuzzer -----
+
+
+def test_protocol_fuzz_live_server_500_frames(tmp_path):
+    """The acceptance bar: >= 500 spec-derived malformed frames at a
+    live shard_server holding a stamped, parked fleet.  run_fuzz
+    asserts the run directory stays byte-identical, the loaded image
+    matches the pre-attack oracle, and the server still answers a
+    fresh hello; here we assert it actually sent the volume and
+    exercised every attack category."""
+    stats = run_fuzz(frames=500, seed=0, root=str(tmp_path))
+    assert stats["ok"]
+    assert stats["frames"] >= 500
+    # every attack category fired at this volume
+    assert len(stats["categories"]) == 10
+    # stale-epoch attacks reached real sessions and were fenced, not
+    # executed: the server answered with 'stale' frames
+    assert stats["replies"].get("stale", 0) > 0
+    assert stats["disk_files"] > 0
+
+
+def test_protocol_fuzz_other_seed(tmp_path):
+    """A different PRNG seed walks a different malformed-frame path to
+    the same verdict — the defense is not tuned to one byte stream."""
+    stats = run_fuzz(frames=150, seed=20260808, root=str(tmp_path))
+    assert stats["ok"] and stats["frames"] >= 150
+
+
+# ------------------------------------- malformed mux inner-frame demux -----
+
+
+def _mux_fleet(tables, accs, spec, tmp_path):
+    return ShardedCheckpointWriter(
+        tables, accs, spec, directory=str(tmp_path), backend="socket",
+        delta_saves=False, drain_timeout=15.0,
+        transport_options={"mux_group": 2})
+
+
+def test_protocol_mux_junk_inner_poisons_only_target_shard(tmp_path):
+    """A well-formed ("mx", shard, inner) envelope whose *inner* frame
+    is garbage poisons exactly the addressed shard's session: the
+    co-resident shard on the same connection keeps stamping, and disk
+    stays byte-frozen until the next legitimate cycle."""
+    tables, accs = _make_state()
+    spec = EmbShardSpec(SIZES, 4)
+    fleet = _mux_fleet(tables, accs, spec, tmp_path)
+    assert fleet.procs[0].pid == fleet.procs[1].pid    # group {0, 1}
+    v1_t = [t + 1 for t in tables]
+    v1_a = [a + 1 for a in accs]
+    fleet.save_full(v1_t, v1_a, step=1)
+    fleet.fence()                                      # v1 stamped
+    frozen = _snapshot(tmp_path)
+
+    # straight onto group {0,1}'s shared socket, past _MuxChan.send
+    raw_chan = fleet.procs[0]._chan._conn._chan
+    raw_chan.send(("mx", 0, "not-a-frame"))
+    _await_poison(fleet, 0)
+    assert 1 not in fleet.failed and 2 not in fleet.failed \
+        and 3 not in fleet.failed
+    # nothing reached disk: the junk died in the serve loop's validator
+    assert _snapshot(tmp_path) == frozen
+
+    v2_t = [t + 2 for t in tables]
+    v2_a = [a + 2 for a in accs]
+    fleet.save_full(v2_t, v2_a, step=2)
+    with pytest.raises(ShardSaveError) as ei:
+        fleet.fence()                                  # v2: shards 1..3
+    assert sorted(ei.value.shard_errors) == [0]
+    fleet.close()
+
+    lt, la, _ = ShardedCheckpointWriter.load_latest(
+        str(tmp_path), tables, accs, spec).restore_all()
+    for t in range(len(SIZES)):
+        for j, v in ((0, 1), (1, 2), (2, 2), (3, 2)):
+            lo, hi = spec.shard_range(t, j)
+            np.testing.assert_array_equal(lt[t][lo:hi],
+                                          (tables[t] + v)[lo:hi])
+            np.testing.assert_array_equal(la[t][lo:hi],
+                                          (accs[t] + v)[lo:hi])
+
+
+def test_protocol_mux_malformed_envelope_poisons_whole_group(tmp_path):
+    """A malformed mux *envelope* (wrong arity / non-int shard) cannot
+    be attributed to any one shard, so the server drops the whole
+    connection: exactly the co-resident group poisons, the other group
+    stamps on, and recovery lands each side on its own last stamp."""
+    tables, accs = _make_state()
+    spec = EmbShardSpec(SIZES, 4)
+    fleet = _mux_fleet(tables, accs, spec, tmp_path)
+    v1_t = [t + 1 for t in tables]
+    v1_a = [a + 1 for a in accs]
+    fleet.save_full(v1_t, v1_a, step=1)
+    fleet.fence()
+    frozen = _snapshot(tmp_path)
+
+    raw_chan = fleet.procs[0]._chan._conn._chan
+    raw_chan.send(("mx", "zero", ("ping", 1, "t")))    # shard not an int
+    _await_poison(fleet, 0)
+    _await_poison(fleet, 1)
+    assert 2 not in fleet.failed and 3 not in fleet.failed
+    assert _snapshot(tmp_path) == frozen
+
+    v2_t = [t + 2 for t in tables]
+    v2_a = [a + 2 for a in accs]
+    fleet.save_full(v2_t, v2_a, step=2)
+    with pytest.raises(ShardSaveError) as ei:
+        fleet.fence()
+    assert sorted(ei.value.shard_errors) == [0, 1]
+    fleet.close()
+
+    lt, _, _ = ShardedCheckpointWriter.load_latest(
+        str(tmp_path), tables, accs, spec).restore_all()
+    for t in range(len(SIZES)):
+        for j, v in ((0, 1), (1, 1), (2, 2), (3, 2)):
+            lo, hi = spec.shard_range(t, j)
+            np.testing.assert_array_equal(lt[t][lo:hi],
+                                          (tables[t] + v)[lo:hi])
+
+
+def test_protocol_mux_truncated_raw_bytes_sever_cleanly(tmp_path):
+    """Raw garbage bytes with a lying length prefix on a live mux
+    connection sever it without corrupting the stamp — the transport's
+    framing guard, exercised end to end instead of unit-level."""
+    import struct
+    tables, accs = _make_state()
+    spec = EmbShardSpec(SIZES, 2)
+    fleet = _mux_fleet(tables, accs, spec, tmp_path)
+    fleet.save_full([t + 1 for t in tables], [a + 1 for a in accs],
+                    step=1)
+    fleet.fence()
+    frozen = _snapshot(tmp_path)
+
+    sock = fleet.procs[0]._chan._conn._chan._sock
+    sock.sendall(struct.pack(">Q", 64) + b"\x93garbage")  # then silence
+    # the stream is now desynchronized; the server's next decode fails
+    # and the whole group (both shards here) sees the connection die
+    _await_poison(fleet, 0)
+    _await_poison(fleet, 1)
+    assert _snapshot(tmp_path) == frozen
+    fleet.close()
+
+    lt, _, _ = ShardedCheckpointWriter.load_latest(
+        str(tmp_path), tables, accs, spec).restore_all()
+    for t in range(len(SIZES)):
+        np.testing.assert_array_equal(lt[t], tables[t] + 1)

@@ -1,0 +1,289 @@
+"""Tests for the protocol-as-spec toolchain (docs/analysis.md):
+
+* the machine-readable wire spec (``repro.analysis.protocol.spec``) —
+  structural coherence, frame validation, state legality;
+* the ``protocol-conformance`` rule — every live frame kind is seen
+  constructed and dispatched on both sides, and a spec kind with no
+  implementation fails analysis;
+* the ``wire-doc-drift`` rule and the ``--table`` / ``--write-table``
+  generator round-trip;
+* the explicit-state model checker — baseline clean, every seeded
+  mutant caught with a printable counterexample trace.
+
+Everything here is stdlib-only (no jax/numpy): it must run in the
+``protocol`` CI job's environment too.
+"""
+import pytest
+
+from repro.analysis import run_analysis
+from repro.analysis.core import Source, default_root, iter_py_files
+from repro.analysis.protocol import model
+from repro.analysis.protocol import spec as wire
+from repro.analysis.protocol.__main__ import main as proto_main
+from repro.analysis.rules.protocol import (CLIENT, SERVER,
+                                           ProtocolConformanceChecker)
+
+# ------------------------------------------------------------- the spec ----
+
+
+def test_spec_tables_are_coherent():
+    """Field/type/arity tables agree for every declared frame."""
+    assert wire.FRAMES, "spec is empty"
+    for (kind, direction), f in wire.FRAMES.items():
+        assert f.kind == kind and f.direction == direction
+        assert direction in (wire.C2W, wire.W2C, wire.BOTH)
+        assert len(f.fields) == len(f.types) == f.max_arity
+        assert 1 <= f.min_arity <= f.max_arity
+        assert f.fields[0] == "kind" and f.types[0] == "str"
+        assert f.states and set(f.states) <= set(wire.STATES)
+        if f.epoch_slot is not None:
+            assert f.epoch_slot < f.max_arity
+            assert "epoch" in f.fields[f.epoch_slot]
+
+
+def test_violation_accepts_well_formed_frames():
+    assert wire.violation(("drain", 3, "tok")) is None
+    assert wire.violation(("ping", 0, None)) is None
+    assert wire.violation(("ack", 7, {}), direction=wire.W2C) is None
+    # mx is an envelope: legal in both directions
+    assert wire.violation(("mx", 0, ("ping", 1, "t"))) is None
+    assert wire.violation(("mx", 0, None), direction=wire.W2C) is None
+    # parity op selects the effective arity
+    full = ("parity", 1, 2, 3, "full", 0, None, None)
+    delta = ("parity", 1, 2, 3, "delta", 0, 4, [0], None, None)
+    assert wire.violation(full) is None
+    assert wire.violation(delta) is None
+    assert wire.validate_frame(("close", 5))
+
+
+def test_violation_rejects_malformed_frames():
+    assert "not tuple" in wire.violation(["drain", 3, "tok"])
+    assert "empty" in wire.violation(())
+    assert "not str" in wire.violation((7, 1))
+    assert "unknown frame kind" in wire.violation(("warp", 1))
+    # worker->coordinator frame offered as a command
+    assert "not legal in direction" in wire.violation(("ack", 1, {}))
+    assert "arity" in wire.violation(("drain", 3))
+    assert "spec says int" in wire.violation(("drain", "x", "tok"))
+    # bool is not an int on the wire
+    assert "spec says int" in wire.violation(("drain", True, "tok"))
+    assert "neither" in wire.violation(
+        ("parity", 1, 2, 3, "bogus", 0, None, None))
+    assert "arity" in wire.violation(
+        ("parity", 1, 2, 3, "delta", 0, None, None))
+    assert not wire.validate_frame(("drain",))
+
+
+def test_violation_enforces_connection_state():
+    """A structurally perfect frame in the wrong connection state is
+    still a violation — the serve loop poisons instead of executing."""
+    ok = wire.violation
+    assert ok(("drain", 1, "t"), state="serving") is None
+    assert "not legal in connection state" in \
+        ok(("hello", 1, {}), state="serving")
+    assert "not legal in connection state" in \
+        ok(("attach", 5, 0), state="serving")
+    assert ok(("attach", 5, 0), state="start") is None
+    spawn = ("spawn", 0, {"t": 4}, 2, None, 1, 2, 3, True)
+    assert ok(spawn, state="start") is None
+    assert "not legal in connection state" in ok(spawn, state="serving")
+    assert ok(("reconcile", 1, "/d", None, 1, 2, 3),
+              state="attaching") is None
+    assert "not legal" in ok(("reconcile", 1, "/d", None, 1, 2, 3),
+                             state="serving")
+
+
+def test_frames_for_direction_filter():
+    # "image" is the one kind declared in both directions
+    assert len(wire.frames_for("image")) == 2
+    assert [f.direction for f in wire.frames_for("image", wire.C2W)] \
+        == [wire.C2W]
+    # BOTH envelopes match either direction filter
+    assert wire.frames_for("mx", wire.C2W)
+    assert wire.frames_for("mx", wire.W2C)
+    assert wire.frames_for("nope") == []
+
+
+# ----------------------------------------------------- conformance rule ----
+
+
+def _run_conformance_on_repo():
+    root = default_root()
+    chk = ProtocolConformanceChecker()
+    sources, findings = [], []
+    for path in iter_py_files(root):
+        src = Source(root, path)
+        sources.append(src)
+        findings.extend(chk.check(src))
+    findings.extend(chk.finalize(sources))
+    return chk, findings
+
+
+def test_conformance_covers_every_kind_on_both_sides():
+    """The acceptance bar: every spec frame kind is seen constructed on
+    its sending side AND dispatched on its receiving side in the live
+    tree — the rule is not vacuously green."""
+    chk, findings = _run_conformance_on_repo()
+    assert findings == [], "\n".join(f.render() for f in findings)
+    for (kind, direction) in wire.FRAMES:
+        if direction in (wire.C2W, wire.BOTH):
+            assert kind in chk.constructed[CLIENT], \
+                f"{kind!r} never constructed client-side"
+            assert kind in chk.dispatched[SERVER], \
+                f"{kind!r} never dispatched server-side"
+        if direction in (wire.W2C, wire.BOTH):
+            assert kind in chk.constructed[SERVER], \
+                f"{kind!r} never constructed server-side"
+            assert kind in chk.dispatched[CLIENT], \
+                f"{kind!r} never dispatched client-side"
+
+
+def test_phantom_spec_kind_fails_analysis(monkeypatch):
+    """Declaring a frame in the spec that neither side implements must
+    fail ``python -m repro.analysis`` (completeness half)."""
+    phantom = wire._f("phantom-op", wire.C2W, ("kind", "epoch"),
+                      ("str", "int"), ("serving",), epoch_slot=1)
+    monkeypatch.setitem(wire.FRAMES, ("phantom-op", wire.C2W), phantom)
+    monkeypatch.setattr(wire, "KINDS", wire.KINDS | {"phantom-op"})
+    report = run_analysis(rules=["protocol-conformance"])
+    msgs = [f.message for f in report.unsuppressed]
+    assert any("phantom-op" in m and "never constructed" in m
+               for m in msgs)
+    assert any("phantom-op" in m and "never dispatched" in m
+               for m in msgs)
+    assert not report.ok
+
+
+def test_respecified_arity_fails_analysis(monkeypatch):
+    """Resizing a frame in the spec without touching the implementation
+    flags every live construction site of that kind."""
+    fat_drain = wire._f("drain", wire.C2W,
+                        ("kind", "epoch", "token", "extra"),
+                        ("str", "int", "any", "any"), ("serving",),
+                        epoch_slot=1, section="fence")
+    monkeypatch.setitem(wire.FRAMES, ("drain", wire.C2W), fat_drain)
+    report = run_analysis(rules=["protocol-conformance"])
+    assert any("'drain'" in f.message and "arity" in f.message
+               for f in report.unsuppressed)
+    assert not report.ok
+
+
+# -------------------------------------------------------- doc drift rule ---
+
+
+def _spec_tree(tmp_path, doc_text):
+    """A scan tree whose spec abspath resolves docs/ under tmp_path."""
+    pkg = tmp_path / "src" / "repro" / "analysis" / "protocol"
+    pkg.mkdir(parents=True)
+    (pkg / "spec.py").write_text("# stand-in for the wire spec\n")
+    if doc_text is not None:
+        (tmp_path / "docs").mkdir()
+        (tmp_path / "docs" / "recovery.md").write_text(doc_text)
+    return str(tmp_path / "src")
+
+
+def test_doc_drift_missing_doc(tmp_path):
+    root = _spec_tree(tmp_path, None)
+    report = run_analysis(root=root, rules=["wire-doc-drift"])
+    assert any("not found" in f.message for f in report.unsuppressed)
+
+
+def test_doc_drift_missing_markers(tmp_path):
+    root = _spec_tree(tmp_path, "# recovery\n\nno table here\n")
+    report = run_analysis(root=root, rules=["wire-doc-drift"])
+    assert any("missing" in f.message for f in report.unsuppressed)
+
+
+def test_doc_drift_stale_table(tmp_path):
+    root = _spec_tree(
+        tmp_path,
+        f"# recovery\n{wire.WIRE_TABLE_BEGIN}\nstale rows\n"
+        f"{wire.WIRE_TABLE_END}\n")
+    report = run_analysis(root=root, rules=["wire-doc-drift"])
+    assert any("disagrees" in f.message for f in report.unsuppressed)
+
+
+def test_doc_drift_exact_table_is_clean(tmp_path):
+    root = _spec_tree(
+        tmp_path,
+        f"# recovery\n{wire.WIRE_TABLE_BEGIN}\n"
+        f"{wire.render_wire_table()}{wire.WIRE_TABLE_END}\n")
+    report = run_analysis(root=root, rules=["wire-doc-drift"])
+    assert report.ok, "\n".join(f.render() for f in report.unsuppressed)
+
+
+def test_live_docs_match_spec():
+    report = run_analysis(rules=["wire-doc-drift"])
+    assert report.ok, "\n".join(f.render() for f in report.unsuppressed)
+
+
+# -------------------------------------------------- wire-table generator ---
+
+
+def test_cli_table_lists_every_frame(capsys):
+    assert proto_main(["--table"]) == 0
+    out = capsys.readouterr().out
+    assert "`('drain', epoch, token)`" in out
+    for kind, _ in wire.FRAMES:
+        assert f"'{kind}'" in out
+    assert str(wire.MAX_FRAME_BYTES) in out
+
+
+def test_cli_write_table_roundtrip(tmp_path, capsys):
+    doc = tmp_path / "recovery.md"
+    doc.write_text(f"preamble\n{wire.WIRE_TABLE_BEGIN}\nold\n"
+                   f"{wire.WIRE_TABLE_END}\ntail\n")
+    assert proto_main(["--write-table", "--doc", str(doc)]) == 0
+    text = doc.read_text()
+    assert wire.render_wire_table() in text
+    assert text.startswith("preamble\n") and text.endswith("tail\n")
+    capsys.readouterr()
+    # second run is a no-op
+    assert proto_main(["--write-table", "--doc", str(doc)]) == 0
+    assert "already up to date" in capsys.readouterr().out
+    assert doc.read_text() == text
+
+
+def test_cli_write_table_requires_markers(tmp_path):
+    doc = tmp_path / "recovery.md"
+    doc.write_text("no markers\n")
+    assert proto_main(["--write-table", "--doc", str(doc)]) == 2
+
+
+# ---------------------------------------------------------- model checker --
+
+
+def test_model_baseline_holds_all_invariants():
+    res = model.explore(model.FAST)
+    assert res.violation is None
+    assert res.states > 100 and res.transitions > res.states
+
+
+@pytest.mark.parametrize("name", sorted(model.MUTANTS))
+def test_model_catches_seeded_mutant(name):
+    """Each seeded protocol bug must be caught, with a counterexample
+    trace from the initial state to the violation."""
+    res = model.explore(model.FAST, mutant=name)
+    assert res.violation is not None, f"mutant {name} not caught"
+    assert res.trace, "no counterexample trace"
+
+
+def test_model_unknown_mutant_rejected():
+    with pytest.raises(ValueError):
+        model.explore(model.FAST, mutant="nope")
+
+
+def test_model_run_check_green(capsys):
+    assert model.run_check(fast=True) == 0
+    out = capsys.readouterr().out
+    assert "baseline" in out
+    assert "counterexample" in out        # mutant traces are printed
+    assert "NOT CAUGHT" not in out
+
+
+def test_model_cli_single_mutant(capsys):
+    assert proto_main(["--check", "--fast",
+                       "--mutant", "skip-stamp-reread"]) == 0
+    out = capsys.readouterr().out
+    assert "mutant skip-stamp-reread: caught" in out
+    assert "counterexample" in out

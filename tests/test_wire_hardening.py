@@ -1,0 +1,193 @@
+"""Unit tests for the hardened wire codec and socket framing.
+
+Every malformation a hostile or desynchronized peer can put on the
+wire — lying length fields inside a frame, bad tags, trailing bytes,
+multi-exabyte length prefixes, compression bombs, truncated deflate
+streams — must surface as :class:`ProtocolError` (and sever the
+channel), never a MemoryError, an over-allocation, a silent short
+read, or a hung decoder.
+"""
+import socket
+import struct
+import zlib
+
+import numpy as np
+import pytest
+
+from repro.core import EmbShardSpec, ShardedCheckpointWriter
+from repro.core import transport
+from repro.core.transport import (MAX_FRAME_BYTES, ProtocolError,
+                                  SockChannel, pack_msg, unpack_msg)
+
+_U32 = struct.Struct(">I")
+_U64 = struct.Struct(">Q")
+
+
+# ----------------------------------------------------------- unpack_msg ---
+
+
+def test_codec_roundtrip_nested():
+    msg = ("rows", 3, 7, 11, 0, [1, 2, 3],
+           {"k": (True, False, None, 2.5, b"\x00raw")},
+           np.arange(12, dtype=np.float32).reshape(3, 4))
+    out = unpack_msg(pack_msg(msg))
+    assert out[:6] == msg[:6]
+    assert out[6] == msg[6]
+    np.testing.assert_array_equal(out[7], msg[7])
+
+
+def test_codec_rejects_bad_tag():
+    with pytest.raises(ProtocolError, match="bad wire tag"):
+        unpack_msg(b"\xff")
+
+
+def test_codec_rejects_empty_and_truncated_scalar():
+    with pytest.raises(ProtocolError):
+        unpack_msg(b"")
+    with pytest.raises(ProtocolError):        # i64 tag, 2 payload bytes
+        unpack_msg(b"i\x00\x01")
+
+
+def test_codec_rejects_lying_string_length():
+    # "s" + u32 claiming 1000 bytes, only 3 present
+    with pytest.raises(ProtocolError, match="truncated"):
+        unpack_msg(b"s" + _U32.pack(1000) + b"abc")
+
+
+def test_codec_rejects_phantom_collection_count():
+    """A u32 element count near 2**32 must die at the truncation guard,
+    not loop for billions of phantom elements."""
+    for tag in (b"t", b"l"):
+        with pytest.raises(ProtocolError, match="truncated"):
+            unpack_msg(tag + _U32.pack(0xFFFF_FFF0) + b"n" * 8)
+    with pytest.raises(ProtocolError, match="truncated"):
+        unpack_msg(b"d" + _U32.pack(0xFFFF_FFF0) + b"nn")
+
+
+def test_codec_rejects_truncated_array_payload():
+    body = pack_msg(np.arange(16, dtype=np.float64))
+    with pytest.raises(ProtocolError):
+        unpack_msg(body[:-4])
+
+
+def test_codec_rejects_hostile_dtype_and_shape():
+    # dtype string that is not a dtype
+    bad = b"a" + _U32.pack(4) + b"zorp" + _U32.pack(0) + _U64.pack(0)
+    with pytest.raises(ProtocolError):
+        unpack_msg(bad)
+    # ndim claiming more shape words than the frame holds
+    bad = b"a" + _U32.pack(3) + b"<f4" + _U32.pack(1 << 20)
+    with pytest.raises(ProtocolError):
+        unpack_msg(bad)
+
+
+def test_codec_rejects_trailing_garbage():
+    with pytest.raises(ProtocolError, match="trailing"):
+        unpack_msg(pack_msg(("ping", 1, "t")) + b"x")
+
+
+# ------------------------------------------------------- socket framing ---
+
+
+def _chan_pair():
+    a, b = socket.socketpair()
+    return SockChannel(a), b
+
+
+def test_sock_roundtrip_plain_and_compressed():
+    chan, peer = _chan_pair()
+    peer_chan = SockChannel(peer)
+    peer_chan.send(("ack", 1, {"bytes": 10}))
+    assert chan.recv() == ("ack", 1, {"bytes": 10})
+    peer_chan.enable_codec(6, floor=0)
+    big = ("full", 1, 2, 3, b"\x00" * 100_000)   # compressible
+    peer_chan.send(big)
+    assert chan.recv() == big
+    assert peer_chan.wire_bytes_sent < peer_chan.raw_bytes_sent
+    chan.close(), peer_chan.close()
+
+
+def test_sock_prefix_bomb_severs_channel():
+    """A length prefix over MAX_FRAME_BYTES fails the instant the 8
+    prefix bytes arrive — no buffering toward the claimed size — and
+    the channel is severed for good."""
+    chan, peer = _chan_pair()
+    peer.sendall(_U64.pack(MAX_FRAME_BYTES + 1))
+    with pytest.raises(ProtocolError, match="exceeds MAX_FRAME_BYTES"):
+        chan.recv()
+    with pytest.raises((EOFError, ProtocolError)):
+        chan.recv()                     # severed, not resynchronized
+    peer.close()
+
+
+def test_sock_exabyte_prefix_rejected_without_allocation():
+    chan, peer = _chan_pair()
+    peer.sendall(_U64.pack((1 << 40) | (1 << 55)) + b"junk")
+    with pytest.raises(ProtocolError):
+        chan.poll(1.0)
+    peer.close()
+
+
+def test_sock_zlib_bomb_inflation_is_capped(monkeypatch):
+    """A kilobyte deflate stream claiming megabytes inflates at most
+    MAX_FRAME_BYTES + 1 bytes before dying as a ProtocolError."""
+    monkeypatch.setattr(transport, "MAX_FRAME_BYTES", 1 << 16)
+    chan, peer = _chan_pair()
+    bomb = zlib.compress(b"\x00" * (1 << 22))           # 4 MiB claimed
+    assert len(bomb) < (1 << 16)                        # prefix passes
+    peer.sendall(_U64.pack(len(bomb) | transport._FRAME_COMPRESSED)
+                 + bomb)
+    with pytest.raises(ProtocolError, match="bomb"):
+        chan.recv()
+    peer.close()
+
+
+def test_sock_truncated_or_dirty_deflate_rejected():
+    chan, peer = _chan_pair()
+    body = zlib.compress(pack_msg(("pong", "tok"))) + b"xx"
+    peer.sendall(_U64.pack(len(body) | transport._FRAME_COMPRESSED)
+                 + body)
+    with pytest.raises(ProtocolError):
+        chan.recv()
+    chan2, peer2 = _chan_pair()
+    body = zlib.compress(pack_msg(("pong", "tok")))[:-4]
+    peer2.sendall(_U64.pack(len(body) | transport._FRAME_COMPRESSED)
+                  + body)
+    with pytest.raises(ProtocolError):
+        chan2.recv()
+    peer.close(), peer2.close()
+
+
+def test_sock_garbage_body_severs():
+    chan, peer = _chan_pair()
+    peer.sendall(_U64.pack(5) + b"\x93abcd")            # undecodable body
+    with pytest.raises(ProtocolError):
+        chan.recv()
+    peer.close()
+
+
+# -------------------------------------- transports still work end to end --
+
+
+@pytest.mark.parametrize("backend", ["inproc", "process", "socket"])
+def test_hardened_transports_save_and_restore(backend, tmp_path):
+    """The validation added to the codec / serve loop costs legitimate
+    traffic nothing: full save + fence + load on every transport."""
+    sizes = (512, 128)
+    rng = np.random.default_rng(3)
+    tables = [rng.normal(size=(n, 4)).astype(np.float32) for n in sizes]
+    accs = [np.zeros(n, np.float32) for n in sizes]
+    spec = EmbShardSpec(sizes, 2)
+    fleet = ShardedCheckpointWriter(
+        tables, accs, spec, directory=str(tmp_path / backend),
+        backend=backend, delta_saves=False)
+    fleet.save_full([t + 1 for t in tables], [a + 1 for a in accs],
+                    step=1)
+    fleet.fence()
+    assert fleet.check_health() == []
+    fleet.close()
+    lt, la, _ = ShardedCheckpointWriter.load_latest(
+        str(tmp_path / backend), tables, accs, spec).restore_all()
+    for t in range(len(sizes)):
+        np.testing.assert_array_equal(lt[t], tables[t] + 1)
+        np.testing.assert_array_equal(la[t], accs[t] + 1)
